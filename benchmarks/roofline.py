@@ -1,0 +1,69 @@
+"""Consolidate results/dryrun/*.json into the §Roofline table.
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, roofline fraction, and memory footprint.
+Emits CSV rows and (with --md) the markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def load(results_dir=RESULTS):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(emit=print, results_dir=RESULTS):
+    cells = load(results_dir)
+    for c in cells:
+        tag = f"{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c["status"] != "OK":
+            emit(f"roofline/{tag},0,{c['status']}")
+            continue
+        r = c["roofline"]
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline/{tag},{t_dom*1e6:.0f},{r['roofline_fraction']:.4f}")
+    return cells
+
+
+def markdown(results_dir=RESULTS, mesh_filter="16x16"):
+    rows = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+            "bottleneck | useful/HLO | roofline frac | HBM GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in load(results_dir):
+        if c["mesh"] != mesh_filter:
+            continue
+        if c["status"] == "SKIP":
+            rows.append(f"| {c['arch']} | {c['shape']} | - | - | - | "
+                        f"SKIP: {c['reason']} | - | - | - |")
+            continue
+        if c["status"] != "OK":
+            rows.append(f"| {c['arch']} | {c['shape']} | FAIL |||||||")
+            continue
+        r = c["roofline"]
+        peak_gb = c["memory"]["peak_bytes"] / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {min(r['useful_flop_ratio'],99):.3f} | "
+            f"{r['roofline_fraction']:.3f} | {peak_gb:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    if "--md" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--md") + 1] if \
+            len(sys.argv) > sys.argv.index("--md") + 1 else "16x16"
+        print(markdown(mesh_filter=mesh))
+    else:
+        run()

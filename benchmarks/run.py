@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV.  Select subsets:
+  PYTHONPATH=src python -m benchmarks.run [table1] [table2] [fig2]
+                                           [kernel] [roofline]
+(no args = all).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    want = set(sys.argv[1:]) or {"kernel", "table1", "table2", "fig2",
+                                 "roofline"}
+    print("name,us_per_call,derived")
+    if "kernel" in want:
+        from benchmarks.kernel_bench import run as kernel_run
+        kernel_run()
+    if "table1" in want:
+        import os
+        cached = os.path.join("results", "table1.csv")
+        if os.path.exists(cached) and os.path.getsize(cached) > 0 and \
+                "--fresh" not in sys.argv:
+            # the full sweep takes ~1h on 1 CPU core; re-emit the recorded
+            # measurements (rerun with --fresh to re-measure)
+            with open(cached) as f:
+                for line in f:
+                    if line.strip() and not line.startswith("name,"):
+                        print(line.strip())
+        else:
+            from benchmarks.table1_block_sweep import run as t1_run
+            t1_run()
+    if "table2" in want:
+        from benchmarks.table2_accuracy import run as t2_run
+        t2_run()
+    if "fig2" in want:
+        from benchmarks.fig2_block_perf import run as f2_run
+        f2_run()
+    if "roofline" in want:
+        from benchmarks.roofline import run as roof_run
+        roof_run()
+
+
+if __name__ == "__main__":
+    main()

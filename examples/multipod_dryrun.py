@@ -1,0 +1,42 @@
+"""Multi-pod dry-run example: lower+compile one (arch x shape) cell on the
+2x16x16 = 512-chip production mesh and print its roofline terms.
+
+Run:  PYTHONPATH=src python examples/multipod_dryrun.py \
+          [--arch gemma3_4b] [--shape train_4k] [--singlepod]
+(This is a thin wrapper over `python -m repro.launch.dryrun`; the heavy
+lifting, including the XLA_FLAGS device faking, lives there.)
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_4b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--singlepod", action="store_true")
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+           "--shape", args.shape, "--out", "results/dryrun"]
+    if not args.singlepod:
+        cmd.append("--multipod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    subprocess.run(cmd, env=env, cwd=REPO, check=True)
+
+    tag = "pod" if args.singlepod else "multipod"
+    path = os.path.join(REPO, "results", "dryrun",
+                        f"{args.arch.replace('-', '_')}__{args.shape}__{tag}.json")
+    with open(path) as f:
+        cell = json.load(f)
+    print(json.dumps({k: v for k, v in cell.items() if k != "trace"},
+                     indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Fill EXPERIMENTS.md placeholders from measured artifacts.
+
+  <!-- TABLE1 -->    <- results/table1.csv (markdown table)
+  <!-- TABLE2 -->    <- results/table2.csv
+  <!-- ROOFLINE -->  <- results/dryrun/*.json via benchmarks.roofline
+  <!-- CELL_B -->    <- results/perf_cell_b.json (A/B numbers)
+  <!-- CELL_C -->    <- before/after sweep JSONs for chatglm3 train
+
+Usage: PYTHONPATH=src python scripts/fill_experiments.py
+"""
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def table1_md():
+    path = os.path.join(REPO, "results", "table1.csv")
+    if not os.path.exists(path):
+        return "*(results/table1.csv missing — run benchmarks.run table1)*"
+    rows = {}
+    order = []
+    for line in open(path):
+        line = line.strip()
+        if not line or line.startswith("name,"):
+            continue
+        name, us, derived = line.split(",")
+        key = name.split("/")[1]
+        rows[key] = (float(us) / 1e3, float(derived))
+        order.append(key)
+    out = ["| config | ms | ratio vs xla_dense |", "|---|---|---|"]
+    for key in order:
+        ms, r = rows[key]
+        mark = " **<- backend optimum**" if key == "bsr_sq_128x128" else ""
+        out.append(f"| {key} | {ms:.0f} | {r:.3f}{mark} |")
+    return "\n".join(out)
+
+
+def table2_md():
+    path = os.path.join(REPO, "results", "table2.csv")
+    if not os.path.exists(path):
+        # fall back to extracting from the recorded bench output
+        bench = os.path.join(REPO, "bench_output.txt")
+        if os.path.exists(bench):
+            rows = [l.strip() for l in open(bench)
+                    if l.startswith("table2/")]
+            if rows:
+                with open(path, "w") as f:
+                    f.write("\n".join(rows) + "\n")
+    if not os.path.exists(path):
+        return "*(results/table2.csv missing — run benchmarks.run table2)*"
+    out = ["| arm | metric | value |", "|---|---|---|"]
+    for line in open(path):
+        line = line.strip()
+        if not line or line.startswith("name,"):
+            continue
+        name, us, derived = line.split(",")
+        arm, metric = name.split("/")[1].rsplit("_mlm_", 1)
+        out.append(f"| {arm} | mlm_{metric} | {float(derived):.4f} |")
+    return "\n".join(out)
+
+
+def cell_b_md():
+    path = os.path.join(REPO, "results", "perf_cell_b.json")
+    if not os.path.exists(path):
+        return "*(pending)*"
+    d = json.load(open(path))
+    a, b = d["before"], d["after"]
+    return (
+        "Baseline (paper-era FSDP-style inference sharding): "
+        f"t_coll **{a['t_collective_s']:.1f}s**, t_mem {a['t_memory_s']:.1f}s, "
+        f"t_comp {a['t_compute_s']:.1f}s — collective-bound by per-layer "
+        "weight all-gathers over the data axis.\n\n"
+        "Change: TP-only inference params + 2-D (E x f) expert sharding "
+        "(`sharding.py mode=\"inference\"`) — weights never gathered; expert "
+        "partial sums all-reduce instead.\n\n"
+        f"After: t_coll **{b['t_collective_s']:.1f}s** "
+        f"({a['t_collective_s']/max(b['t_collective_s'],1e-9):.1f}x down), "
+        f"t_mem {b['t_memory_s']:.1f}s, t_comp {b['t_compute_s']:.1f}s; "
+        f"bottleneck: {a['bottleneck']} -> {b['bottleneck']}; roofline "
+        f"fraction {a['roofline_fraction']:.3f} -> "
+        f"{b['roofline_fraction']:.3f}. **CONFIRMED** — applied as the "
+        "default for all prefill/decode cells in the final roofline table."
+    )
+
+
+def cell_c_md():
+    bpath = os.path.join(REPO, "results", "perf_cell_c_before.json")
+    apath = os.path.join(REPO, "results", "dryrun",
+                         "chatglm3_6b__train_4k__pod.json")
+    if not (os.path.exists(bpath) and os.path.exists(apath)):
+        return "*(pending)*"
+    a = json.load(open(bpath))["roofline"]
+    b = json.load(open(apath))["roofline"]
+    return (
+        f"Baseline (scan-autodiff flash): t_mem **{a['t_memory_s']:.1f}s** "
+        f"(dominant), t_comp {a['t_compute_s']:.1f}s, t_coll "
+        f"{a['t_collective_s']:.1f}s; useful/HLO {a['useful_flop_ratio']:.3f}."
+        "\n\nChange: flash custom-VJP (§Perf iter 2) + bf16 tiles (iter 3)."
+        f"\n\nAfter: t_mem **{b['t_memory_s']:.1f}s** "
+        f"({a['t_memory_s']/max(b['t_memory_s'],1e-9):.2f}x down), t_comp "
+        f"{b['t_compute_s']:.1f}s, t_coll {b['t_collective_s']:.1f}s; "
+        f"useful/HLO {b['useful_flop_ratio']:.3f}; roofline fraction "
+        f"{a['roofline_fraction']:.4f} -> {b['roofline_fraction']:.4f}. "
+        "Residual gap: XLA-level flash still round-trips score tiles through "
+        "HBM at fusion boundaries — the designed next step is the VMEM-"
+        "resident Pallas flash kernel (TPU-only; not measurable in this "
+        "container)."
+    )
+
+
+def main():
+    from benchmarks.roofline import markdown
+    path = os.path.join(REPO, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = text.replace("<!-- TABLE1 -->", table1_md())
+    text = text.replace("<!-- TABLE2 -->", table2_md())
+    text = text.replace("<!-- ROOFLINE -->", markdown(mesh_filter="16x16"))
+    text = text.replace("<!-- CELL_B -->", cell_b_md())
+    text = text.replace("<!-- CELL_C -->", cell_c_md())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md filled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import SHAPES, LayerKind, ModelConfig, ShapeSpec
+from repro.configs.registry import ARCHS, ASSIGNED, get_config

@@ -1,0 +1,16 @@
+"""Core sparsity library: the paper's contribution as composable JAX modules."""
+from repro.core.bsr import (BSR, bsr_from_mask, bsr_to_dense, dense_to_bsr,
+                            pattern_fingerprint, row_ids_from_indptr)
+from repro.core.pattern_reuse import (PatternRegistry, ReuseStats,
+                                      count_unique_intrablock_patterns,
+                                      pattern_similarity)
+from repro.core.pruner import (apply_masks, cubic_sparsity, init_masks,
+                               oneshot_prune, sparsity_report, update_masks)
+from repro.core.regularizer import (group_penalty, group_prox, l1_prox,
+                                    tree_group_penalty)
+from repro.core.sparsity import (SparsityConfig, actual_sparsity,
+                                 apply_block_mask, block_norms,
+                                 expand_block_mask, prune_to_sparsity,
+                                 topk_block_mask)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,166 @@
+"""Block Sparse Row (BSR) representation, SciPy-compatible, as a JAX pytree.
+
+The paper represents sparse weights as ``data / indices / indptr`` (SciPy BSR)
+inside TVM. We keep the identical layout so tests can cross-check against
+``scipy.sparse.bsr_matrix``, but make it a static-shape pytree so it can flow
+through ``jax.jit`` / ``pjit``:
+
+  * ``data``    -- (nnzb, bh, bw) nonzero block values (zero-padded to a static
+                   block count so recompilation is never pattern-dependent)
+  * ``indices`` -- (nnzb,) int32 block-column index of each stored block
+  * ``indptr``  -- (n_block_rows + 1,) int32, CSR-style row pointers
+
+Padding blocks carry ``data == 0`` and live in the *last* block row (keeping
+row-major sortedness), so every consumer -- reference einsum, gather path and
+the Pallas kernel -- is numerically unaffected by padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BSR:
+    """A 2-D block-sparse matrix of logical shape ``shape``."""
+
+    data: jax.Array      # (nnzb, bh, bw)
+    indices: jax.Array   # (nnzb,) int32
+    indptr: jax.Array    # (n_brows + 1,) int32
+    shape: Tuple[int, int]        # static
+    block_shape: Tuple[int, int]  # static
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.indices, self.indptr), (self.shape, self.block_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, indices, indptr = children
+        shape, block_shape = aux
+        return cls(data, indices, indptr, shape, block_shape)
+
+    # -- derived static properties ------------------------------------------
+    @property
+    def nnzb(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def n_brows(self) -> int:
+        return self.shape[0] // self.block_shape[0]
+
+    @property
+    def n_bcols(self) -> int:
+        return self.shape[1] // self.block_shape[1]
+
+    @property
+    def density(self) -> float:
+        return self.nnzb / max(1, self.n_brows * self.n_bcols)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def block_row_ids(self) -> jax.Array:
+        """(nnzb,) block-row id of every stored block (inverse of indptr)."""
+        return row_ids_from_indptr(self.indptr, self.nnzb)
+
+    def astype(self, dtype) -> "BSR":
+        return BSR(self.data.astype(dtype), self.indices, self.indptr,
+                   self.shape, self.block_shape)
+
+
+def row_ids_from_indptr(indptr: jax.Array, nnzb: int) -> jax.Array:
+    """CSR indptr -> per-entry row ids, statically shaped, jit-safe."""
+    # row_ids[j] = #{r : indptr[r+1] <= j}
+    j = jnp.arange(nnzb)
+    return jnp.sum(j[:, None] >= indptr[None, 1:], axis=1).astype(jnp.int32)
+
+
+def _block_view(dense: np.ndarray, bh: int, bw: int) -> np.ndarray:
+    r, c = dense.shape
+    assert r % bh == 0 and c % bw == 0, (dense.shape, (bh, bw))
+    return dense.reshape(r // bh, bh, c // bw, bw).transpose(0, 2, 1, 3)
+
+
+def block_mask(dense: np.ndarray, block_shape: Tuple[int, int]) -> np.ndarray:
+    """(n_brows, n_bcols) bool mask of blocks containing any nonzero."""
+    blocks = _block_view(np.asarray(dense), *block_shape)
+    return np.any(blocks != 0, axis=(2, 3))
+
+
+def dense_to_bsr(dense, block_shape: Tuple[int, int], nnzb: int | None = None,
+                 dtype=None) -> BSR:
+    """Convert a dense matrix to BSR, padding the block list to ``nnzb``.
+
+    Runs on host (numpy): pattern extraction is a data-dependent-shape
+    operation and belongs outside jit, exactly as TVM performs the BSR
+    conversion at compile/packing time rather than at inference time.
+    """
+    dense = np.asarray(dense)
+    bh, bw = block_shape
+    mask = block_mask(dense, block_shape)
+    rows, cols = np.nonzero(mask)  # row-major sorted: rows ascending
+    real = len(rows)
+    if nnzb is None:
+        nnzb = max(real, 1)
+    if real > nnzb:
+        raise ValueError(f"nnzb={nnzb} < actual nonzero blocks {real}")
+
+    blocks = _block_view(dense, bh, bw)[rows, cols]  # (real, bh, bw)
+    n_brows = dense.shape[0] // bh
+
+    data = np.zeros((nnzb, bh, bw), dtype=dense.dtype)
+    data[:real] = blocks
+    indices = np.zeros((nnzb,), dtype=np.int32)
+    indices[:real] = cols
+    # padding blocks live in the last row, column 0, with zero data
+    counts = np.bincount(rows, minlength=n_brows)
+    counts[-1] += nnzb - real
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+    out_dtype = dtype or dense.dtype
+    if out_dtype == np.float64:  # jax default x64-off
+        out_dtype = np.float32
+    return BSR(jnp.asarray(data, dtype=out_dtype), jnp.asarray(indices),
+               jnp.asarray(indptr), tuple(dense.shape), (bh, bw))
+
+
+def bsr_to_dense(m: BSR) -> jax.Array:
+    """Densify (jit-safe; used by the reference oracle)."""
+    bh, bw = m.block_shape
+    rows = m.block_row_ids()
+    flat_idx = rows * m.n_bcols + m.indices  # (nnzb,)
+    blocks = jnp.zeros((m.n_brows * m.n_bcols, bh, bw), m.data.dtype)
+    # padding blocks are zero-valued, .add keeps them harmless even if they
+    # collide with a real block slot
+    blocks = blocks.at[flat_idx].add(m.data)
+    return (blocks.reshape(m.n_brows, m.n_bcols, bh, bw)
+            .transpose(0, 2, 1, 3).reshape(m.shape))
+
+
+def bsr_from_mask(dense, mask: np.ndarray, block_shape: Tuple[int, int],
+                  nnzb: int | None = None) -> BSR:
+    """Build BSR keeping only blocks where ``mask`` (n_brows, n_bcols) is set."""
+    dense = np.asarray(dense)
+    bh, bw = block_shape
+    keep = np.kron(mask, np.ones((bh, bw), dtype=bool))
+    return dense_to_bsr(np.where(keep, dense, 0), block_shape, nnzb=nnzb)
+
+
+def pattern_fingerprint(m: BSR) -> bytes:
+    """Hashable fingerprint of the sparsity *structure* (not values).
+
+    This is the task-identity key in the TVM-task-scheduler analogue
+    (core/pattern_reuse.py): two layers whose BSR structure matches can reuse
+    one compiled executable.
+    """
+    idx = np.asarray(jax.device_get(m.indices), dtype=np.int32)
+    ptr = np.asarray(jax.device_get(m.indptr), dtype=np.int32)
+    header = np.array([*m.shape, *m.block_shape, m.nnzb], dtype=np.int64)
+    return header.tobytes() + ptr.tobytes() + idx.tobytes()

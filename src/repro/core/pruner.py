@@ -1,0 +1,122 @@
+"""Gradual block-magnitude pruning schedule + mask state.
+
+Training-time driver of the paper's §2.1: ramps block sparsity from 0 to the
+target with the standard cubic schedule, recomputing block masks from current
+magnitudes and re-applying them every step (masked weights stay dead).
+
+State is a pytree of block masks parallel to the (2-D, targeted) params, so it
+checkpoints/reshards exactly like params do.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import (SparsityConfig, apply_block_mask,
+                                 expand_block_mask, topk_block_mask)
+
+
+def _path_name(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _prunable(cfg: SparsityConfig, name: str, leaf) -> bool:
+    """2-D weights and scan-stacked (L, out, in) 3-D weights are prunable."""
+    if leaf.ndim not in (2, 3) or not cfg.applies_to(name):
+        return False
+    bh, bw = cfg.block_shape
+    return leaf.shape[-2] % bh == 0 and leaf.shape[-1] % bw == 0
+
+
+def cubic_sparsity(step, cfg: SparsityConfig):
+    """Zhu & Gupta cubic ramp: s(t) = s_f * (1 - (1 - t_norm)^3), clipped."""
+    span = max(1, cfg.end_step - cfg.start_step)
+    t = jnp.clip((step - cfg.start_step) / span, 0.0, 1.0)
+    return cfg.sparsity * (1.0 - (1.0 - t) ** 3)
+
+
+def _vmap2d(fn, leaf, *rest):
+    """Apply a 2-D-weight function to a 2-D or stacked 3-D leaf."""
+    if leaf.ndim == 2:
+        return fn(leaf, *rest)
+    return jax.vmap(lambda l, *r: fn(l, *r))(leaf, *rest)
+
+
+def init_masks(params, cfg: SparsityConfig) -> Dict:
+    """All-ones block masks for every prunable leaf; None elsewhere.
+    Stacked leaves get per-layer masks (L, nbr, nbc)."""
+    def one(path, leaf):
+        name = _path_name(path)
+        if _prunable(cfg, name, leaf):
+            bh, bw = cfg.block_shape
+            shape = leaf.shape[:-2] + (leaf.shape[-2] // bh,
+                                       leaf.shape[-1] // bw)
+            return jnp.ones(shape, bool)
+        return None
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def update_masks(params, masks, step, cfg: SparsityConfig):
+    """Recompute block masks at the scheduled sparsity for this step."""
+    target = cubic_sparsity(step, cfg)
+
+    def upd_2d(leaf):
+        # topk needs a static k: evaluate schedule on host is not possible
+        # under jit, so we threshold block norms against the target quantile.
+        from repro.core.sparsity import block_norms
+        norms = block_norms(leaf.astype(jnp.float32), cfg.block_shape,
+                            cfg.group_norm_ord)
+        thresh = jnp.quantile(norms.reshape(-1), target)
+        return norms > thresh
+
+    def upd(path, leaf, mask):
+        if mask is None:
+            return None
+        return _vmap2d(upd_2d, leaf)
+
+    return jax.tree_util.tree_map_with_path(
+        upd, params, masks, is_leaf=lambda x: x is None)
+
+
+def apply_masks(params, masks, cfg: SparsityConfig):
+    """Zero out masked blocks (keeps pruned weights dead after optimizer step)."""
+    def app(leaf, mask):
+        if mask is None:
+            return leaf
+        return _vmap2d(lambda l, m: apply_block_mask(l, m, cfg.block_shape),
+                       leaf, mask)
+    return jax.tree_util.tree_map(
+        app, params, masks, is_leaf=lambda x: x is None)
+
+
+def oneshot_prune(params, cfg: SparsityConfig):
+    """One-shot prune to the target ratio. Returns (params, masks)."""
+    def pr(path, leaf):
+        name = _path_name(path)
+        if _prunable(cfg, name, leaf):
+            def p2(l):
+                mask = topk_block_mask(l.astype(jnp.float32), cfg.block_shape,
+                                       cfg.sparsity, cfg.group_norm_ord)
+                return apply_block_mask(l, mask, cfg.block_shape), mask
+            if leaf.ndim == 2:
+                return p2(leaf)
+            return jax.vmap(p2)(leaf)
+        return leaf, None
+
+    pruned = jax.tree_util.tree_map_with_path(lambda p, l: pr(p, l)[0], params)
+    masks = jax.tree_util.tree_map_with_path(lambda p, l: pr(p, l)[1], params)
+    return pruned, masks
+
+
+def sparsity_report(params, cfg: SparsityConfig) -> Dict[str, float]:
+    """Per-target actual block sparsity (for logging / EXPERIMENTS.md)."""
+    from repro.core.sparsity import actual_sparsity
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = _path_name(path)
+        if _prunable(cfg, name, leaf):
+            s = _vmap2d(lambda l: actual_sparsity(l, cfg.block_shape), leaf)
+            out[name] = float(jnp.mean(s))
+    return out

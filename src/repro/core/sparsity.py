@@ -1,0 +1,96 @@
+"""Block-structured sparsity config and mask algebra (paper §2.1).
+
+A ``SparsityConfig`` describes how a 2-D weight is partitioned into B blocks
+(Eq. 3) and what fraction of blocks must go to zero. Masks are computed at
+block granularity from block norms (magnitude criterion) -- the ℓ0-style
+projection used alongside the group-ℓ1 regularizer of core/regularizer.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Structured-sparsity settings for a family of weight matrices."""
+
+    block_shape: Tuple[int, int] = (32, 1)   # paper's end-to-end CPU optimum
+    sparsity: float = 0.8                    # fraction of blocks zeroed
+    targets: Sequence[str] = ("attn/wq", "attn/wk", "attn/wv", "attn/wo")
+    group_norm_ord: int = 2                  # norm used to score a block
+    lambda_reg: float = 0.0                  # group-lasso strength (0 = off)
+    start_step: int = 0                      # gradual pruning window
+    end_step: int = 1
+    enabled: bool = True
+
+    def applies_to(self, path: str) -> bool:
+        return self.enabled and any(t in path for t in self.targets)
+
+
+def block_norms(w: jax.Array, block_shape: Tuple[int, int],
+                ord: int = 2) -> jax.Array:
+    """(n_brows, n_bcols) per-block norms of a 2-D weight."""
+    bh, bw = block_shape
+    r, c = w.shape
+    assert r % bh == 0 and c % bw == 0, (w.shape, block_shape)
+    blocks = w.reshape(r // bh, bh, c // bw, bw)
+    if ord == 1:
+        return jnp.sum(jnp.abs(blocks), axis=(1, 3))
+    if ord == 2:
+        return jnp.sqrt(jnp.sum(blocks * blocks, axis=(1, 3)))
+    raise ValueError(f"unsupported block norm ord={ord}")
+
+
+def topk_block_mask(w: jax.Array, block_shape: Tuple[int, int],
+                    sparsity: float, ord: int = 2) -> jax.Array:
+    """Keep the top-(1-sparsity) fraction of blocks by norm. Bool block mask.
+
+    Deterministic under jit (static k); ties broken by flat index order.
+    """
+    norms = block_norms(w, block_shape, ord)
+    n_blocks = norms.size
+    k_keep = max(1, int(round((1.0 - sparsity) * n_blocks)))
+    flat = norms.reshape(-1)
+    # threshold = k-th largest value; keep strictly-above plus enough ties
+    _, keep_idx = jax.lax.top_k(flat, k_keep)
+    mask = jnp.zeros((n_blocks,), bool).at[keep_idx].set(True)
+    return mask.reshape(norms.shape)
+
+
+def expand_block_mask(mask: jax.Array, block_shape: Tuple[int, int]) -> jax.Array:
+    """Block mask (n_brows, n_bcols) -> elementwise {0,1} mask."""
+    bh, bw = block_shape
+    return jnp.repeat(jnp.repeat(mask, bh, axis=0), bw, axis=1)
+
+
+def apply_block_mask(w: jax.Array, mask: jax.Array,
+                     block_shape: Tuple[int, int]) -> jax.Array:
+    return w * expand_block_mask(mask, block_shape).astype(w.dtype)
+
+
+def prune_to_sparsity(w: jax.Array, block_shape: Tuple[int, int],
+                      sparsity: float, ord: int = 2) -> Tuple[jax.Array, jax.Array]:
+    """One-shot block-magnitude pruning. Returns (pruned_w, block_mask)."""
+    mask = topk_block_mask(w, block_shape, sparsity, ord)
+    return apply_block_mask(w, mask, block_shape), mask
+
+
+def actual_sparsity(w: jax.Array, block_shape: Tuple[int, int]) -> jax.Array:
+    """Fraction of all-zero blocks in ``w``."""
+    norms = block_norms(w, block_shape, ord=1)
+    return jnp.mean((norms == 0).astype(jnp.float32))
+
+
+def pad_to_blocks(w: jax.Array, block_shape: Tuple[int, int]) -> jax.Array:
+    """Zero-pad trailing dims so both divide the block shape (for odd vocab etc.)."""
+    bh, bw = block_shape
+    r, c = w.shape
+    pr = (-r) % bh
+    pc = (-c) % bw
+    if pr == 0 and pc == 0:
+        return w
+    return jnp.pad(w, ((0, pr), (0, pc)))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's BSR operators + oracles + wrappers."""
+from repro.kernels.bsr_matmul import (KernelBSR, dds, dds_t, masked_matmul,
+                                      pack_bsr, sddmm)
+from repro.kernels.ops import (bsr_linear, bsr_matmul, default_backend,
+                               sparsify_weight)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the block-sparse kernels.
+
+Two reference paths:
+  * ``*_ref``     -- densify-then-matmul. The correctness oracle every kernel
+                     is allclose-tested against.
+  * ``*_gather``  -- an XLA-native sparse-compute path (gather + segment_sum)
+                     that actually skips zero blocks. FLOPs scale with density,
+                     so on CPU it realizes the paper's TVM+ speedups and is
+                     what benchmarks/table1 measures; on TPU the Pallas kernel
+                     (bsr_matmul.py) replaces it.
+
+Convention: ``Y(M, N) = X(M, K) @ W^T`` with ``W`` an (N, K) BSR matrix --
+the natural layout for a linear layer ``y = x @ W.T`` with output-feature
+block rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bsr import BSR, bsr_to_dense
+
+
+def bsr_matmul_ref(x: jax.Array, w: BSR) -> jax.Array:
+    """Oracle: densify W and matmul. x: (M, K) -> (M, N)."""
+    dense = bsr_to_dense(w)  # (N, K)
+    return jnp.dot(x, dense.T, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bsr_matmul_gather(x: jax.Array, w: BSR) -> jax.Array:
+    """Sparse-compute path: FLOPs = density * dense FLOPs.
+
+    Gathers the K-blocks of ``x`` addressed by ``indices``, multiplies each by
+    its stored block, and segment-sums into block rows. Equivalent to the
+    TVM+ BSR operator of the paper: only nonzero blocks are touched.
+    """
+    m, k = x.shape
+    n, _ = w.shape
+    bn, bk = w.block_shape
+    rows = w.block_row_ids()                    # (nnzb,)
+    xb = x.reshape(m, k // bk, bk)
+    g = jnp.take(xb, w.indices, axis=1)         # (M, nnzb, bk)
+    # (M, nnzb, bk) x (nnzb, bn, bk) -> (nnzb, M, bn)
+    prod = jnp.einsum("mjk,jnk->jmn", g, w.data,
+                      preferred_element_type=jnp.float32)
+    y = jax.ops.segment_sum(prod, rows, num_segments=n // bn)  # (R, M, bn)
+    return y.transpose(1, 0, 2).reshape(m, n).astype(x.dtype)
+
+
+def bsr_matmul_t_ref(dy: jax.Array, w: BSR) -> jax.Array:
+    """Oracle for the transpose product: dX(M, K) = dY(M, N) @ W."""
+    dense = bsr_to_dense(w)
+    return jnp.dot(dy, dense, preferred_element_type=jnp.float32).astype(dy.dtype)
+
+
+def bsr_matmul_t_gather(dy: jax.Array, w: BSR) -> jax.Array:
+    """Sparse transpose product via gather/segment-sum (scatter into K blocks)."""
+    m, n = dy.shape
+    _, k = w.shape
+    bn, bk = w.block_shape
+    rows = w.block_row_ids()
+    dyb = dy.reshape(m, n // bn, bn)
+    g = jnp.take(dyb, rows, axis=1)             # (M, nnzb, bn)
+    prod = jnp.einsum("mjn,jnk->jmk", g, w.data,
+                      preferred_element_type=jnp.float32)  # (nnzb, M, bk)
+    x = jax.ops.segment_sum(prod, w.indices, num_segments=k // bk)
+    return x.transpose(1, 0, 2).reshape(m, k).astype(dy.dtype)
+
+
+def sddmm_ref(dy: jax.Array, x: jax.Array, w: BSR) -> jax.Array:
+    """Sampled dense-dense matmul: dW.data[j] = dY[:, row_j]^T @ X[:, col_j].
+
+    Gradient of ``bsr_matmul`` w.r.t. the stored blocks; only pattern
+    positions are materialized (the whole point of sparse training).
+    Returns (nnzb, bn, bk).
+    """
+    m, n = dy.shape
+    _, k = x.shape
+    bn, bk = w.block_shape
+    rows = w.block_row_ids()
+    dyb = dy.reshape(m, n // bn, bn)
+    xb = x.reshape(m, k // bk, bk)
+    gy = jnp.take(dyb, rows, axis=1)       # (M, nnzb, bn)
+    gx = jnp.take(xb, w.indices, axis=1)   # (M, nnzb, bk)
+    return jnp.einsum("mjn,mjk->jnk", gy, gx,
+                      preferred_element_type=jnp.float32).astype(w.data.dtype)

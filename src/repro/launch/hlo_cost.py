@@ -1,0 +1,321 @@
+"""Loop-aware HLO cost model (text-based).
+
+XLA's built-in ``compiled.cost_analysis()`` counts every computation ONCE --
+while-loop bodies are NOT multiplied by trip count (verified empirically, see
+EXPERIMENTS.md §Dry-run methodology). Our models are scan-based (layers,
+flash-attention chunks, SSD chunks), so raw cost_analysis undercounts by
+orders of magnitude. This module recomputes flops / HBM bytes / collective
+bytes by walking the optimized HLO text:
+
+  * computations are parsed into op lists; the call graph is traversed from
+    ENTRY; ``while`` bodies+conds are weighted by their trip count (XLA:CPU
+    emits ``backend_config={"known_trip_count":{"n":...}}``; fallback: the
+    largest integer constant in the condition computation);
+  * ``dot`` flops = 2 * prod(output dims) * prod(contracting dims);
+  * bytes per op = operand bytes + output bytes (HloCostAnalysis convention;
+    fusions are costed at the fusion boundary, their internals contribute
+    flops only);
+  * collective bytes = output bytes of all-gather / all-reduce /
+    reduce-scatter(max of in/out) / all-to-all / collective-permute.
+
+Validated against cost_analysis on loop-free graphs (tests/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ZERO_COST = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "custom-call", "partition-id",
+              "replica-id", "opt-barrier", "domain", "iota"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"^\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count[":{\\]+n[":\\]+(\d+)')
+_CALLED_RE = re.compile(r"(?:body|condition|to_apply|calls)=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _parse_types(type_str: str) -> List[Tuple[str, List[int]]]:
+    """'(s32[], bf16[64,64]{1,0})' -> [('s32', []), ('bf16', [64, 64])]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.groups()
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _nbytes(types) -> int:
+    total = 0
+    for dtype, dims in types:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _nelems(types) -> int:
+    total = 0
+    for _, dims in types:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    types: list                      # result types
+    operands: List[str]
+    line: str
+
+
+def parse_module(text: str):
+    """-> (computations: {name: [Op]}, entry_name)."""
+    comps: Dict[str, List[Op]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):          # computation header or '}'
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur
+            elif line.strip() == "}":
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _NAME_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        rest = line[m.end():]
+        # result type: either '(tuple, ...)' (may contain /*index=N*/
+        # comments) or 'dtype[dims]{layout}' -- scan to its end manually.
+        if rest.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            type_str, rest = rest[: i + 1], rest[i + 1:]
+        else:
+            i = rest.find(" ")
+            if i < 0:
+                continue
+            type_str, rest = rest[:i], rest[i:]
+        km = _KIND_RE.match(rest)
+        if not km:
+            continue
+        kind = km.group(1)
+        paren = rest[km.end() - 1:]
+        depth, i = 0, 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str = paren[: i + 1]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        comps[cur].append(Op(name, kind, _parse_types(type_str), operands,
+                             line))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in self.coll:
+            self.coll[k] += other.coll[k]
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll.items()})
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        # symbol table: op name -> result types (module-wide; names unique
+        # enough in practice, last-write-wins is harmless for shapes)
+        self.symbols: Dict[str, list] = {}
+        for ops in self.comps.values():
+            for op in ops:
+                self.symbols[op.name] = op.types
+        self._memo: Dict[str, Cost] = {}
+        self._fusion_flops_memo: Dict[str, float] = {}
+
+    # -- helpers -----------------------------------------------------------
+    def _operand_bytes(self, op: Op) -> int:
+        return sum(_nbytes(self.symbols.get(o, [])) for o in op.operands)
+
+    def _trip_count(self, op: Op) -> int:
+        m = _TRIP_RE.search(op.line)
+        if m:
+            return int(m.group(1))
+        cm = _CALLED_RE.findall(op.line)
+        # fallback: largest s32 constant in the condition computation
+        for comp_name in cm:
+            if "cond" in comp_name or "region_1" in comp_name:
+                best = 1
+                for o in self.comps.get(comp_name, []):
+                    if o.kind == "constant":
+                        c = re.search(r"constant\((\d+)\)", o.line)
+                        if c:
+                            best = max(best, int(c.group(1)))
+                return best
+        return 1
+
+    def _dot_flops(self, op: Op) -> float:
+        out_elems = _nelems(op.types)
+        lhs = self.symbols.get(op.operands[0], [])
+        contract = 1
+        m = _LHS_CONTRACT_RE.search(op.line)
+        if m and lhs:
+            dims = lhs[0][1]
+            idxs = [int(x) for x in m.group(1).split(",") if x != ""]
+            for ix in idxs:
+                if ix < len(dims):
+                    contract *= dims[ix]
+        return 2.0 * out_elems * contract
+
+    def _fusion_flops(self, comp_name: str) -> float:
+        """Elementwise flops inside a fusion computation (1 flop/elem/op)."""
+        if comp_name in self._fusion_flops_memo:
+            return self._fusion_flops_memo[comp_name]
+        total = 0.0
+        for op in self.comps.get(comp_name, []):
+            if op.kind == "dot":
+                total += self._dot_flops(op)
+            elif op.kind == "fusion":
+                called = _CALLED_RE.findall(op.line)
+                total += sum(self._fusion_flops(c) for c in called)
+            elif op.kind not in _ZERO_COST and op.kind not in (
+                    "copy", "broadcast", "reshape", "transpose", "slice",
+                    "concatenate", "pad", "reverse", "gather", "scatter",
+                    "dynamic-slice", "dynamic-update-slice", "convert"):
+                total += _nelems(op.types)
+        self._fusion_flops_memo[comp_name] = total
+        return total
+
+    # -- main traversal ------------------------------------------------------
+    def comp_cost(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = Cost()
+        for op in self.comps.get(comp_name, []):
+            total += self.op_cost(op)
+        self._memo[comp_name] = total
+        return total
+
+    def op_cost(self, op: Op) -> Cost:
+        c = Cost()
+        k = op.kind
+        if k == "while":
+            trip = self._trip_count(op)
+            called = _CALLED_RE.findall(op.line)
+            inner = Cost()
+            for cn in called:
+                inner += self.comp_cost(cn)
+            return inner.scaled(trip)
+        if k == "conditional":
+            m = _BRANCHES_RE.search(op.line)
+            branches = re.findall(r"%([\w.\-]+)", m.group(1)) if m else []
+            costs = [self.comp_cost(b) for b in branches]
+            if costs:   # one branch executes: take the max-flops branch
+                return max(costs, key=lambda x: x.flops)
+            return c
+        if k == "call":
+            called = _CALLED_RE.findall(op.line)
+            for cn in called:
+                c += self.comp_cost(cn)
+            return c
+
+        out_bytes = _nbytes(op.types)
+        if k in _COLLECTIVES:
+            vol = out_bytes
+            if k == "reduce-scatter":
+                vol = max(out_bytes, self._operand_bytes(op))
+            c.coll[k] += vol
+            c.bytes += out_bytes + self._operand_bytes(op)
+            return c
+        if k in _ZERO_COST:
+            return c
+        if k == "fusion":
+            called = _CALLED_RE.findall(op.line)
+            c.flops += sum(self._fusion_flops(cn) for cn in called)
+            c.bytes += out_bytes + self._operand_bytes(op)
+            return c
+        if k == "dot":
+            c.flops += self._dot_flops(op)
+            c.bytes += out_bytes + self._operand_bytes(op)
+            return c
+        if k in ("convolution",):
+            # not used by our models; approximate as output elems
+            c.flops += _nelems(op.types)
+            c.bytes += out_bytes + self._operand_bytes(op)
+            return c
+        if k in ("reduce", "reduce-window", "sort", "map", "scatter",
+                 "select-and-scatter"):
+            c.flops += self._operand_bytes(op) / 4.0   # ~1 flop per element
+            c.bytes += out_bytes + self._operand_bytes(op)
+            return c
+        # elementwise / data movement
+        if k in ("copy", "broadcast", "reshape", "transpose", "slice",
+                 "concatenate", "pad", "gather", "dynamic-slice",
+                 "dynamic-update-slice", "convert", "reverse", "copy-start",
+                 "copy-done"):
+            c.bytes += out_bytes + self._operand_bytes(op)
+            return c
+        c.flops += _nelems(op.types)
+        c.bytes += out_bytes + self._operand_bytes(op)
+        return c
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def analyze(text: str) -> dict:
+    cost = HloCostModel(text).total()
+    return {"flops": cost.flops, "bytes": cost.bytes,
+            "coll": {**cost.coll, "total": cost.coll_total}}

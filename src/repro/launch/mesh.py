@@ -1,0 +1,29 @@
+"""Production mesh construction (function, not constant: importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic re-meshing)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh ('pod' folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, names) -> int:
+    s = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for n in (names if isinstance(names, (tuple, list)) else (names,)):
+        s *= sizes.get(n, 1)
+    return s

@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell -- the dry-run's
+stand-ins (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.models import init_cache, init_model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = sds((b, s), jnp.int32)
+    if cfg.family == "audio":
+        out["frames"] = sds((b, cfg.n_audio_ctx, cfg.d_model), cfg.jdtype)
+    if cfg.family == "vlm":
+        out["mm_embeds"] = sds((b, cfg.n_patches, cfg.d_model), cfg.jdtype)
+    return out
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, params_shapes):
+    b, s = shape.global_batch, shape.seq_len
+    frames = (sds((b, cfg.n_audio_ctx, cfg.d_model), cfg.jdtype)
+              if cfg.family == "audio" else None)
+    return jax.eval_shape(
+        lambda p, f: init_cache(p, cfg, b, s, frames=f),
+        params_shapes, frames)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Returns a dict describing every jit input for the cell's step fn."""
+    shape = SHAPES[shape_name]
+    p = params_specs(cfg)
+    if shape.kind == "train":
+        return {"params": p, "batch": batch_specs(cfg, shape, True)}
+    if shape.kind == "prefill":
+        return {"params": p, "batch": batch_specs(cfg, shape, False)}
+    # decode
+    b = shape.global_batch
+    return {"params": p,
+            "cache": cache_specs(cfg, shape, p),
+            "token": sds((b, 1), jnp.int32),
+            "pos": sds((), jnp.int32)}
+
+
+def cell_is_supported(cfg: ModelConfig, shape_name: str):
+    """(supported, reason). long_500k only for bounded-state archs; decode
+    shapes skipped for encoder-only families."""
+    shape = SHAPES[shape_name]
+    if cfg.family == "bert" and shape.kind in ("decode",):
+        return False, "encoder-only: no decode step"
+    if shape_name == "long_500k" and not cfg.supports_long_context():
+        return False, "full-attention arch: 500k ctx needs sub-quadratic attention"
+    return True, ""

@@ -1,0 +1,2 @@
+"""Model zoo: unified LM (dense/MoE/MLA/SSM/RG-LRU/VLM), enc-dec, BERT."""
+from repro.models.api import decode_step, init_cache, init_model, model_forward

@@ -1,0 +1,53 @@
+"""Family-dispatching model API used by the launcher, tests and benchmarks.
+
+batch keys by family:
+  lm-like ('dense','moe','ssm','hybrid'): tokens (B,S) [, labels]
+  'vlm':   tokens + mm_embeds (B,P,d)
+  'audio': frames (B,T_audio,d) + tokens (B,S)
+  'bert':  tokens
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import bert as bert_mod
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.family == "bert":
+        return bert_mod.init_bert(key, cfg)
+    if cfg.family == "audio":
+        return encdec_mod.init_encdec(key, cfg)
+    return lm_mod.init_lm(key, cfg)
+
+
+def model_forward(params, cfg: ModelConfig, batch, packs=None):
+    """-> (logits f32, aux)."""
+    if cfg.family == "bert":
+        return bert_mod.forward(params, cfg, batch["tokens"], packs=packs), \
+            jnp.zeros((), jnp.float32)
+    if cfg.family == "audio":
+        return encdec_mod.forward(params, cfg, batch["frames"], batch["tokens"])
+    if cfg.family == "vlm":
+        return lm_mod.forward(params, cfg, batch["tokens"],
+                              mm_embeds=batch.get("mm_embeds"), packs=packs)
+    return lm_mod.forward(params, cfg, batch["tokens"], packs=packs)
+
+
+def init_cache(params, cfg: ModelConfig, batch_size, cache_len, frames=None):
+    if cfg.family == "audio":
+        return encdec_mod.init_cache(params, cfg, frames, cache_len)
+    if cfg.family == "bert":
+        raise ValueError("encoder-only arch has no decode step")
+    return lm_mod.init_cache(cfg, batch_size, cache_len)
+
+
+def decode_step(params, cache, cfg: ModelConfig, token, pos, packs=None):
+    if cfg.family == "audio":
+        return encdec_mod.decode_step(params, cache, cfg, token, pos)
+    if cfg.family == "bert":
+        raise ValueError("encoder-only arch has no decode step")
+    return lm_mod.decode_step(params, cache, cfg, token, pos, packs=packs)

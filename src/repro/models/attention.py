@@ -1,0 +1,416 @@
+"""Attention: GQA with RoPE variants, flash-chunked global, banded local,
+and single-token decode against (ring-)KV caches.
+
+Memory discipline matters at the assigned shapes (32k prefill): global
+attention never materializes an (S, T) score matrix -- it runs a chunked
+online-softmax (flash) loop under lax.scan. Local attention gathers only the
+window-adjacent KV chunks, so its FLOPs are O(S * window) -- this is what
+makes recurrentgemma/mamba runnable at 500k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, init_linear, linear, normal_init
+
+NEG_INF = -1e30
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def _merge_heads(x):
+    b, s, h, d = x.shape
+    return x.reshape(b, s, h * d)
+
+
+# ---------------------------------------------------------------------------
+# core attention math (all paths share the grouped-heads convention)
+# ---------------------------------------------------------------------------
+
+def full_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                   softcap=0.0):
+    """Materialized-scores path for short sequences (smoke tests, decode prefill
+    of small models). q: (B,S,Hq,D), k/v: (B,T,Hkv,D)."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = q_offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p.astype(v.dtype), v)
+    return out.reshape(b, s, hq, d)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    q_chunk=1024, kv_chunk=1024, softcap=0.0):
+    """Chunked online-softmax attention with a flash-style custom VJP.
+
+    Forward keeps only O(Cq*Ckv) scores live and saves O(S*d) residuals
+    (out + per-position logsumexp); backward recomputes attention blockwise
+    (the FA2 schedule). Without the custom VJP, scan autodiff stacks
+    per-chunk probability tensors -- O(S^2) residual memory, which the
+    dry-run showed dominating the HBM roofline term (EXPERIMENTS.md §Perf).
+    """
+    return _flash(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+                  softcap)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, softcap):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk,
+                             kv_chunk, softcap)
+    return out
+
+
+def _blocks(q, k, v, q_chunk, kv_chunk):
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    cq, ck = min(q_chunk, s), min(kv_chunk, t)
+    pad_q, pad_k = (-s) % cq, (-t) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (s + pad_q) // cq, (t + pad_k) // ck
+    qb = q.reshape(b, nq, cq, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nk, ck, hkv, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, ck, hkv, d).transpose(1, 0, 3, 2, 4)
+    return qb, kb, vb, (b, s, t, hq, hkv, g, d, cq, ck, nq, nk)
+
+
+def _tile_ok(qi, ki, cq, ck, t_valid, causal, window, q_offset):
+    qpos = q_offset + qi * cq + jnp.arange(cq)[:, None]
+    kpos = ki * ck + jnp.arange(ck)[None, :]
+    ok = kpos < t_valid
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    return ok
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+                    softcap):
+    qb, kb, vb, dims = _blocks(q, k, v, q_chunk, kv_chunk)
+    b, s, t, hq, hkv, g, d, cq, ck, nq, nk = dims
+    scale = d ** -0.5
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            if softcap > 0:
+                s_ = jnp.tanh(s_ / softcap) * softcap
+            ok = _tile_ok(qi, ki, cq, ck, t, causal, window, q_offset)
+            m_new = jnp.maximum(m, jnp.max(
+                jnp.where(ok[None, None, None], s_, NEG_INF), axis=-1))
+            # store the probability tile in the model dtype: for bf16 models
+            # this halves the dominant HBM term (§Perf iter 3); f32 models
+            # keep full precision
+            p = jnp.where(ok[None, None, None],
+                          jnp.exp(s_ - m_new[..., None]), 0.0).astype(q.dtype)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1,
+                                   dtype=jnp.float32)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))        # (b,hkv,g,cq)
+        return None, (out, lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * cq, hq, d)
+    return out[:, :s].astype(q.dtype), lseb             # lseb (nq,b,hkv,g,cq)
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+                   softcap):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk,
+                               kv_chunk, softcap)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, q_chunk, kv_chunk, softcap,
+                   res, dout):
+    # softcap>0 bwd falls back to autodiff at the call site (not used by the
+    # assigned archs); here softcap is always 0.
+    q, k, v, out, lse = res
+    qb, kb, vb, dims = _blocks(q, k, v, q_chunk, kv_chunk)
+    b, s, t, hq, hkv, g, d, cq, ck, nq, nk = dims
+    scale = d ** -0.5
+    pad_q = nq * cq - s
+    do = dout.astype(q.dtype)
+    outp = out.astype(q.dtype)
+    if pad_q:
+        do = jnp.pad(do, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        outp = jnp.pad(outp, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    dob = do.reshape(b, nq, cq, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    outb = outp.reshape(b, nq, cq, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    delta = jnp.einsum("nbhgqd,nbhgqd->nbhgq", dob, outb,
+                       preferred_element_type=jnp.float32)
+
+    def kv_step(dq_acc, ki_kv):
+        ki, kblk, vblk = ki_kv
+
+        def q_step(carry, qi_stuff):
+            dk_j, dv_j = carry
+            qi, qblk, doq, lseq, dlt = qi_stuff
+            s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            ok = _tile_ok(qi, ki, cq, ck, t, causal, window, q_offset)
+            # p/ds tiles stored in the model dtype (see fwd note)
+            p = jnp.where(ok[None, None, None],
+                          jnp.exp(s_ - lseq[..., None]), 0.0).astype(q.dtype)
+            dv_j = dv_j + jnp.einsum("bhgqk,bhgqd->bhkd", p, doq,
+                                     preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", doq, vblk,
+                            preferred_element_type=jnp.float32)
+            ds = (p.astype(jnp.float32) * (dp - dlt[..., None]) *
+                  scale).astype(q.dtype)
+            dk_j = dk_j + jnp.einsum("bhgqk,bhgqd->bhkd", ds, qblk,
+                                     preferred_element_type=jnp.float32)
+            dq_i = jnp.einsum("bhgqk,bhkd->bhgqd", ds, kblk,
+                              preferred_element_type=jnp.float32)
+            return (dk_j, dv_j), dq_i
+
+        zk = jnp.zeros((b, hkv, ck, d), jnp.float32)
+        (dk_j, dv_j), dq_parts = jax.lax.scan(
+            q_step, (zk, zk), (jnp.arange(nq), qb, dob, lse, delta))
+        return dq_acc + dq_parts, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, b, hkv, g, cq, d), jnp.float32)
+    dq_acc, (dkb, dvb) = jax.lax.scan(kv_step, dq0, (jnp.arange(nk), kb, vb))
+
+    dq = dq_acc.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * cq, hq, d)[:, :s]
+    dk = dkb.transpose(1, 0, 3, 2, 4).reshape(b, nk * ck, hkv, d)[:, :t]
+    dv = dvb.transpose(1, 0, 3, 2, 4).reshape(b, nk * ck, hkv, d)[:, :t]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def local_attention(q, k, v, *, window, q_offset=0):
+    """Banded causal attention: FLOPs O(S * window), not O(S^2).
+
+    Chunk size C divides the window; each query chunk gathers the previous
+    ``window//C`` key chunks plus its own, so out-of-band tiles are never
+    computed (true sub-quadratic cost, visible in cost_analysis).
+    """
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    assert s == t, "local_attention is a self-attention prefill/train path"
+    g = hq // hkv
+    c = min(window, 1024)
+    assert window % c == 0
+    n_prev = window // c
+    pad = (-s) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (s + pad) // c
+    qb = q.reshape(b, n, c, hkv, g, d)
+    kc = k.reshape(b, n, c, hkv, d)
+    vc = v.reshape(b, n, c, hkv, d)
+
+    def shifted(x, sh):  # chunk i -> chunk i-sh (zero for i<sh)
+        return jnp.pad(x, ((0, 0), (sh, 0)) + ((0, 0),) * (x.ndim - 2))[:, :n]
+
+    k_ext = jnp.concatenate([shifted(kc, p) for p in range(n_prev, 0, -1)]
+                            + [kc], axis=2)            # (b, n, (n_prev+1)c, hkv, d)
+    v_ext = jnp.concatenate([shifted(vc, p) for p in range(n_prev, 0, -1)]
+                            + [vc], axis=2)
+    scores = jnp.einsum("bnchgd,bnkhd->bnhgck", qb, k_ext,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    ci = jnp.arange(n)[:, None, None]
+    a = jnp.arange(c)[None, :, None]
+    bcol = jnp.arange((n_prev + 1) * c)[None, None, :]
+    qpos = ci * c + a
+    kpos = (ci - n_prev) * c + bcol
+    ok = (kpos >= 0) & (kpos <= qpos) & (qpos - kpos < window) & (kpos < s)
+    scores = jnp.where(ok[:, None, None][None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnhgck,bnkhd->bnchgd", p.astype(v_ext.dtype), v_ext)
+    out = out.reshape(b, n * c, hq, d)
+    return out[:, :s]
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0):
+    """One-step decode: q (B,1,Hq,D) vs caches (B,T,Hkv,D).
+
+    ``kv_positions`` (T,) holds the absolute position stored in each cache
+    slot (-1 = empty) -- this supports both linear caches (slot == position)
+    and ring caches for windowed layers (slot == position % window).
+    """
+    b, _, hq, d = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bthd->bhgqt", qg, k_cache,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    ok = (kv_positions >= 0) & (kv_positions <= pos)
+    if window > 0:
+        ok &= kv_positions > pos - window
+    scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# the GQA attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {"wq": init_linear(ks[0], d, cfg.n_heads * hd, cfg.jdtype),
+         "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, cfg.jdtype),
+         "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, cfg.jdtype),
+         "wo": init_linear(ks[3], cfg.n_heads * hd, d, cfg.jdtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((hd,), cfg.jdtype)}
+        p["k_norm"] = {"scale": jnp.zeros((hd,), cfg.jdtype)}
+    return p
+
+
+def init_cache_attn(cfg, batch, cache_len, window=0, dtype=None):
+    """Linear cache for global layers, ring cache (len=window) for local.
+    With cfg.kv_cache_quant, K/V are stored int8 with per-(slot, head)
+    scales (dequantized tile-wise inside attention)."""
+    t = min(cache_len, window) if window > 0 else cache_len
+    dtype = dtype or cfg.jdtype
+    shape = (batch, t, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:3], jnp.bfloat16),
+                "pos_map": jnp.full((t,), -1, jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+            "pos_map": jnp.full((t,), -1, jnp.int32)}
+
+
+def _quantize_kv(x):
+    """(B,S,H,D) -> int8 values + per-(B,S,H) scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) *
+            scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
+                    packs=None, causal=True, kv_override=None):
+    """x: (B,S,d). Returns (out, new_cache). Train/prefill when cache is None.
+
+    kv_override: (k, v) tensors for cross-attention (enc-dec)."""
+    from repro.models.common import rms_norm
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(linear(p["wq"], x, packs and packs.get("wq")),
+                     cfg.n_heads, hd)
+    if kv_override is None:
+        k = _split_heads(linear(p["wk"], x, packs and packs.get("wk")),
+                         cfg.n_kv_heads, hd)
+        v = _split_heads(linear(p["wv"], x, packs and packs.get("wv")),
+                         cfg.n_kv_heads, hd)
+    else:
+        k, v = kv_override
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        k = rms_norm(k, p["k_norm"]["scale"]) if kv_override is None else k
+    if cfg.rotary_fraction > 0 and kv_override is None:
+        q = apply_rope(q, positions, theta=cfg.rope_theta,
+                       rotary_fraction=cfg.rotary_fraction)
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       rotary_fraction=cfg.rotary_fraction)
+
+    new_cache = cache
+    if cache is None:
+        if not causal:
+            out = full_attention(q, k, v, causal=False) if s <= 2048 else \
+                flash_attention(q, k, v, causal=False,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        elif window > 0 and s > window:
+            out = local_attention(q, k, v, window=window)
+        elif s <= 1024:
+            out = full_attention(q, k, v, causal=True, window=window)
+        else:
+            out = flash_attention(q, k, v, causal=True, window=window,
+                                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                  softcap=cfg.attn_logit_softcap)
+    else:
+        assert s == 1 and pos is not None
+        if kv_override is None:
+            t = cache["k"].shape[1]
+            slot = pos % t
+            pm = cache["pos_map"].at[slot].set(pos)
+            if "k_scale" in cache:   # int8 quantized cache
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                ck = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, slot, 0, 0))
+                cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                   (0, slot, 0))
+                cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                   (0, slot, 0))
+                new_cache = {"k": ck, "v": cv, "k_scale": cks,
+                             "v_scale": cvs, "pos_map": pm}
+                kd = _dequantize_kv(ck, cks, q.dtype)
+                vd = _dequantize_kv(cv, cvs, q.dtype)
+                out = decode_attention(q, kd, vd, pm, pos, window=window)
+            else:
+                ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, slot, 0, 0))
+                new_cache = {"k": ck, "v": cv, "pos_map": pm}
+                out = decode_attention(q, ck, cv, pm, pos, window=window)
+        else:
+            # cross-attn decode: every encoder position is visible
+            t = k.shape[1]
+            out = decode_attention(q, k, v, jnp.arange(t), t - 1, window=0)
+    out = linear(p["wo"], _merge_heads(out), packs and packs.get("wo"))
+    return out, new_cache

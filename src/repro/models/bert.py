@@ -1,0 +1,73 @@
+"""BERT encoder (the paper's pruning target) with MLM head.
+
+Post-LN transformer, learned positional embeddings, GELU FFN, tied MLM
+decoder -- the classical BERT_BASE recipe (biases omitted; immaterial for the
+systems study, noted in DESIGN.md). Layers are *unrolled* (12 at base scale)
+so each layer can carry its own BSR pattern for sparse serving, matching the
+paper's per-layer pruning of attention weights.
+
+``packs`` routes attention/FC projections through the block-sparse kernels --
+this is the TVM+ execution mode; ``packs=None`` is the dense baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (apply_mlp, apply_norm, init_mlp, init_norm,
+                                 linear, normal_init)
+
+MAX_POSITIONS = 512
+
+
+def init_bert(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(jax.random.fold_in(ks[0], i), 4)
+        layers.append({
+            "attn": attn.init_attention(lk[0], cfg),
+            "norm1": init_norm(lk[1], cfg.d_model, "ln", cfg.jdtype),
+            "ffn": init_mlp(lk[2], cfg.d_model, cfg.d_ff, "gelu", cfg.jdtype),
+            "norm2": init_norm(lk[3], cfg.d_model, "ln", cfg.jdtype),
+        })
+    return {
+        "embed": {"w": normal_init(ks[1], (cfg.vocab_size, cfg.d_model), 0.02,
+                                   cfg.jdtype)},
+        "pos": normal_init(ks[2], (MAX_POSITIONS, cfg.d_model), 0.02, cfg.jdtype),
+        "embed_norm": init_norm(ks[3], cfg.d_model, "ln", cfg.jdtype),
+        "layers": tuple(layers),
+        "mlm_dense": {"w": normal_init(ks[4], (cfg.d_model, cfg.d_model), 0.02,
+                                       cfg.jdtype)},
+        "mlm_norm": init_norm(ks[5], cfg.d_model, "ln", cfg.jdtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, *, packs=None):
+    """tokens (B, S) -> MLM logits (B, S, V) f32."""
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0) + params["pos"][None, :s]
+    h = apply_norm(params["embed_norm"], h, "ln")
+    positions = jnp.arange(s)[None]
+    for i, lp in enumerate(params["layers"]):
+        lpacks = _sel(packs, f"layers/{i}")
+        out, _ = attn.apply_attention(lp["attn"], h, cfg, positions=positions,
+                                      causal=False,
+                                      packs=_sel(lpacks, "attn"))
+        h = apply_norm(lp["norm1"], h + out, "ln")           # post-LN
+        out = apply_mlp(lp["ffn"], h, "gelu", packs=_sel(lpacks, "ffn"))
+        h = apply_norm(lp["norm2"], h + out, "ln")
+    t = jax.nn.gelu(linear(params["mlm_dense"], h))
+    t = apply_norm(params["mlm_norm"], t, "ln")
+    return jnp.einsum("bsd,vd->bsv", t, params["embed"]["w"],
+                      preferred_element_type=jnp.float32)
+
+
+def _sel(packs, scope):
+    if not packs:
+        return None
+    pre = scope + "/"
+    sel = {k[len(pre):]: v for k, v in packs.items() if k.startswith(pre)}
+    return sel or None

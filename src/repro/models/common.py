@@ -1,0 +1,118 @@
+"""Shared layer primitives: norms, activations, RoPE, linear init/apply.
+
+Everything is a pure function over explicit param dicts (no module framework
+dependency); params are plain pytrees so they shard, scan, and checkpoint
+uniformly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(key, d, kind="rms", dtype=jnp.float32):
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x, kind="rms"):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# -- activations --------------------------------------------------------------
+
+def act_fn(name):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu}[name]
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(head_dim, rotary_fraction=1.0, theta=10000.0):
+    rot = int(head_dim * rotary_fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, *, theta=10000.0, rotary_fraction=1.0):
+    """x: (..., S, H, D); positions: (..., S) int32. Pairs (x_i, x_{i+rot/2})
+    rotated; trailing (1-fraction) dims pass through (chatglm-style partial)."""
+    d = x.shape[-1]
+    inv, rot = rope_freqs(d, rotary_fraction, theta)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2, x_pass.astype(jnp.float32)],
+                           axis=-1).astype(x.dtype)
+
+
+# -- linear (dense or block-sparse) -------------------------------------------
+
+def init_linear(key, d_in, d_out, dtype=jnp.float32, scale=0.02):
+    """Weight stored (d_out, d_in): y = x @ w.T -- matches the BSR layout."""
+    return {"w": normal_init(key, (d_out, d_in), scale, dtype)}
+
+
+def linear(p, x, pack=None, backend=None):
+    """Dense or BSR-backed projection.
+
+    ``pack`` is a static KernelBSR pattern (from models.sparse_exec); when
+    provided, ``p['w']`` holds the packed tile values (nnzt, bn, bk) instead
+    of the dense matrix and the paper's sparse kernel executes the matmul.
+    """
+    if pack is not None:
+        from repro.kernels.ops import bsr_matmul  # local import, cycle-free
+        from repro.kernels.bsr_matmul import KernelBSR
+        kb = KernelBSR(p["w"], pack.row_id, pack.col_id, pack.t_perm,
+                       pack.real_nnzt, pack.shape, pack.tile)
+        return bsr_matmul(x, kb, backend)
+    return jnp.einsum("...k,nk->...n", x, p["w"])
+
+
+def init_mlp(key, d_model, d_ff, act="swiglu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {"wi": init_linear(k1, d_model, d_ff, dtype),
+                "wg": init_linear(k2, d_model, d_ff, dtype),
+                "wo": init_linear(k3, d_ff, d_model, dtype)}
+    return {"wi": init_linear(k1, d_model, d_ff, dtype),
+            "wo": init_linear(k3, d_ff, d_model, dtype)}
+
+
+def apply_mlp(p, x, act="swiglu", packs=None, backend=None):
+    def pk(name):
+        return None if packs is None else packs.get(name)
+    if act in ("swiglu", "geglu"):
+        g = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        h = g(linear(p["wg"], x, pk("wg"), backend)) * linear(p["wi"], x, pk("wi"), backend)
+    else:
+        h = act_fn(act)(linear(p["wi"], x, pk("wi"), backend))
+    return linear(p["wo"], h, pk("wo"), backend)

@@ -1,0 +1,147 @@
+"""Encoder-decoder transformer backbone (whisper-base shape).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, n_audio_ctx, d_model). Encoder layers are
+bidirectional; decoder layers are causal self-attention + cross-attention.
+Decode caches: ring self-KV + cross-K/V computed once at encode time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (apply_mlp, apply_norm, init_mlp, init_norm,
+                                 linear, normal_init)
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {"norm1": init_norm(ks[0], cfg.d_model, cfg.norm, cfg.jdtype),
+            "attn": attn.init_attention(ks[1], cfg),
+            "norm2": init_norm(ks[2], cfg.d_model, cfg.norm, cfg.jdtype),
+            "ffn": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, cfg.jdtype)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {"norm1": init_norm(ks[0], cfg.d_model, cfg.norm, cfg.jdtype),
+            "attn": attn.init_attention(ks[1], cfg),
+            "norm_x": init_norm(ks[2], cfg.d_model, cfg.norm, cfg.jdtype),
+            "xattn": attn.init_attention(ks[3], cfg),
+            "norm2": init_norm(ks[4], cfg.d_model, cfg.norm, cfg.jdtype),
+            "ffn": init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.act, cfg.jdtype)}
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ke, kd, ko = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, max(cfg.n_enc_layers, 1))
+    dec_keys = jax.random.split(kd, max(cfg.n_layers, 1))
+    ks = jax.random.split(ko, 4)
+    return {
+        "enc_pos": normal_init(ks[0], (cfg.n_audio_ctx, cfg.d_model), 0.02,
+                               cfg.jdtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_norm(ks[1], cfg.d_model, cfg.norm, cfg.jdtype),
+        "embed": {"w": normal_init(ks[2], (cfg.vocab_size, cfg.d_model), 0.02,
+                                   cfg.jdtype)},
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "dec_norm": init_norm(ks[3], cfg.d_model, cfg.norm, cfg.jdtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T_audio, d) stub embeddings -> encoder output."""
+    h = frames.astype(cfg.jdtype) + params["enc_pos"][None]
+    positions = jnp.arange(h.shape[1])[None]
+
+    def body(h, lp):
+        hn = apply_norm(lp["norm1"], h, cfg.norm)
+        out, _ = attn.apply_attention(lp["attn"], hn, cfg,
+                                      positions=positions, causal=False)
+        h = h + out
+        hn = apply_norm(lp["norm2"], h, cfg.norm)
+        return h + apply_mlp(lp["ffn"], hn, cfg.act), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return apply_norm(params["enc_norm"], h, cfg.norm)
+
+
+def _cross_kv(lp, cfg, enc_out):
+    b, t, _ = enc_out.shape
+    k = linear(lp["xattn"]["wk"], enc_out).reshape(b, t, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+    v = linear(lp["xattn"]["wv"], enc_out).reshape(b, t, cfg.n_kv_heads,
+                                                   cfg.head_dim)
+    return k, v
+
+
+def _dec_layer(lp, h, cfg, *, positions, enc_out=None, cross_kv=None,
+               cache=None, pos=None):
+    hn = apply_norm(lp["norm1"], h, cfg.norm)
+    out, new_self = attn.apply_attention(
+        lp["attn"], hn, cfg, positions=positions,
+        cache=cache.get("self") if cache else None, pos=pos)
+    h = h + out
+    hn = apply_norm(lp["norm_x"], h, cfg.norm)
+    kv = cross_kv if cross_kv is not None else _cross_kv(lp, cfg, enc_out)
+    out, _ = attn.apply_attention(
+        lp["xattn"], hn, cfg, positions=positions, kv_override=kv,
+        causal=False, cache={} if cache is not None else None, pos=pos)
+    h = h + out
+    hn = apply_norm(lp["norm2"], h, cfg.norm)
+    h = h + apply_mlp(lp["ffn"], hn, cfg.act)
+    return h, new_self
+
+
+def forward(params, cfg: ModelConfig, frames, tokens):
+    """Training forward: (frames, decoder tokens) -> logits."""
+    enc_out = encode(params, cfg, frames)
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    positions = jnp.arange(s)[None]
+
+    def body(h, lp):
+        h, _ = _dec_layer(lp, h, cfg, positions=positions, enc_out=enc_out)
+        return h, None
+
+    h, _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False), h,
+                        params["dec_layers"])
+    h = apply_norm(params["dec_norm"], h, cfg.norm)
+    return jnp.einsum("bsd,vd->bsv", h, params["embed"]["w"],
+                      preferred_element_type=jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def init_cache(params, cfg: ModelConfig, frames, cache_len):
+    """Run the encoder once; build per-layer self caches + cross K/V."""
+    enc_out = encode(params, cfg, frames)
+    b = frames.shape[0]
+    self_cache = attn.init_cache_attn(cfg, b, cache_len)
+    n_dec = jax.tree_util.tree_leaves(params["dec_layers"])[0].shape[0]
+    stacked_self = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_dec,) + x.shape), self_cache)
+    cross = jax.vmap(lambda lp: _cross_kv(lp, cfg, enc_out))(params["dec_layers"])
+    return {"self": stacked_self, "cross_k": cross[0], "cross_v": cross[1]}
+
+
+def decode_step(params, cache, cfg: ModelConfig, token, pos):
+    b = token.shape[0]
+    h = jnp.take(params["embed"]["w"], token, axis=0)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    def body(h, xs):
+        lp, self_c, ck, cv = xs
+        h, new_self = _dec_layer(lp, h, cfg, positions=positions,
+                                 cross_kv=(ck, cv),
+                                 cache={"self": self_c}, pos=pos)
+        return h, new_self
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["self"],
+                  cache["cross_k"], cache["cross_v"]))
+    h = apply_norm(params["dec_norm"], h, cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["w"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

@@ -1,0 +1,263 @@
+"""Unified decoder-only LM covering dense / MoE / MLA / SSM / hybrid / VLM.
+
+Layer stacks follow the config's ``layer_plan()``: an unrolled prefix, a
+lax.scan over ``n_periods`` repetitions of the (possibly heterogeneous)
+``pattern``, and an unrolled suffix. This keeps HLO size O(len(pattern)) no
+matter how deep the model -- required for tractable 512-device compiles --
+while still expressing per-layer heterogeneity (gemma3 5:1 local:global,
+recurrentgemma 1:2 attn:recurrent) with static layer kinds.
+
+The paper's technique is first-class: when serving params are exported via
+models.sparse_exec, attention/mixer projections route through the BSR kernels
+(pattern static + per-layer packed values scanned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerKind, ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (apply_mlp, apply_norm, init_mlp, init_norm,
+                                 normal_init)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: LayerKind):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(ks[0], cfg.d_model, cfg.norm, cfg.jdtype)}
+    if kind.mixer in ("attn", "local"):
+        p["attn"] = attn.init_attention(ks[1], cfg)
+    elif kind.mixer == "mla":
+        p["attn"] = mla_mod.init_mla(ks[1], cfg)
+    elif kind.mixer == "ssm":
+        p["mixer"] = ssm_mod.init_ssm(ks[1], cfg)
+    elif kind.mixer == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(ks[1], cfg)
+    else:
+        raise ValueError(kind.mixer)
+    if kind.ffn == "dense":
+        p["norm2"] = init_norm(ks[2], cfg.d_model, cfg.norm, cfg.jdtype)
+        p["ffn"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.act, cfg.jdtype)
+    elif kind.ffn == "moe":
+        p["norm2"] = init_norm(ks[2], cfg.d_model, cfg.norm, cfg.jdtype)
+        p["ffn"] = moe_mod.init_moe(ks[3], cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig):
+    prefix, pattern, n_periods, suffix = cfg.layer_plan()
+    k_embed, k_head, k_rest = jax.random.split(key, 3)
+    params = {"embed": {"w": normal_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                                         0.02, cfg.jdtype)},
+              "final_norm": init_norm(k_head, cfg.d_model, cfg.norm, cfg.jdtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": normal_init(
+            jax.random.fold_in(k_head, 1), (cfg.vocab_size, cfg.d_model),
+            0.02, cfg.jdtype)}
+
+    keys = jax.random.split(k_rest, 3)
+    params["prefix"] = tuple(
+        _init_layer(jax.random.fold_in(keys[0], i), cfg, kind)
+        for i, kind in enumerate(prefix))
+    params["blocks"] = tuple(
+        jax.vmap(lambda k, i=i, kind=kind: _init_layer(k, cfg, kind))(
+            jax.random.split(jax.random.fold_in(keys[1], i), max(n_periods, 1)))
+        for i, kind in enumerate(pattern)) if n_periods > 0 else ()
+    params["suffix"] = tuple(
+        _init_layer(jax.random.fold_in(keys[2], i), cfg, kind)
+        for i, kind in enumerate(suffix))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p, h, cfg, kind: LayerKind, *, positions, cache=None,
+                 pos=None, packs=None):
+    hn = apply_norm(p["norm1"], h, cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    mix_packs = _layer_packs(packs, "attn") or _layer_packs(packs, "mixer")
+    if kind.mixer in ("attn", "local"):
+        out, new_mix_cache = attn.apply_attention(
+            p["attn"], hn, cfg, positions=positions, window=kind.window,
+            cache=cache.get("mix") if cache else None, pos=pos, packs=mix_packs)
+    elif kind.mixer == "mla":
+        out, new_mix_cache = mla_mod.apply_mla(
+            p["attn"], hn, cfg, positions=positions,
+            cache=cache.get("mix") if cache else None, pos=pos, packs=mix_packs)
+    elif kind.mixer == "ssm":
+        out, new_mix_cache = ssm_mod.apply_ssm(
+            p["mixer"], hn, cfg, cache=cache.get("mix") if cache else None,
+            pos=pos, packs=mix_packs)
+    elif kind.mixer == "rglru":
+        out, new_mix_cache = rglru_mod.apply_rglru(
+            p["mixer"], hn, cfg, cache=cache.get("mix") if cache else None,
+            pos=pos, packs=mix_packs)
+    # name the mixer output so the remat policy can pin it: the layer-body
+    # recompute then skips re-running attention forward (saves ~2 of the 9
+    # O(S^2) passes per layer; §Perf iter 4)
+    from jax.ad_checkpoint import checkpoint_name
+    out = checkpoint_name(out, "mixer_out")
+    h = h + out
+
+    if kind.ffn != "none" and "ffn" in p:
+        hn = apply_norm(p["norm2"], h, cfg.norm)
+        if kind.ffn == "moe":
+            out, aux = moe_mod.apply_moe(p["ffn"], hn, cfg)
+        else:
+            out = apply_mlp(p["ffn"], hn, cfg.act,
+                            packs=_layer_packs(packs, "ffn"))
+        h = h + out
+    new_cache = {"mix": new_mix_cache} if cache is not None else None
+    return h, new_cache, aux
+
+
+def _layer_packs(packs, scope):
+    """Select this layer's packs: keys '<scope>/<name>' -> {'<name>': pack}."""
+    if not packs:
+        return None
+    pre = scope + "/"
+    sel = {k[len(pre):]: v for k, v in packs.items() if k.startswith(pre)}
+    return sel or None
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, *, mm_embeds=None, packs=None):
+    """tokens (B, S) -> logits (B, S, V) f32, aux loss."""
+    prefix, pattern, n_periods, suffix = cfg.layer_plan()
+    b, s = tokens.shape
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    if cfg.scale_embedding:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if mm_embeds is not None:   # vlm: patch embeddings occupy the prefix slots
+        p = mm_embeds.shape[1]
+        h = jnp.concatenate([mm_embeds.astype(h.dtype), h[:, p:]], axis=1)
+    positions = jnp.arange(s)[None, :]
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, kind in enumerate(prefix):
+        h, _, a = _apply_layer(params["prefix"][i], h, cfg, kind,
+                               positions=positions,
+                               packs=_layer_packs(packs, f"prefix/{i}"))
+        aux += a
+
+    if n_periods > 0:
+        def body(carry, xs):
+            h, aux = carry
+            for i, kind in enumerate(pattern):
+                h, _, a = _apply_layer(xs[i], h, cfg, kind,
+                                       positions=positions,
+                                       packs=_layer_packs(packs, f"blocks/{i}"))
+                aux += a
+            return (h, aux), None
+        # NOTE §Perf iter 4 (refuted): a save_only_these_names("mixer_out")
+        # remat policy was tried to skip attention-forward recompute; the
+        # custom-vjp residuals must be rebuilt either way, so flops stayed
+        # flat (-0.8%) while temp memory rose 42%. Full-recompute remat wins.
+        body = jax.checkpoint(body, prevent_cse=False)
+        (h, aux), _ = jax.lax.scan(body, (h, aux), params["blocks"])
+
+    for i, kind in enumerate(suffix):
+        h, _, a = _apply_layer(params["suffix"][i], h, cfg, kind,
+                               positions=positions,
+                               packs=_layer_packs(packs, f"suffix/{i}"))
+        aux += a
+
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = jnp.einsum("bsd,vd->bsv", h, head,
+                        preferred_element_type=jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg, kind: LayerKind, batch, cache_len):
+    if kind.mixer in ("attn", "local"):
+        return {"mix": attn.init_cache_attn(cfg, batch, cache_len, kind.window)}
+    if kind.mixer == "mla":
+        return {"mix": mla_mod.init_cache_mla(cfg, batch, cache_len)}
+    if kind.mixer == "ssm":
+        return {"mix": ssm_mod.init_cache_ssm(cfg, batch)}
+    if kind.mixer == "rglru":
+        return {"mix": rglru_mod.init_cache_rglru(cfg, batch)}
+    raise ValueError(kind.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch, cache_len):
+    prefix, pattern, n_periods, suffix = cfg.layer_plan()
+    def stack(kind):
+        one = _init_layer_cache(cfg, kind, batch, cache_len)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), one)
+    return {
+        "prefix": tuple(_init_layer_cache(cfg, k, batch, cache_len)
+                        for k in prefix),
+        "blocks": tuple(stack(k) for k in pattern) if n_periods > 0 else (),
+        "suffix": tuple(_init_layer_cache(cfg, k, batch, cache_len)
+                        for k in suffix),
+    }
+
+
+def decode_step(params, cache, cfg: ModelConfig, token, pos, *, packs=None):
+    """token (B, 1) + caches at absolute position ``pos`` -> (logits, cache)."""
+    prefix, pattern, n_periods, suffix = cfg.layer_plan()
+    b = token.shape[0]
+    h = jnp.take(params["embed"]["w"], token, axis=0)
+    if cfg.scale_embedding:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    new_prefix = []
+    for i, kind in enumerate(prefix):
+        h, c, _ = _apply_layer(params["prefix"][i], h, cfg, kind,
+                               positions=positions, cache=cache["prefix"][i],
+                               pos=pos, packs=_layer_packs(packs, f"prefix/{i}"))
+        new_prefix.append(c)
+
+    new_blocks = cache["blocks"]
+    if n_periods > 0:
+        def body(h, xs):
+            layer_ps, layer_cs = xs
+            new_cs = []
+            for i, kind in enumerate(pattern):
+                h, c, _ = _apply_layer(layer_ps[i], h, cfg, kind,
+                                       positions=positions, cache=layer_cs[i],
+                                       pos=pos,
+                                       packs=_layer_packs(packs, f"blocks/{i}"))
+                new_cs.append(c)
+            return h, tuple(new_cs)
+        h, new_blocks = jax.lax.scan(body, h,
+                                     (params["blocks"], cache["blocks"]))
+
+    new_suffix = []
+    for i, kind in enumerate(suffix):
+        h, c, _ = _apply_layer(params["suffix"][i], h, cfg, kind,
+                               positions=positions, cache=cache["suffix"][i],
+                               pos=pos, packs=_layer_packs(packs, f"suffix/{i}"))
+        new_suffix.append(c)
+
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = jnp.einsum("bsd,vd->bsv", h, head,
+                        preferred_element_type=jnp.float32)
+    new_cache = {"prefix": tuple(new_prefix), "blocks": new_blocks,
+                 "suffix": tuple(new_suffix)}
+    return logits, new_cache

@@ -1,0 +1,97 @@
+"""Multi-head Latent Attention (DeepSeek-V2): compressed KV cache via low-rank
+joint projection.
+
+Train/prefill path expands K/V from the latent c_kv per token. Decode path
+uses the *absorbed* formulation: W_uk is folded into the query so attention
+scores are taken directly against the (T, kv_lora_rank) latent cache --
+the cache is rank*T instead of 2*H*D*T, which is the technique's point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention, flash_attention, full_attention
+from repro.models.common import apply_rope, init_linear, linear, rms_norm
+
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_linear(ks[0], d, h * (dn + dr), cfg.jdtype),
+        "w_dkv": init_linear(ks[1], d, r, cfg.jdtype),       # down: x -> c_kv
+        "w_krope": init_linear(ks[2], d, dr, cfg.jdtype),    # shared rope key
+        "w_uk": init_linear(ks[3], r, h * dn, cfg.jdtype),   # up: c_kv -> k_nope
+        "w_uv": init_linear(ks[4], r, h * dv, cfg.jdtype),   # up: c_kv -> v
+        "wo": init_linear(ks[5], h * dv, d, cfg.jdtype),
+        "kv_norm": {"scale": jnp.zeros((r,), cfg.jdtype)},
+    }
+
+
+def init_cache_mla(cfg, batch, cache_len, dtype=None):
+    dtype = dtype or cfg.jdtype
+    return {"c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+            "pos_map": jnp.full((cache_len,), -1, jnp.int32)}
+
+
+def _project_q(p, x, cfg):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = linear(p["wq"], x).reshape(b, s, h, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None):
+    b, s, d = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    c_kv = rms_norm(linear(p["w_dkv"], x), p["kv_norm"]["scale"])
+    k_rope = apply_rope(linear(p["w_krope"], x)[:, :, None, :],
+                        positions, theta=cfg.rope_theta)       # (b,s,1,dr)
+
+    if cache is None:
+        # expanded path: materialize per-head K/V from latents
+        k_nope = linear(p["w_uk"], c_kv).reshape(b, s, h, dn)
+        v = linear(p["w_uv"], c_kv).reshape(b, s, h, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))],
+                            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to qk head dim so the shared attention kernels apply
+        attn = full_attention if s <= 1024 else flash_attention
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        o = attn(q, k, vp, causal=True)[..., :dv]
+        out = linear(p["wo"], o.reshape(b, s, h * dv),
+                     packs and packs.get("wo"))
+        return out, None
+
+    # ---- absorbed decode: score against the latent cache ----------------
+    assert s == 1 and pos is not None
+    t = cache["c_kv"].shape[1]
+    slot = pos % t
+    c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, slot, 0))
+    r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope[:, :, 0, :],
+                                           (0, slot, 0))
+    pm = cache["pos_map"].at[slot].set(pos)
+    new_cache = {"c_kv": c_cache, "k_rope": r_cache, "pos_map": pm}
+
+    w_uk = p["w_uk"]["w"].reshape(h, dn, cfg.kv_lora_rank)    # (h, dn, r)
+    q_abs = jnp.einsum("bqhd,hdr->bqhr", q_nope, w_uk)        # (b,1,h,r)
+    s_lat = jnp.einsum("bqhr,btr->bhqt", q_abs.astype(jnp.float32),
+                       c_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,btd->bhqt", q_rope.astype(jnp.float32),
+                        r_cache.astype(jnp.float32))
+    scores = (s_lat + s_rope) * ((dn + dr) ** -0.5)
+    ok = (pm >= 0) & (pm <= pos)
+    scores = jnp.where(ok[None, None, None, :], scores, -1e30)
+    pr = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqt,btr->bqhr", pr, c_cache.astype(jnp.float32))
+    w_uv = p["w_uv"]["w"].reshape(h, dv, cfg.kv_lora_rank)
+    o = jnp.einsum("bqhr,hvr->bqhv", ctx, w_uv).astype(x.dtype)
+    out = linear(p["wo"], o.reshape(b, 1, h * dv), packs and packs.get("wo"))
+    return out, new_cache

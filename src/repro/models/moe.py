@@ -1,0 +1,73 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch (EP-shardable).
+
+Dispatch avoids the O(T*E) one-hot matmul: assignments are argsorted by
+expert id, positioned within their expert segment, and scattered into a
+(E, capacity, d) buffer. All heavy ops are O(T*k*d) gathers/scatters plus the
+expert einsums, and the expert dimension shards cleanly over the "model"
+mesh axis (expert parallelism). Aux load-balancing loss follows Switch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_linear, init_mlp, normal_init
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff_expert or cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {"router": normal_init(ks[0], (d, e), 0.02, jnp.float32),
+         "wi": normal_init(ks[1], (e, d, f), 0.02, cfg.jdtype),
+         "wg": normal_init(ks[2], (e, d, f), 0.02, cfg.jdtype),
+         "wo": normal_init(ks[3], (e, f, d), 0.02, cfg.jdtype)}
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts,
+                               cfg.act, cfg.jdtype)
+    return p
+
+
+def apply_moe(p, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    t, k, e = b * s, cfg.top_k, cfg.n_experts
+    cap = max(1, int(t * k / e * cfg.capacity_factor))
+
+    logits = jnp.einsum("td,de->te", x2.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                       # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = idx.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos_in_seg = jnp.arange(t * k) - seg_start[sorted_e]       # (T*k,)
+    token_src = order // k
+
+    buf = jnp.zeros((e, cap, d), x2.dtype)
+    buf = buf.at[sorted_e, pos_in_seg].set(x2[token_src], mode="drop")
+
+    # ---- expert computation (shards over E) ----------------------------
+    act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+    # ---- combine --------------------------------------------------------
+    y_flat = out.at[sorted_e, pos_in_seg].get(mode="fill", fill_value=0)
+    w_flat = gate.reshape(-1)[order]
+    y = jnp.zeros((t, d), jnp.float32).at[token_src].add(
+        y_flat.astype(jnp.float32) * w_flat[:, None])
+
+    if "shared" in p:
+        from repro.models.common import apply_mlp
+        y = y + apply_mlp(p["shared"], x2, cfg.act).astype(jnp.float32)
+
+    # Switch-style aux loss: E * sum(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_prob) * cfg.router_aux_coef
+    return y.reshape(b, s, d).astype(x.dtype), aux

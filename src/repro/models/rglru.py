@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t)            (recurrence gate)
+    i_t = sigmoid(W_x x_t)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses jax.lax.associative_scan (parallel over sequence); decode
+carries h. The block wraps the LRU with the Griffin recipe: dual linear
+branches (gelu gate), depthwise causal conv width 4 on the recurrent branch.
+Linear in sequence length -> long_500k-capable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_linear, linear, normal_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": init_linear(ks[0], d, w, cfg.jdtype),
+        "in_gate": init_linear(ks[1], d, w, cfg.jdtype),
+        "conv_w": normal_init(ks[2], (cfg.conv_width, w), 0.1, cfg.jdtype),
+        "conv_b": jnp.zeros((w,), cfg.jdtype),
+        "w_a": init_linear(ks[3], w, w, cfg.jdtype),
+        "w_i": init_linear(ks[4], w, w, cfg.jdtype),
+        # Lambda init so a^c in (0.9, 0.999) at r=0.5, griffin-style
+        "lam": normal_init(jax.random.fold_in(key, 7), (w,), 0.5,
+                           jnp.float32) + 4.0,
+        "out": init_linear(ks[5], w, d, cfg.jdtype),
+    }
+
+
+def init_cache_rglru(cfg, batch, dtype=None):
+    w = cfg.rnn_width or cfg.d_model
+    dtype = dtype or cfg.jdtype
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}
+
+
+def _conv(x, w, b):
+    out = jnp.zeros(x.shape, jnp.float32)
+    width = w.shape[0]
+    for i in range(width):
+        sh = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (sh, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _lru_gates(p, xr):
+    r = jax.nn.sigmoid(linear(p["w_a"], xr).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["w_i"], xr).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None] * r      # broadcast over (b,s,w)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * \
+        (i * xr.astype(jnp.float32))
+    return a, gated_in
+
+
+def apply_rglru(p, x, cfg, *, cache=None, pos=None, packs=None, **_):
+    b, s, _ = x.shape
+    gate = jax.nn.gelu(linear(p["in_gate"], x,
+                              packs and packs.get("in_gate")).astype(jnp.float32))
+    xr = linear(p["in_x"], x, packs and packs.get("in_x"))
+
+    if cache is None:
+        xr = _conv(xr, p["conv_w"], p["conv_b"])
+        a, u = _lru_gates(p, xr)
+        # parallel linear recurrence: h_t = a_t h_{t-1} + u_t
+        def combine(c1, c2):
+            a1, u1 = c1
+            a2, u2 = c2
+            return a1 * a2, u1 * a2 + u2
+        aa, hh = jax.lax.associative_scan(combine, (a, u), axis=1)
+        h = hh
+        new_cache = None
+    else:
+        hist = jnp.concatenate([cache["conv"], xr], axis=1)
+        xr = _conv(hist, p["conv_w"], p["conv_b"])[:, -1:]
+        a, u = _lru_gates(p, xr)
+        h = a[:, 0] * cache["h"] + u[:, 0]
+        new_cache = {"h": h, "conv": hist[:, 1:]}
+        h = h[:, None]
+
+    y = (h * gate).astype(x.dtype)
+    return linear(p["out"], y, packs and packs.get("out")), new_cache

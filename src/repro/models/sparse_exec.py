@@ -1,0 +1,132 @@
+"""Export pruned models to BSR serving form (the TVM relay-conversion analogue).
+
+Training keeps dense weights + block masks (core.pruner). Serving packs the
+pruned projections into tile-granular BSR: pattern arrays become static
+(kernel specializations, cached by core.pattern_reuse) and only the tile
+values live in the servable param tree.
+
+For scan-stacked layer groups the per-layer patterns are UNIONED so a single
+specialization serves all periods (values are per-layer, zeros where a layer
+lacks a block). High inter-layer pattern overlap -- which the paper's small-
+block regularization promotes -- keeps the union tight; `union_overhead`
+quantifies the waste, the instrumentation the paper proposes as follow-up.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels.bsr_matmul import KernelBSR, pack_bsr
+
+# projection names exported per mixer/ffn kind
+_ATTN_PROJS = ("wq", "wk", "wv", "wo")
+_FFN_PROJS = ("wi", "wg", "wo")
+
+
+def _tile_mask(w: np.ndarray, tile) -> np.ndarray:
+    n, k = w.shape
+    bn, bk = tile
+    return np.any(w.reshape(n // bn, bn, k // bk, bk) != 0, axis=(1, 3))
+
+
+def pack_stacked(w_stacked: np.ndarray, tile) -> Tuple[KernelBSR, jax.Array, Dict]:
+    """(L, N, K) -> (pattern pack, per-layer data (L, nnzt, bn, bk), stats)."""
+    l, n, k = w_stacked.shape
+    bn, bk = tile
+    masks = np.stack([_tile_mask(w_stacked[i], tile) for i in range(l)])
+    union = masks.any(axis=0)
+    # build the pattern from a dense "ones at union" stand-in
+    proto = np.kron(union.astype(np.float32), np.ones(tile, np.float32))
+    pack = pack_bsr(proto, tile)
+    rows = pack.row_id[: pack.nnzt]
+    cols = pack.col_id
+    blocks = w_stacked.reshape(l, n // bn, bn, k // bk, bk).transpose(0, 1, 3, 2, 4)
+    data = blocks[:, rows, cols]                      # (L, nnzt, bn, bk)
+    per_layer_nnz = masks.sum(axis=(1, 2))
+    stats = {
+        "union_nnzt": int(union.sum()),
+        "mean_layer_nnzt": float(per_layer_nnz.mean()),
+        "union_overhead": float(union.sum() / max(per_layer_nnz.mean(), 1.0)),
+    }
+    return pack, jnp.asarray(data), stats
+
+
+def pack_single(w: np.ndarray, tile) -> Tuple[KernelBSR, jax.Array]:
+    pack = pack_bsr(w, tile)
+    return pack, pack.data
+
+
+def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128)):
+    """Replace attention projections of an LM param tree with packed values.
+
+    Returns (sparse_params, packs, stats): ``packs`` maps layer scopes
+    ('blocks/<i>/<proj>', 'prefix/<i>/<proj>', ...) to static KernelBSR
+    patterns; forward() consumes them via the ``packs=`` argument.
+    """
+    packs: Dict[str, KernelBSR] = {}
+    stats: Dict[str, Dict] = {}
+    new = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy-ish
+
+    def export_attn(layer_params, scope, stacked):
+        if "attn" not in layer_params:
+            return layer_params
+        ap = dict(layer_params["attn"])
+        for proj in _ATTN_PROJS:
+            if proj not in ap:
+                continue
+            w = np.asarray(jax.device_get(ap[proj]["w"]), np.float32)
+            if stacked:
+                if w.shape[1] % tile[0] or w.shape[2] % tile[1]:
+                    continue
+                pack, data, st = pack_stacked(w, tile)
+            else:
+                if w.shape[0] % tile[0] or w.shape[1] % tile[1]:
+                    continue
+                pack, data = pack_single(w, tile)
+                st = {"union_nnzt": pack.nnzt}
+            packs[f"{scope}/{proj}"] = pack
+            stats[f"{scope}/{proj}"] = st
+            ap[proj] = {"w": data.astype(ap[proj]["w"].dtype)}
+        out = dict(layer_params)
+        out["attn"] = ap
+        return out
+
+    new["prefix"] = tuple(export_attn(lp, f"prefix/{i}/attn", False)
+                          for i, lp in enumerate(params["prefix"]))
+    new["blocks"] = tuple(export_attn(lp, f"blocks/{i}/attn", True)
+                          for i, lp in enumerate(params["blocks"]))
+    new["suffix"] = tuple(export_attn(lp, f"suffix/{i}/attn", False)
+                          for i, lp in enumerate(params["suffix"]))
+    return new, packs, stats
+
+
+def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
+                       include_ffn=True):
+    """Per-layer BSR export for the (unrolled) BERT encoder."""
+    packs: Dict[str, KernelBSR] = {}
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        nlp = dict(lp)
+        ap = dict(lp["attn"])
+        for proj in _ATTN_PROJS:
+            w = np.asarray(jax.device_get(ap[proj]["w"]), np.float32)
+            pack, data = pack_single(w, tile)
+            packs[f"layers/{i}/attn/{proj}"] = pack
+            ap[proj] = {"w": data.astype(lp["attn"][proj]["w"].dtype)}
+        nlp["attn"] = ap
+        if include_ffn:
+            fp = dict(lp["ffn"])
+            for proj in ("wi", "wo"):
+                w = np.asarray(jax.device_get(fp[proj]["w"]), np.float32)
+                pack, data = pack_single(w, tile)
+                packs[f"layers/{i}/ffn/{proj}"] = pack
+                fp[proj] = {"w": data.astype(lp["ffn"][proj]["w"].dtype)}
+            nlp["ffn"] = fp
+        new_layers.append(nlp)
+    new = dict(params)
+    new["layers"] = tuple(new_layers)
+    return new, packs

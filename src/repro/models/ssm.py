@@ -1,0 +1,176 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked, attention-free.
+
+Train/prefill: the standard chunked SSD algorithm -- intra-chunk quadratic
+term + inter-chunk state recurrence via lax.scan, O(S * chunk * (P + N))
+instead of O(S^2). Decode: O(1) recurrent state update, which is what makes
+long_500k a bounded-memory cell for this family.
+
+Layout: heads H with head dim P, state size N, one B/C group broadcast to all
+heads (n_groups=1), scalar decay A per head, depthwise causal conv (width 4)
+on the x/B/C stream, z-gated output with D skip -- matching the mamba2 block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_linear, linear, normal_init, rms_norm
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    d_inner, h, p_dim, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n                     # x stream + B + C
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": init_linear(ks[0], d, 2 * d_inner + 2 * n + h, cfg.jdtype),
+        "conv_w": normal_init(ks[1], (cfg.conv_width, conv_dim), 0.1, cfg.jdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.jdtype),
+        "A_log": jnp.zeros((h,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_inner,), cfg.jdtype)},
+        "out_proj": init_linear(ks[2], d_inner, d, cfg.jdtype),
+    }
+
+
+def init_cache_ssm(cfg, batch, dtype=None):
+    d_inner, h, p_dim, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    dtype = dtype or cfg.jdtype
+    return {"state": jnp.zeros((batch, h, p_dim, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype)}
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifts. x: (B,S,C), w: (W,C)."""
+    wdt = x.dtype
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    width = w.shape[0]
+    for i in range(width):
+        sh = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (sh, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(wdt)
+
+
+def _segsum(x):
+    """(..., q) log-decays -> (..., q, q) lower-tri cumulative segment sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    # ss[i, j] = sum_{j < t <= i} x[t]; realized as cs[i] - cs[j]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def _split_proj(zxbcdt, cfg):
+    d_inner, h, p_dim, n = _dims(cfg)
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, x, bmat, cmat, dt
+
+
+def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None, **_):
+    b, s, _ = xin.shape
+    d_inner, h, p_dim, n = _dims(cfg)
+    zxbcdt = linear(p["in_proj"], xin, packs and packs.get("in_proj"))
+    z, x, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
+    if cache is None:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    else:
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)
+        conv_out = _causal_conv(hist, p["conv_w"], p["conv_b"])[:, -1:]
+        new_conv = hist[:, 1:]
+    x, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    xh = x.reshape(b, -1, h, p_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])       # (b,s,h)
+    a_neg = -jnp.exp(p["A_log"])                             # (h,)
+    da = dt * a_neg[None, None, :]                           # log-decay (b,s,h)
+    bmat = bmat.astype(jnp.float32)                          # (b,s,n)
+    cmat = cmat.astype(jnp.float32)
+
+    if cache is None:
+        y = _ssd_chunked(xh, dt, da, bmat, cmat, cfg.ssm_chunk)
+        new_cache = None
+    else:
+        # O(1) recurrent decode step
+        state = cache["state"]                               # (b,h,p,n)
+        decay = jnp.exp(da[:, 0, :])[..., None, None]        # (b,h,1,1)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], bmat[:, 0])
+        state = state * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, cmat[:, 0])
+        y = y.reshape(b, 1, h, p_dim)
+        new_cache = {"state": state, "conv": new_conv}
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, -1, d_inner)
+    y = rms_norm(y.astype(cfg.jdtype), p["norm"]["scale"])
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = linear(p["out_proj"], y, packs and packs.get("out_proj"))
+    return out, new_cache
+
+
+def _ssd_chunked(x, dt, da, bmat, cmat, chunk):
+    """Chunked SSD. x:(b,s,h,p) f32, dt/da:(b,s,h), B/C:(b,s,n)."""
+    b, s, h, p_dim = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    xc = x.reshape(b, nc, q, h, p_dim)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = da.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    da_cum = jnp.cumsum(dac, axis=2)                          # (b,nc,q,h)
+    # intra-chunk (diagonal) term
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))        # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)            # (b,nc,q,k)
+    xdt = xc * dtc[..., None]                                 # (b,nc,q,h,p)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp",
+                        scores, lmat, xdt)
+
+    # per-chunk final states
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)     # (b,nc,q,h)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_to_end, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])                # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp                                          # (b,h,p,n),(b,h)
+        out = carry
+        carry = carry * dec[..., None, None] + st
+        return carry, out
+    init = jnp.zeros((b, h, p_dim, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    # off-diagonal (cross-chunk) contribution
+    decay_from_start = jnp.exp(da_cum)                        # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       cc, prev_states, decay_from_start)
+    y = (y_diag + y_off).reshape(b, nc * q, h, p_dim)
+    return y[:, :s]

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, lr_at
+from repro.optim.compression import (CompressionConfig, compress,
+                                     compressed_allreduce, decompress,
+                                     init_error_buffers)

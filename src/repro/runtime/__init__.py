@@ -1,0 +1,2 @@
+from repro.runtime.fault_tolerance import (FaultInjector, FaultToleranceConfig,
+                                           StragglerMonitor, Supervisor)

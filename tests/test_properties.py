@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (actual_sparsity, bsr_to_dense, dense_to_bsr,
+                        group_prox, prune_to_sparsity, topk_block_mask)
+from repro.core.bsr import row_ids_from_indptr
+from repro.kernels import pack_bsr
+from repro.kernels import ref as kref
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def _sparse_matrix(draw):
+    bh = draw(st.sampled_from([1, 4, 8]))
+    bw = draw(st.sampled_from([1, 8, 16]))
+    nbr = draw(st.integers(1, 6))
+    nbc = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    density = draw(st.floats(0.0, 1.0))
+    rng = np.random.RandomState(seed)
+    w = rng.randn(nbr * bh, nbc * bw).astype(np.float32)
+    mask = rng.rand(nbr, nbc) < density
+    return w * np.kron(mask, np.ones((bh, bw), np.float32)), (bh, bw)
+
+
+@given(_sparse_matrix())
+@settings(**_settings)
+def test_bsr_roundtrip(args):
+    w, bs = args
+    m = dense_to_bsr(w, bs)
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(m)), w)
+
+
+@given(_sparse_matrix())
+@settings(**_settings)
+def test_row_ids_inverse_of_indptr(args):
+    w, bs = args
+    m = dense_to_bsr(w, bs)
+    rows = np.asarray(row_ids_from_indptr(m.indptr, m.nnzb))
+    indptr = np.asarray(m.indptr)
+    for j, r in enumerate(rows):
+        assert indptr[r] <= j < indptr[r + 1]
+
+
+@given(_sparse_matrix(), st.integers(0, 2**31 - 1))
+@settings(**_settings)
+def test_gather_matmul_equals_dense(args, seed):
+    w, bs = args
+    m = dense_to_bsr(w, bs)
+    rng = np.random.RandomState(seed)
+    x = rng.randn(4, w.shape[1]).astype(np.float32)
+    got = np.asarray(kref.bsr_matmul_gather(jnp.asarray(x), m))
+    np.testing.assert_allclose(got, x @ w.T, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.95))
+@settings(**_settings)
+def test_prune_sparsity_monotone_in_target(seed, s):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(64, 64).astype(np.float32))
+    lo, _ = prune_to_sparsity(w, (8, 8), s / 2)
+    hi, _ = prune_to_sparsity(w, (8, 8), s)
+    assert float(actual_sparsity(hi, (8, 8))) >= \
+        float(actual_sparsity(lo, (8, 8))) - 1e-6
+    # pruned support of hi is a subset of lo's zeros' complement
+    lo_nz = np.asarray(lo) != 0
+    hi_nz = np.asarray(hi) != 0
+    assert np.all(lo_nz | ~hi_nz)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 2.0))
+@settings(**_settings)
+def test_group_prox_nonexpansive(seed, t):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(32, 32).astype(np.float32))
+    out = group_prox(w, (8, 8), t)
+    assert float(jnp.linalg.norm(out)) <= float(jnp.linalg.norm(w)) + 1e-5
+
+
+@given(_sparse_matrix())
+@settings(max_examples=15, deadline=None)
+def test_pack_covers_every_row_and_col(args):
+    w, bs = args
+    # pack at the same tile shape (pad shape to tile grid first)
+    pk = pack_bsr(w, bs)
+    rows = set(pk.row_id[: pk.nnzt].tolist())
+    cols = set(pk.col_id.tolist())
+    assert rows == set(range(pk.n_brows))
+    assert cols.issuperset(set()) and all(c < pk.n_bcols for c in cols)
+    # transpose pattern covers every block-col as a row
+    t_rows = set(pk.t_row_id()[:-1].tolist())
+    assert t_rows == set(range(pk.n_bcols))
