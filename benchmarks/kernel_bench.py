@@ -1,12 +1,26 @@
-"""Kernel-level microbenchmark: dense vs masked vs gather-BSR matmul on CPU
-wall-clock across densities, at the BERT projection shape (768x768) and the
-FFN shape (3072x768). Shows where the sparse path's crossover density sits
-on this backend -- the kernel-level version of Table 1.
+"""Kernel-level microbenchmark: dense vs sparse backends on CPU wall-clock
+across densities, at the BERT projection shape (768x768) and the FFN shape
+(3072x768). Shows where each sparse path's crossover density sits on this
+backend -- the kernel-level version of Table 1.
 
-Output CSV: name,us_per_call,derived  (derived = speedup vs dense)
+Backends swept (see src/repro/kernels/ops.py and docs/PERF.md):
+  * gather  -- one gather per stored tile (pure-XLA baseline);
+  * rowpack -- row-grouped batched matmul, data scattered per call;
+  * plan    -- precomputed RowPackPlan, data stored row-grouped offline
+               (the serving path of models/sparse_exec.py).
+
+Besides the default (32, 32) kernel tile, the sweep includes the paper's
+32x1 linear sparsity block at serving densities.
+
+Output CSV: name,us_per_call,derived  (derived = speedup vs dense); the same
+records are persisted to BENCH_kernels.json at the repo root (section
+"kernel") so future PRs have a perf trajectory to compare against.
+
+Run:  PYTHONPATH=src python benchmarks/kernel_bench.py [--smoke] [--no-json]
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -15,44 +29,107 @@ import numpy as np
 
 from repro.core.sparsity import prune_to_sparsity
 from repro.kernels import pack_bsr
+from repro.kernels.exec_plan import (pack_plan_data, plan_for_pack,
+                                     plan_linear)
 from repro.kernels.ops import bsr_linear
+from repro.runtime.bench_io import update_bench_json
 
 SHAPES = [("proj_768", 768, 768), ("ffn_3072", 3072, 768)]
 DENSITIES = (1.0, 0.5, 0.2, 0.1, 0.05)
-M, TILE = 384, (32, 32)
+M = 384
+SQUARE_TILE = (32, 32)
+LINEAR_TILE = (32, 1)          # the paper's end-to-end CPU-optimal block
+LINEAR_DENSITIES = (0.2, 0.1)  # serving regime only (nnzt is large at 32x1)
+BACKENDS = ("gather", "rowpack", "plan")
 
 
-def _time(fn, *args, reps=5):
-    jax.block_until_ready(fn(*args))
-    ts = []
+def _time_group(fns_args, reps=7):
+    """Paired timing: interleave the reps of all contestants round-robin so
+    machine drift (shared cores, thermal) hits every arm equally -- backend
+    *ordering* is then trustworthy even when absolute times wander. Returns
+    min-of-reps per contestant (scheduler noise on a shared box is
+    one-sided: it only slows a run down, so the minimum approximates the
+    quiet-machine time)."""
+    for fn, args in fns_args:
+        jax.block_until_ready(fn(*args))        # compile + warm
+    ts = [[] for _ in fns_args]
     for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+        for i, (fn, args) in enumerate(fns_args):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts[i].append(time.perf_counter() - t0)
+    return [float(np.min(t)) for t in ts]
 
 
-def run(emit=print):
+def _sparse_fn(pk, backend):
+    """Jitted callable + its data argument for one (pattern, backend)."""
+    if backend == "plan":
+        plan = plan_for_pack(pk)
+        data = pack_plan_data(plan, pk.data)
+        return jax.jit(lambda x_, d_, _p=plan: plan_linear(x_, d_, _p)), data
+    return (jax.jit(lambda x_, d_, _pk=pk, _b=backend:
+                    bsr_linear(x_, d_, _pk, _b)), pk.data)
+
+
+def run(emit=print, smoke=False, write_json=True, reps=7):
+    """Sweep backends; returns the record list written to BENCH_kernels.json.
+
+    ``smoke`` restricts to one serving density at the default tile with
+    fewer reps -- the ~30 s CI smoke of scripts/check.sh.
+    """
     rng = np.random.RandomState(0)
-    out = []
+    if smoke:
+        sweeps = [(SQUARE_TILE, (0.2,))]
+        reps = min(reps, 3)
+    else:
+        sweeps = [(SQUARE_TILE, DENSITIES), (LINEAR_TILE, LINEAR_DENSITIES)]
+    records = []
     for name, n, k in SHAPES:
         x = jnp.asarray(rng.randn(M, k).astype(np.float32))
         w = jnp.asarray(rng.randn(n, k).astype(np.float32))
         dense = jax.jit(lambda x_, w_: x_ @ w_.T)
-        t_dense = _time(dense, x, w)
-        emit(f"kernel/{name}_dense,{t_dense*1e6:.1f},1.000")
-        for d in DENSITIES:
-            pruned, _ = prune_to_sparsity(w, TILE, 1.0 - d)
-            pk = pack_bsr(np.asarray(pruned), TILE)
-            for backend in ("gather", "rowpack"):
-                sparse = jax.jit(lambda x_, data, _pk=pk, _b=backend:
-                                 bsr_linear(x_, data, _pk, _b))
-                t_s = _time(sparse, x, pk.data)
-                emit(f"kernel/{name}_{backend}_d{int(d*100):03d},"
-                     f"{t_s*1e6:.1f},{t_dense/t_s:.3f}")
-                out.append((name, backend, d, t_dense, t_s))
-    return out
+        for tile, densities in sweeps:
+            tile_tag = "" if tile == SQUARE_TILE else \
+                f"_t{tile[0]}x{tile[1]}"
+            # at the 32x1 tile nnzt explodes and the gather path would
+            # materialize an (nnzt, M, bn) product (~0.7 GB at the FFN
+            # shape) -- exactly the docs/PERF.md point about aggregating
+            # small sparsity blocks into kernel tiles; sweep the
+            # row-grouped backends only there
+            backends = BACKENDS if tile == SQUARE_TILE else \
+                ("rowpack", "plan")
+            for d in densities:
+                pruned, _ = prune_to_sparsity(w, tile, 1.0 - d)
+                pk = pack_bsr(np.asarray(pruned), tile)
+                # the dense baseline joins every group so each recorded
+                # speedup_vs_dense is a *paired* measurement (machine drift
+                # between groups cannot skew the ratio)
+                arms = [("dense", dense, w)]
+                arms += [(backend,) + _sparse_fn(pk, backend)
+                         for backend in backends]
+                # serving-density arms are fast: buy extra reps there so the
+                # min-of-reps ordering is stable against scheduler noise
+                # (the shared box needs ~30 paired reps to resolve <10% gaps)
+                d_reps = reps if d > 0.2 or smoke else max(reps, 31)
+                times = _time_group([(fn, (x, data))
+                                     for _, fn, data in arms], reps=d_reps)
+                t_dense = times[0]
+                for (backend, _, _), t_s in zip(arms, times):
+                    emit(f"kernel/{name}_{backend}{tile_tag}"
+                         f"_d{int(d*100):03d},{t_s*1e6:.1f},"
+                         f"{t_dense/t_s:.3f}")
+                    records.append({
+                        "shape": name, "n": n, "k": k, "m": M,
+                        "backend": backend, "tile": list(tile),
+                        "density": d, "us": round(t_s * 1e6, 1),
+                        "speedup_vs_dense": round(t_dense / t_s, 3)})
+    if write_json:
+        # the smoke subset must not clobber the full sweep's trajectory
+        section = "kernel_smoke" if smoke else "kernel"
+        path = update_bench_json(section, records)
+        emit(f"# wrote {len(records)} records to {path} [{section}]")
+    return records
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv, write_json="--no-json" not in sys.argv)

@@ -2,10 +2,22 @@
 (110M params) answering batched requests through the block-sparse runtime.
 
 Pipeline: init 110M model -> 80% block pruning at the backend-optimal
-(128,128) tile (see EXPERIMENTS.md §Perf for how that shape was found) ->
-BSR export -> jit'd batched serving loop, dense vs sparse timed side by side.
+(128,128) tile (see docs/PERF.md for how that shape was found) -> BSR export
+with the full exec-plan stack -- precomputed RowPackPlans, fused QKV (one
+block-sparse dispatch per attention layer), and cross-layer union packing so
+all 12 encoder layers share ONE specialization per projection group (the
+paper's §2.2 task-buffer collapse, visible in the printed PatternRegistry
+reuse stats) -> jit'd batched serving loop, dense vs sparse timed side by
+side. Results are merged into BENCH_kernels.json (section "serving").
+
+By default layers are pruned with a *tied* block mask (scores = mean block
+norm across layers), emulating the high inter-layer pattern overlap the
+paper's small-block regularization produces -- that is what keeps the
+cross-layer union tight (union overhead 1.0). Pass --no-tied to prune each
+layer independently and watch the union fill in.
 
 Run:  PYTHONPATH=src python examples/serve_bert_sparse.py [--requests 6]
+          [--no-fused] [--no-union] [--no-tied] [--no-json]
 """
 import argparse
 import time
@@ -15,14 +27,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import SparsityConfig
+from repro.core import PatternRegistry, SparsityConfig
 from repro.core.pruner import oneshot_prune
 from repro.models import bert as bert_mod
 from repro.models import init_model
 from repro.models.sparse_exec import export_bert_sparse
+from repro.runtime.bench_io import update_bench_json
 
 TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "ffn/wi", "ffn/wo")
 SEQ, BATCH = 384, 1
+
+
+def tied_prune(params, tile, sparsity, targets=TARGETS):
+    """Prune every encoder layer with ONE shared block mask per projection
+    (block scores = mean block norm across layers). This is the serving-side
+    stand-in for the inter-layer overlap that small-block regularized
+    training yields (paper §2.2): the cross-layer union adds zero padding."""
+    layers = params["layers"]
+    new_layers = [{**lp, "attn": dict(lp["attn"]), "ffn": dict(lp["ffn"])}
+                  for lp in layers]
+    bh, bw = tile
+    for target in targets:
+        group, proj = target.split("/")
+        ws = np.stack([np.asarray(jax.device_get(lp[group][proj]["w"]),
+                                  np.float32) for lp in layers])
+        l, n, k = ws.shape
+        norms = np.sqrt((ws.reshape(l, n // bh, bh, k // bw, bw) ** 2)
+                        .sum(axis=(2, 4))).mean(axis=0)
+        keep = max(1, int(round(norms.size * (1.0 - sparsity))))
+        thresh = np.partition(norms.ravel(), -keep)[-keep]
+        expand = np.kron((norms >= thresh).astype(np.float32),
+                         np.ones(tile, np.float32))
+        for i, lp in enumerate(layers):
+            dtype = lp[group][proj]["w"].dtype
+            new_layers[i][group][proj] = {
+                "w": jnp.asarray(ws[i] * expand).astype(dtype)}
+    new = dict(params)
+    new["layers"] = tuple(new_layers)
+    return new
 
 
 def main():
@@ -30,20 +72,53 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--sparsity", type=float, default=0.8)
     ap.add_argument("--tile", type=int, default=128)
+    ap.add_argument("--no-fused", action="store_true",
+                    help="three q/k/v dispatches per layer instead of one")
+    ap.add_argument("--no-union", action="store_true",
+                    help="one specialization per layer instead of one shared")
+    ap.add_argument("--no-tied", action="store_true",
+                    help="independent per-layer masks (loose union)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_kernels.json serving section")
     args = ap.parse_args()
+    tile = (args.tile, args.tile)
 
     print("initializing BERT_BASE (110M)...")
     cfg = get_config("bert_base")
     params = init_model(jax.random.PRNGKey(0), cfg)
 
-    sp = SparsityConfig(block_shape=(args.tile, args.tile),
-                        sparsity=args.sparsity, targets=TARGETS)
-    pruned, _ = oneshot_prune(params, sp)
-    sparse_params, packs = export_bert_sparse(pruned, cfg,
-                                              tile=(args.tile, args.tile))
+    if args.no_tied:
+        sp = SparsityConfig(block_shape=tile, sparsity=args.sparsity,
+                            targets=TARGETS)
+        pruned, _ = oneshot_prune(params, sp)
+    else:
+        pruned = tied_prune(params, tile, args.sparsity)
+
+    registry = PatternRegistry()
+    union_stats = {}
+    sparse_params, packs = export_bert_sparse(
+        pruned, cfg, tile=tile, fuse_qkv=not args.no_fused,
+        cross_layer_union=not args.no_union, registry=registry,
+        stats_out=union_stats)
     density = float(np.mean([p.density for p in packs.values()]))
-    print(f"pruned {args.sparsity:.0%} @ {args.tile}x{args.tile}; "
+    n_unique = len({p.fingerprint if hasattr(p, "fingerprint") else id(p)
+                    for p in packs.values()})
+    st = registry.stats
+    print(f"pruned {args.sparsity:.0%} @ {args.tile}x{args.tile} "
+          f"({'tied' if not args.no_tied else 'independent'} masks); "
           f"packed tile density {density:.2f}")
+    print(f"export: {len(packs)} packed projections "
+          f"({'fused QKV' if not args.no_fused else 'unfused'}, "
+          f"{'cross-layer union' if not args.no_union else 'per-layer'})")
+    print(f"pattern reuse: {st.hits} hits / {st.misses} misses "
+          f"(reuse rate {st.reuse_rate:.0%}), {n_unique} unique patterns "
+          f"serve {len(packs)} projections across {cfg.n_layers} layers")
+    union_overhead = None
+    if union_stats:
+        union_overhead = float(np.mean(
+            [s["union_overhead"] for s in union_stats.values()]))
+        print(f"cross-layer union overhead: {union_overhead:.2f}x "
+              f"(union tiles / mean per-layer tiles; 1.0 = perfectly tied)")
 
     dense_fn = jax.jit(lambda p, t: bert_mod.forward(p, cfg, t))
     sparse_fn = jax.jit(lambda p, t: bert_mod.forward(p, cfg, t,
@@ -55,6 +130,7 @@ def main():
     jax.block_until_ready(dense_fn(pruned, reqs[0]))
     jax.block_until_ready(sparse_fn(sparse_params, reqs[0]))
 
+    times = {}
     for name, fn, p in (("dense", dense_fn, pruned),
                         ("BSR", sparse_fn, sparse_params)):
         t0 = time.perf_counter()
@@ -62,11 +138,33 @@ def main():
             out = fn(p, r)
         jax.block_until_ready(out)
         dt = (time.perf_counter() - t0) / args.requests
+        times[name] = dt
         print(f"{name:6s} serving: {dt*1e3:8.1f} ms/request")
 
     d = dense_fn(pruned, reqs[0])
     s = sparse_fn(sparse_params, reqs[0])
-    print(f"parity: max |delta logits| = {float(jnp.max(jnp.abs(d-s))):.2e}")
+    delta = float(jnp.max(jnp.abs(d - s)))
+    print(f"parity: max |delta logits| = {delta:.2e}")
+
+    if not args.no_json:
+        path = update_bench_json("serving", {
+            "model": cfg.arch, "seq": SEQ, "batch": BATCH,
+            "requests": args.requests, "sparsity": args.sparsity,
+            "tile": list(tile), "fused_qkv": not args.no_fused,
+            "cross_layer_union": not args.no_union,
+            "tied_masks": not args.no_tied,
+            "dense_ms_per_request": round(times["dense"] * 1e3, 2),
+            "sparse_ms_per_request": round(times["BSR"] * 1e3, 2),
+            "speedup_vs_dense": round(times["dense"] / times["BSR"], 3),
+            "max_abs_logit_delta": delta,
+            "packed_tile_density": round(density, 4),
+            "union_overhead": (round(union_overhead, 3)
+                               if union_overhead is not None else None),
+            "pattern_reuse": {"hits": st.hits, "misses": st.misses,
+                              "unique_patterns": n_unique,
+                              "packed_projections": len(packs)},
+        })
+        print(f"wrote serving section to {path}")
 
 
 if __name__ == "__main__":

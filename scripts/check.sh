@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 gate + kernel-bench smoke (~30 s): what every PR must keep green.
+#
+#   bash scripts/check.sh
+#
+# 1. the repo's tier-1 test command (ROADMAP.md);
+# 2. a smoke run of the kernel microbenchmark, refreshing the
+#    "kernel_smoke" section of BENCH_kernels.json so perf regressions are
+#    visible in-diff (the full "kernel" sweep is a manual
+#    `python benchmarks/kernel_bench.py` run).
+#
+# The smoke runs even when tests fail (a handful of seed-era failures are
+# known; see CHANGES.md) -- the script exits nonzero if either step did.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+status=0
+
+python -m pytest -x -q || status=$?
+
+python benchmarks/kernel_bench.py --smoke || status=$?
+
+exit $status

@@ -21,7 +21,7 @@ exactly the paper's explanation for the 1x32-beats-1x384 non-monotonicity.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Hashable
 
 import jax
 import numpy as np
@@ -44,32 +44,46 @@ class ReuseStats:
 
 
 class PatternRegistry:
-    """Task buffer mapping sparsity structure -> compiled executable."""
+    """Task buffer mapping sparsity structure -> compiled executable.
+
+    Besides ``specialize`` (BSR -> jitted callable), the registry exposes a
+    generic ``cached(key, builder)`` so other pattern-keyed artifacts -- in
+    particular the precomputed ``RowPackPlan`` execution plans of
+    kernels/exec_plan.py -- share the same task buffer and the same hit/miss
+    instrumentation. One registry therefore answers the paper's introspection
+    question ("how often does the scheduler reuse a task?") for every
+    specialization kind at once.
+    """
 
     def __init__(self):
-        self._cache: Dict[Tuple[int, bytes], Callable] = {}
+        self._cache: Dict[Hashable, Any] = {}
         self.stats = ReuseStats()
+
+    def cached(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        """Generic task lookup: return the cached artifact for ``key``,
+        building (a *miss*, TVM's "new task -> compile") only on first use."""
+        if key in self._cache:
+            self.stats.hits += 1
+            return self._cache[key]
+        self.stats.misses += 1
+        value = builder()
+        self._cache[key] = value
+        return value
 
     def specialize(self, fn: Callable, bsr: BSR) -> Callable:
         """Return ``lambda data, *args: fn(bsr_with(data), *args)`` compiled
         with the pattern held static. Cached by (fn identity, pattern)."""
-        key = (id(fn), pattern_fingerprint(bsr))
-        hit = key in self._cache
-        if hit:
-            self.stats.hits += 1
-            return self._cache[key]
-        self.stats.misses += 1
-
         indices, indptr = bsr.indices, bsr.indptr
         shape, block_shape = bsr.shape, bsr.block_shape
 
-        @jax.jit
-        def specialized(data, *args):
-            m = BSR(data, indices, indptr, shape, block_shape)
-            return fn(m, *args)
+        def build():
+            @jax.jit
+            def specialized(data, *args):
+                m = BSR(data, indices, indptr, shape, block_shape)
+                return fn(m, *args)
+            return specialized
 
-        self._cache[key] = specialized
-        return specialized
+        return self.cached((id(fn), pattern_fingerprint(bsr)), build)
 
     def n_unique_patterns(self) -> int:
         return len(self._cache)

@@ -1,0 +1,312 @@
+"""Precomputed execution plans for block-sparse serving (docs/PERF.md).
+
+SparseRT's lesson (and the paper's TVM task-buffer mechanism, §2.2) is that a
+sparse op should pay for its pattern exactly once, ahead of time. The seed
+``rowpack`` backend violated this twice on the serving hot path:
+
+  * the row-grouped layout (``col_idx``/``slot``) was rebuilt with a Python
+    loop at **every trace** of the op, and
+  * the stored tile values were re-scattered from the packed ``(nnzt, bn, bk)``
+    layout into the row-grouped layout with a ``zeros().at[].set()`` inside
+    **every jitted call** -- pure memory traffic on a path the Sparsity
+    Roofline says is traffic-bound already.
+
+A :class:`RowPackPlan` moves all pattern-dependent work offline. It is frozen
+host metadata (numpy, hashable by pattern fingerprint) computed once at pack
+time; weight values are stored *already row-grouped*, so the per-call path is
+one gather of ``x``, one batched matmul, and (only when the plan spilled
+rows) one segment-sum. Plans are cached through
+``core.pattern_reuse.PatternRegistry`` -- identical patterns (e.g. the 12
+cross-layer-unioned BERT encoder layers) share one plan and, because the plan
+hashes by fingerprint, one compiled executable.
+
+Offline scheduling
+------------------
+``rowpack`` pads every block row to P = max tiles/row, so a skewed pattern
+(binomial row occupancy at serving densities) wastes 1.5-2.5x the real FLOPs
+on padding. Because the plan is built ahead of time it instead *chooses* a
+row capacity P that minimizes total padded slots (subject to a GEMM-
+efficiency floor on the inner dimension P*bk) and spills the overflow tiles
+of heavy rows into extra **virtual rows**; a segment-sum folds virtual rows
+back into their real output rows. For uniform patterns no row spills and the
+schedule degenerates to the seed layout with the scatter removed.
+
+Layout, for a tile-BSR weight ``W (N, K)`` with ``R = N/bn`` block rows,
+``V >= R`` virtual rows and ``P`` slots per virtual row:
+
+  * ``col_idx (V, P)``    -- block-column of the tile in each slot
+                             (0 for padding slots: they multiply zero data);
+  * ``slot_mask (V, P)``  -- True where a real tile lives (grads of padding
+                             slots are forced to zero: pruned blocks stay
+                             dead);
+  * ``row_of_vrow (V,)``  -- owning block row of each virtual row;
+  * data ``(V, P, bn, bk)`` -- tile values, already grouped by virtual row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pattern_reuse import PatternRegistry
+from repro.kernels.bsr_matmul import KernelBSR
+
+# GEMM-efficiency floor for the batched matmul's inner dimension P*bk:
+# below this, small-P schedules degenerate into gather-style batch-1 work.
+_MIN_INNER = 128
+
+
+def kernel_pattern_fingerprint(pack: KernelBSR) -> bytes:
+    """Hashable fingerprint of a KernelBSR *structure* (not values) -- the
+    task-identity key for plan reuse, mirroring core.bsr.pattern_fingerprint."""
+    header = np.array([*pack.shape, *pack.tile, pack.nnzt, pack.real_nnzt],
+                      dtype=np.int64)
+    return (header.tobytes()
+            + np.asarray(pack.row_id, np.int32).tobytes()
+            + np.asarray(pack.col_id, np.int32).tobytes())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RowPackPlan:
+    """Frozen row-grouped execution plan for one sparsity pattern.
+
+    All fields are host numpy / python scalars: the plan is static metadata
+    baked into specializations. Hash/eq go through ``fingerprint`` so plans
+    can key jit caches -- two layers with identical patterns share one
+    executable even if their plan objects differ.
+    """
+
+    col_idx: np.ndarray       # (V, P) int32 block-col per slot
+    slot_mask: np.ndarray     # (V, P) bool, True where a real tile lives
+    row_of_vrow: np.ndarray   # (V,) int32 owning block row of each vrow
+    vrow: np.ndarray          # (real_nnzt,) int32 virtual row of each tile
+    slot: np.ndarray          # (real_nnzt,) int32 slot of each tile
+    shape: Tuple[int, int]    # (N, K)
+    tile: Tuple[int, int]     # (bn, bk)
+    nnzt: int                 # packed tile count incl. padding tiles
+    real_nnzt: int            # stored tiles that are not padding
+    fingerprint: bytes        # kernel_pattern_fingerprint of the source pack
+
+    @property
+    def n_brows(self) -> int:
+        return self.shape[0] // self.tile[0]
+
+    @property
+    def n_bcols(self) -> int:
+        return self.shape[1] // self.tile[1]
+
+    @property
+    def n_vrows(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    @property
+    def p_max(self) -> int:
+        return int(self.col_idx.shape[1])
+
+    @property
+    def spilled(self) -> bool:
+        """True when heavy rows overflowed into virtual rows (the per-call
+        path then folds them back with one segment-sum)."""
+        return self.n_vrows != self.n_brows
+
+    @property
+    def density(self) -> float:
+        return self.real_nnzt / max(1, self.n_brows * self.n_bcols)
+
+    @property
+    def padding_waste(self) -> float:
+        """Total slots / real tiles (1.0 = zero padding) -- the FLOP
+        overhead factor of the schedule (rowpack's fixed max-P layout sits
+        at R*max(c)/nnzt)."""
+        return self.n_vrows * self.p_max / max(1, self.real_nnzt)
+
+    def __hash__(self):
+        return hash(self.fingerprint)
+
+    def __eq__(self, other):
+        return (isinstance(other, RowPackPlan)
+                and self.fingerprint == other.fingerprint)
+
+
+# a spill schedule reassociates row sums and adds segment-sum + batch-count
+# overhead, so it must buy a decisive FLOP reduction to be worth it; below
+# this saving the no-spill layout (strictly cheaper than rowpack: same
+# matmul, no per-call scatter) is kept.
+_SPILL_MIN_SAVING = 0.25
+
+
+def _choose_capacity(counts: np.ndarray, bk: int) -> int:
+    """Pick the per-vrow slot capacity P minimizing total padded slots
+    ``(R + spill_rows(P)) * P``, subject to the inner-dimension floor
+    P*bk >= _MIN_INNER (ties -> larger P: fewer vrows, fewer segment adds)
+    and to the spill schedule saving at least ``_SPILL_MIN_SAVING`` of the
+    no-spill slots.
+
+    Fully offline -- this is the schedule choice SparseRT makes at codegen
+    time and rowpack (fixed P = max(counts)) cannot make at all.
+    """
+    cmax = max(1, int(counts.max()))
+    p_lo = min(cmax, max(1, -(-_MIN_INNER // bk)))
+    cand = np.arange(p_lo, cmax + 1, dtype=np.int64)
+    extra = np.ceil(np.maximum(counts[None, :] - cand[:, None], 0)
+                    / cand[:, None]).sum(axis=1)
+    slots = (len(counts) + extra) * cand
+    best = slots.min()
+    if best > (1.0 - _SPILL_MIN_SAVING) * len(counts) * cmax:
+        return cmax
+    return int(cand[np.nonzero(slots <= best * 1.02)[0][-1]])
+
+
+def build_plan(pack: KernelBSR) -> RowPackPlan:
+    """Derive the spill-scheduled row-grouped layout on host, once.
+
+    Padding tiles (``real_nnzt <= j < nnzt``) are dropped: their data is zero
+    by the pack_bsr contract, so they only wasted a row slot in the seed
+    layout. Replaces the per-trace Python loop of the old ``_rowpack_static``
+    with vectorized numpy.
+    """
+    rows = np.asarray(pack.row_id[: pack.real_nnzt], dtype=np.int64)
+    cols = np.asarray(pack.col_id[: pack.real_nnzt], dtype=np.int64)
+    r = pack.n_brows
+    counts = np.bincount(rows, minlength=r)
+    p = _choose_capacity(counts, pack.tile[1])
+    # rank of each tile within its row (stable, preserves column order)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    order = np.argsort(rows, kind="stable")
+    rank = np.empty(rows.shape[0], np.int64)
+    rank[order] = np.arange(rows.shape[0]) - starts[rows[order]]
+    # spill layout: row r owns vrow r plus ceil((c_r - P)+ / P) extra vrows
+    n_spill = np.ceil(np.maximum(counts - p, 0) / p).astype(np.int64)
+    spill_base = r + np.concatenate([[0], np.cumsum(n_spill)[:-1]])
+    v = int(r + n_spill.sum())
+    chunk = rank // p                      # 0 = home vrow, >=1 = spill chunk
+    vrow = np.where(chunk == 0, rows, spill_base[rows] + chunk - 1)
+    slot = rank % p
+    col_idx = np.zeros((v, p), np.int32)
+    col_idx[vrow, slot] = cols
+    slot_mask = np.zeros((v, p), bool)
+    slot_mask[vrow, slot] = True
+    row_of_vrow = np.empty((v,), np.int64)
+    row_of_vrow[:r] = np.arange(r)
+    for rr in np.nonzero(n_spill)[0]:
+        row_of_vrow[spill_base[rr]: spill_base[rr] + n_spill[rr]] = rr
+    return RowPackPlan(col_idx=col_idx, slot_mask=slot_mask,
+                       row_of_vrow=row_of_vrow.astype(np.int32),
+                       vrow=vrow.astype(np.int32), slot=slot.astype(np.int32),
+                       shape=pack.shape, tile=pack.tile, nnzt=pack.nnzt,
+                       real_nnzt=pack.real_nnzt,
+                       fingerprint=kernel_pattern_fingerprint(pack))
+
+
+# --------------------------------------------------------------------------
+# plan-keyed registry (the task buffer for execution plans)
+# --------------------------------------------------------------------------
+
+_PLAN_REGISTRY = PatternRegistry()
+
+
+def default_plan_registry() -> PatternRegistry:
+    """Process-wide plan task buffer (hit/miss stats included)."""
+    return _PLAN_REGISTRY
+
+
+def plan_for_pack(pack: KernelBSR,
+                  registry: Optional[PatternRegistry] = None) -> RowPackPlan:
+    """Cached plan lookup: identical patterns share one RowPackPlan (and via
+    its fingerprint-hash, one compiled executable downstream)."""
+    reg = registry if registry is not None else _PLAN_REGISTRY
+    fp = kernel_pattern_fingerprint(pack)
+    return reg.cached(("rowpack_plan", fp), lambda: build_plan(pack))
+
+
+# --------------------------------------------------------------------------
+# offline data re-layout (pack time, not call time)
+# --------------------------------------------------------------------------
+
+def pack_plan_data(plan: RowPackPlan, data) -> jax.Array:
+    """(..., nnzt, bn, bk) packed tile values -> (..., V, P, bn, bk)
+    row-grouped values. This is the scatter the seed backend paid on every
+    forward call; here it runs once at export/pack time."""
+    data = jnp.asarray(data)
+    lead = data.shape[:-3]
+    bn, bk = plan.tile
+    d = data.reshape((-1,) + data.shape[-3:])[:, : plan.real_nnzt]
+    out = jnp.zeros((d.shape[0], plan.n_vrows, plan.p_max, bn, bk), d.dtype)
+    out = out.at[:, jnp.asarray(plan.vrow), jnp.asarray(plan.slot)].set(d)
+    return out.reshape(lead + (plan.n_vrows, plan.p_max, bn, bk))
+
+
+def unpack_plan_data(plan: RowPackPlan, data_rp) -> jax.Array:
+    """Inverse re-layout: (..., V, P, bn, bk) -> (..., real_nnzt, bn, bk)."""
+    data_rp = jnp.asarray(data_rp)
+    return data_rp[..., jnp.asarray(plan.vrow), jnp.asarray(plan.slot), :, :]
+
+
+# --------------------------------------------------------------------------
+# the differentiable plan-backed op
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def plan_linear(x, data_rp, plan: RowPackPlan):
+    """Y(M, N) = X(M, K) @ W^T with W given as a plan + row-grouped values.
+
+    The per-call path is pattern-free compute: one gather of ``x`` at static
+    indices, one batched matmul, and a segment-sum only when the plan
+    spilled rows. Differentiable in ``x`` and ``data_rp`` (padding-slot
+    gradients are exactly zero)."""
+    return _plan_fwd_impl(x, data_rp, plan)
+
+
+def _gather_x(x, plan: RowPackPlan):
+    m = x.shape[0]
+    bk = plan.tile[1]
+    return x.reshape(m, plan.shape[1] // bk, bk)[:, jnp.asarray(plan.col_idx)]
+
+
+def _plan_fwd_impl(x, data_rp, plan):
+    m = x.shape[0]
+    xg = _gather_x(x, plan)                               # (M, V, P, bk)
+    y = jnp.einsum("mvpk,vpnk->vmn", xg, data_rp,
+                   preferred_element_type=jnp.float32)    # (V, M, bn)
+    if plan.spilled:
+        y = jax.ops.segment_sum(y, jnp.asarray(plan.row_of_vrow),
+                                num_segments=plan.n_brows)  # (R, M, bn)
+    return y.transpose(1, 0, 2).reshape(m, plan.shape[0]).astype(x.dtype)
+
+
+def _plan_fwd(x, data_rp, plan):
+    return _plan_fwd_impl(x, data_rp, plan), (x, data_rp)
+
+
+def _plan_bwd(plan, res, dy):
+    x, data_rp = res
+    m = x.shape[0]
+    bn, bk = plan.tile
+    dy_v = dy.reshape(m, plan.n_brows, bn)
+    if plan.spilled:
+        dy_v = dy_v[:, jnp.asarray(plan.row_of_vrow)]     # (M, V, bn)
+    xg = _gather_x(x, plan)
+    ddata = jnp.einsum("mvn,mvpk->vpnk", dy_v, xg,
+                       preferred_element_type=jnp.float32)
+    ddata = ddata * jnp.asarray(plan.slot_mask)[:, :, None, None].astype(
+        ddata.dtype)
+    dxg = jnp.einsum("mvn,vpnk->mvpk", dy_v, data_rp,
+                     preferred_element_type=jnp.float32)
+    dx = jnp.zeros((m, plan.shape[1] // bk, bk), dxg.dtype)
+    dx = dx.at[:, jnp.asarray(plan.col_idx)].add(dxg)
+    return (dx.reshape(m, plan.shape[1]).astype(x.dtype),
+            ddata.astype(data_rp.dtype))
+
+
+plan_linear.defvjp(_plan_fwd, _plan_bwd)
+
+
+def plan_matmul(x: jax.Array, data_rp: jax.Array, plan: RowPackPlan):
+    """Batched-x entry point: x (..., K) -> (..., N)."""
+    lead = x.shape[:-1]
+    y = plan_linear(x.reshape(-1, x.shape[-1]), data_rp, plan)
+    return y.reshape(*lead, plan.shape[0])

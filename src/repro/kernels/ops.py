@@ -5,12 +5,25 @@ activations and the stored tile values so sparse *training* works (gradient of
 pruned blocks is exactly zero -- they stay dead).
 
 Backends:
-  * "pallas"  -- the TPU kernels of bsr_matmul.py (interpret=True off-TPU);
-  * "gather"  -- pure-XLA sparse path (ref.bsr_matmul_gather), the measured
-                 CPU fast path (TVM+ analogue in benchmarks/table1);
-  * "ref"     -- densify oracle.
+  * "pallas"  -- the TPU kernels of bsr_matmul.py (interpret=True off-TPU,
+                 which is far too slow to serve from: CPU uses rowpack);
+  * "rowpack" -- row-grouped batched matmul, the measured CPU fast path and
+                 the off-TPU default (TVM+ analogue in benchmarks/table1).
+                 Its static layout (fixed P = max tiles/row) is computed once
+                 per pattern and cached; because ``data`` arrives in the
+                 packed (nnzt, bn, bk) layout, this backend still pays one
+                 scatter-to-row-groups per call;
+  * "gather"  -- pure-XLA sparse path (ref.bsr_matmul_gather): one gather per
+                 stored tile, O(nnzt) scattered traffic -- simple, and the
+                 baseline rowpack overtook (docs/PERF.md);
+  * "ref"     -- densify oracle (correctness reference, not a serving path).
 
-``default_backend()`` picks pallas on TPU, gather elsewhere.
+``default_backend()`` picks pallas on TPU, rowpack elsewhere.
+
+The serving-optimal path is NOT a ``bsr_linear`` backend: store weights
+row-grouped offline and call ``exec_plan.plan_linear`` directly (what
+models/sparse_exec.py exports do). That removes the per-call scatter too --
+see docs/PERF.md for the measured ladder gather -> rowpack -> plan.
 """
 from __future__ import annotations
 
@@ -23,6 +36,7 @@ import numpy as np
 
 from repro.core.bsr import BSR
 from repro.kernels import bsr_matmul as bk
+from repro.kernels import exec_plan as xp
 from repro.kernels import ref as kref
 from repro.kernels.bsr_matmul import KernelBSR, pack_bsr
 
@@ -31,34 +45,49 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "rowpack"
 
 
-def _rowpack_static(pack: KernelBSR):
-    """Static row-grouped layout: (col_idx (R, P), slot (nnzt,), P).
+def _rowpack_layout(pack: KernelBSR):
+    """Static row-grouped layout (col_idx (R, P), slot (nnzt,), P) with the
+    seed semantics: fixed P = max tiles/row, padding tiles included.
 
-    Beyond-paper optimization (EXPERIMENTS.md §Perf iter 1): instead of one
-    gather per stored block (O(M * nnzt * bk) scattered traffic), group
-    blocks by output row, pad to P = max blocks/row, and run ONE batched
-    (R, M, P*bk) x (R, P*bk, bn) matmul. Padding blocks multiply zeros.
+    Vectorized (the seed rebuilt this with a Python loop at every trace) and
+    cached per pattern fingerprint through the plan registry; the adaptive
+    spill-scheduled layout lives in exec_plan.build_plan -- this fixed
+    layout is kept as the measured baseline the plan path is benchmarked
+    against (docs/PERF.md).
     """
-    rows = pack.row_id[: pack.nnzt]
-    r = pack.n_brows
-    counts = np.bincount(rows, minlength=r)
-    p = max(1, int(counts.max()))
-    slot = np.zeros(pack.nnzt, np.int64)
-    seen = np.zeros(r, np.int64)
-    for j, rr in enumerate(rows):
-        slot[j] = seen[rr]
-        seen[rr] += 1
-    col_idx = np.zeros((r, p), np.int64)
-    col_idx[rows, slot] = pack.col_id
-    return col_idx, slot, p
+    def build():
+        rows = np.asarray(pack.row_id[: pack.nnzt], dtype=np.int64)
+        r = pack.n_brows
+        counts = np.bincount(rows, minlength=r)
+        p = max(1, int(counts.max()))
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        order = np.argsort(rows, kind="stable")
+        slot = np.empty(rows.shape[0], np.int64)
+        slot[order] = np.arange(rows.shape[0]) - starts[rows[order]]
+        col_idx = np.zeros((r, p), np.int64)
+        col_idx[rows, slot] = pack.col_id
+        return col_idx, slot, p
+
+    reg = xp.default_plan_registry()
+    key = ("rowpack_layout", xp.kernel_pattern_fingerprint(pack))
+    return reg.cached(key, build)
 
 
 def _rowpack_matmul(x, data, pack: KernelBSR):
+    """Row-grouped matmul (docs/PERF.md §rowpack): instead of one gather per
+    stored block (O(M * nnzt * bk) scattered traffic), group blocks by output
+    row, pad to P = max blocks/row, and run ONE batched
+    (R, M, P*bk) x (R, P*bk, bn) matmul. Padding blocks multiply zeros.
+
+    The data re-layout below runs on every call because this backend's ABI
+    takes ``data`` in the packed (nnzt, bn, bk) layout -- exactly the cost
+    the RowPackPlan serving path moves offline.
+    """
     m = x.shape[0]
     n, k = pack.shape
     bn, bk = pack.tile
     r = pack.n_brows
-    col_idx, slot, p = _rowpack_static(pack)
+    col_idx, slot, p = _rowpack_layout(pack)
     rows = pack.row_id[: pack.nnzt]
     data_rp = jnp.zeros((r, p, bn, bk), data.dtype)
     data_rp = data_rp.at[jnp.asarray(rows), jnp.asarray(slot)].set(data)

@@ -67,7 +67,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
     (out + per-position logsumexp); backward recomputes attention blockwise
     (the FA2 schedule). Without the custom VJP, scan autodiff stacks
     per-chunk probability tensors -- O(S^2) residual memory, which the
-    dry-run showed dominating the HBM roofline term (EXPERIMENTS.md §Perf).
+    dry-run showed dominating the HBM roofline term (docs/PERF.md).
     """
     return _flash(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
                   softcap)
@@ -343,17 +343,32 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
                     packs=None, causal=True, kv_override=None):
     """x: (B,S,d). Returns (out, new_cache). Train/prefill when cache is None.
 
-    kv_override: (k, v) tensors for cross-attention (enc-dec)."""
+    kv_override: (k, v) tensors for cross-attention (enc-dec).
+
+    When the sparse export fused the q/k/v projections (``packs['wqkv']``,
+    models/sparse_exec.py), one block-sparse matmul produces all three --
+    one gather of x and one dispatch per layer instead of three -- and the
+    output is split at the (Hq*D, Hkv*D, Hkv*D) boundaries."""
     from repro.models.common import rms_norm
     b, s, _ = x.shape
     hd = cfg.head_dim
-    q = _split_heads(linear(p["wq"], x, packs and packs.get("wq")),
-                     cfg.n_heads, hd)
+    fused = packs.get("wqkv") if packs else None
+    if fused is not None:
+        assert kv_override is None, "fused QKV export is self-attention only"
+        qkv = linear(p["wqkv"], x, fused)
+        dq, dkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+        q = _split_heads(qkv[..., :dq], cfg.n_heads, hd)
+        k = _split_heads(qkv[..., dq:dq + dkv], cfg.n_kv_heads, hd)
+        v = _split_heads(qkv[..., dq + dkv:], cfg.n_kv_heads, hd)
+    else:
+        q = _split_heads(linear(p["wq"], x, packs and packs.get("wq")),
+                         cfg.n_heads, hd)
     if kv_override is None:
-        k = _split_heads(linear(p["wk"], x, packs and packs.get("wk")),
-                         cfg.n_kv_heads, hd)
-        v = _split_heads(linear(p["wv"], x, packs and packs.get("wv")),
-                         cfg.n_kv_heads, hd)
+        if fused is None:
+            k = _split_heads(linear(p["wk"], x, packs and packs.get("wk")),
+                             cfg.n_kv_heads, hd)
+            v = _split_heads(linear(p["wv"], x, packs and packs.get("wv")),
+                             cfg.n_kv_heads, hd)
     else:
         k, v = kv_override
     if "q_norm" in p:

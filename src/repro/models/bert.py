@@ -7,7 +7,12 @@ so each layer can carry its own BSR pattern for sparse serving, matching the
 paper's per-layer pruning of attention weights.
 
 ``packs`` routes attention/FC projections through the block-sparse kernels --
-this is the TVM+ execution mode; ``packs=None`` is the dense baseline.
+this is the TVM+ execution mode; ``packs=None`` is the dense baseline. The
+pack entries are whatever models/sparse_exec.py exported: per-layer patterns,
+fused-QKV patterns (one dispatch per attention layer), or -- with cross-layer
+union -- one shared RowPackPlan per projection group referenced by all 12
+layer scopes, so the unrolled loop still compiles a single specialization
+per group (docs/PERF.md).
 """
 from __future__ import annotations
 

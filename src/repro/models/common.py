@@ -82,13 +82,19 @@ def init_linear(key, d_in, d_out, dtype=jnp.float32, scale=0.02):
 
 
 def linear(p, x, pack=None, backend=None):
-    """Dense or BSR-backed projection.
+    """Dense or block-sparse projection.
 
-    ``pack`` is a static KernelBSR pattern (from models.sparse_exec); when
-    provided, ``p['w']`` holds the packed tile values (nnzt, bn, bk) instead
-    of the dense matrix and the paper's sparse kernel executes the matmul.
+    ``pack`` is static pattern metadata (from models.sparse_exec), either:
+      * a ``RowPackPlan`` -- ``p['w']`` holds row-grouped values
+        (R, P, bn, bk) and the precomputed-plan fast path executes
+        (kernels/exec_plan.py; no per-call pattern work at all), or
+      * a ``KernelBSR`` -- ``p['w']`` holds packed tile values (nnzt, bn, bk)
+        and the matmul dispatches through ``bsr_linear``'s backends.
     """
     if pack is not None:
+        from repro.kernels.exec_plan import RowPackPlan, plan_matmul
+        if isinstance(pack, RowPackPlan):
+            return plan_matmul(x, p["w"], pack)
         from repro.kernels.ops import bsr_matmul  # local import, cycle-free
         from repro.kernels.bsr_matmul import KernelBSR
         kb = KernelBSR(p["w"], pack.row_id, pack.col_id, pack.t_perm,

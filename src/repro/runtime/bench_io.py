@@ -1,0 +1,46 @@
+"""Machine-readable benchmark persistence (BENCH_kernels.json).
+
+Benchmarks and serving demos merge their sections into one JSON file at the
+repo root so successive PRs have a perf trajectory to compare against
+(docs/PERF.md documents the schema). Sections are replaced wholesale by the
+producer that owns them; unrelated sections are preserved.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict
+
+
+def repo_root() -> str:
+    """Repo root inferred from this file's location (src/repro/runtime/..)."""
+    return os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+
+
+def default_bench_path() -> str:
+    return os.path.join(repo_root(), "BENCH_kernels.json")
+
+
+def update_bench_json(section: str, payload: Any,
+                      path: str | None = None) -> str:
+    """Merge ``{section: payload}`` into the bench JSON file; returns path."""
+    path = path or default_bench_path()
+    data: Dict[str, Any] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict):
+                data = loaded
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data[section] = payload
+    meta = data.setdefault("meta", {})
+    meta["updated"] = time.strftime("%Y-%m-%dT%H:%M:%S")
+    meta.setdefault("schema", 1)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -1,0 +1,214 @@
+"""Exec-plan layer: RowPackPlan parity with the rowpack backend (fwd + bwd,
+incl. padded nnzt), fused-QKV parity with unfused dispatch, cross-layer
+union export parity, and plan-registry reuse accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PatternRegistry, SparsityConfig
+from repro.core.pruner import oneshot_prune
+from repro.configs.registry import get_config
+from repro.kernels import pack_bsr
+from repro.kernels.exec_plan import (build_plan, pack_plan_data,
+                                     plan_for_pack, plan_linear, plan_matmul,
+                                     unpack_plan_data)
+from repro.kernels.ops import bsr_linear
+from repro.models import bert as bert_mod
+from repro.models import init_model
+
+RNG = np.random.RandomState(0)
+_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "ffn/wi", "ffn/wo")
+
+
+def _sparse_weight(rng, n, k, tile, density):
+    w = rng.randn(n, k).astype(np.float32)
+    mask = rng.rand(n // tile[0], k // tile[1]) < density
+    return w * np.kron(mask, np.ones(tile, np.float32))
+
+
+# --------------------------------------------------------------------------
+# RowPackPlan vs the rowpack backend
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pad_tiles", [0, 7])
+def test_plan_matches_rowpack_fwd_bwd(pad_tiles):
+    """Plan forward/backward == rowpack backend, including the padded-nnzt
+    case (real_nnzt < nnzt): padding carries zero data and zero grads."""
+    rng = np.random.RandomState(1)
+    n, k, m, tile = 128, 256, 32, (32, 64)
+    w = _sparse_weight(rng, n, k, tile, 0.4)
+    x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    real = int(np.any(
+        w.reshape(n // tile[0], tile[0], k // tile[1], tile[1]) != 0,
+        axis=(1, 3)).sum())
+    pk = pack_bsr(w, tile, nnzt=real + pad_tiles)
+    assert pk.real_nnzt == real and pk.nnzt == real + pad_tiles
+
+    plan = build_plan(pk)
+    data_rp = pack_plan_data(plan, pk.data)
+    y_plan = plan_linear(x, data_rp, plan)
+    y_rp = bsr_linear(x, pk.data, pk, "rowpack")
+    # spill scheduling may reassociate the per-row sums -> allclose, not ==
+    np.testing.assert_allclose(np.asarray(y_plan), np.asarray(y_rp),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_plan),
+                               np.asarray(x) @ w.T, rtol=1e-4, atol=1e-4)
+
+    gx_p, gd_p = jax.grad(
+        lambda x_, d_: jnp.sum(plan_linear(x_, d_, plan) ** 2),
+        argnums=(0, 1))(x, data_rp)
+    gx_r, gd_r = jax.grad(
+        lambda x_, d_: jnp.sum(bsr_linear(x_, d_, pk, "rowpack") ** 2),
+        argnums=(0, 1))(x, pk.data)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_r),
+                               rtol=1e-4, atol=1e-3)
+    # value grads agree on real tiles after inverting the row-grouping
+    np.testing.assert_allclose(np.asarray(unpack_plan_data(plan, gd_p)),
+                               np.asarray(gd_r[:real]), rtol=1e-4, atol=1e-3)
+    # padding (slots and tiles) must stay exactly dead
+    dead = np.asarray(jnp.where(
+        jnp.asarray(plan.slot_mask)[:, :, None, None], 0.0, gd_p))
+    assert float(np.abs(dead).max()) == 0.0
+    if pad_tiles:
+        assert float(jnp.abs(gd_r[real:]).max()) == 0.0
+
+
+def test_plan_spill_schedule_correct():
+    """A deliberately skewed pattern (one dense row, rest sparse) forces the
+    offline scheduler to spill: V > R, fewer padded slots than rowpack's
+    fixed max-P layout, and the segment-sum path stays exact."""
+    rng = np.random.RandomState(7)
+    n, k, m, tile = 256, 512, 24, (32, 32)
+    w = np.zeros((n, k), np.float32)
+    w[:32] = rng.randn(32, k)                       # row 0: all 16 tiles
+    mask = rng.rand(n // 32, k // 32) < 0.15        # other rows: sparse
+    mask[0] = True
+    w2 = rng.randn(n, k).astype(np.float32) * np.kron(
+        mask, np.ones(tile, np.float32))
+    w2[:32] = w[:32]
+    pk = pack_bsr(w2, tile)
+    plan = build_plan(pk)
+    assert plan.spilled and plan.n_vrows > plan.n_brows
+    counts_max = 16                                 # rowpack pads all rows to
+    assert plan.n_vrows * plan.p_max < pk.n_brows * counts_max
+    x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    y = plan_linear(x, pack_plan_data(plan, pk.data), plan)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ w2.T,
+                               rtol=1e-4, atol=1e-4)
+    gx, gd = jax.grad(
+        lambda x_, d_: jnp.sum(plan_linear(x_, d_, plan) ** 2),
+        argnums=(0, 1))(x, pack_plan_data(plan, pk.data))
+    gx_ref = jax.grad(
+        lambda x_: jnp.sum((x_ @ jnp.asarray(w2).T) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                               rtol=1e-3, atol=1e-2)
+    dead = np.asarray(jnp.where(
+        jnp.asarray(plan.slot_mask)[:, :, None, None], 0.0, gd))
+    assert float(np.abs(dead).max()) == 0.0
+
+
+def test_plan_matmul_batched_leading_dims():
+    rng = np.random.RandomState(2)
+    n, k, tile = 64, 64, (16, 16)
+    w = _sparse_weight(rng, n, k, tile, 0.5)
+    pk = pack_bsr(w, tile)
+    plan = build_plan(pk)
+    data_rp = pack_plan_data(plan, pk.data)
+    x = jnp.asarray(rng.randn(2, 5, k).astype(np.float32))
+    y = plan_matmul(x, data_rp, plan)
+    assert y.shape == (2, 5, n)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x) @ w.T, rtol=1e-4, atol=1e-4)
+
+
+def test_plan_registry_reuse_and_fingerprint():
+    """Identical patterns -> one plan (hit); plan hash/eq by fingerprint so
+    jit caches key on the pattern, not the object identity."""
+    rng = np.random.RandomState(3)
+    tile = (16, 16)
+    w = _sparse_weight(rng, 64, 64, tile, 0.5)
+    reg = PatternRegistry()
+    p1 = plan_for_pack(pack_bsr(w, tile), registry=reg)
+    p2 = plan_for_pack(pack_bsr(w, tile), registry=reg)
+    assert p1 is p2
+    assert reg.stats.misses == 1 and reg.stats.hits == 1
+    assert build_plan(pack_bsr(w, tile)) == p1       # eq via fingerprint
+    assert hash(build_plan(pack_bsr(w, tile))) == hash(p1)
+    w2 = _sparse_weight(rng, 64, 64, tile, 0.5)
+    p3 = plan_for_pack(pack_bsr(w2, tile), registry=reg)
+    assert p3 is not p1 and reg.stats.misses == 2
+
+
+# --------------------------------------------------------------------------
+# fused QKV dispatch
+# --------------------------------------------------------------------------
+
+def test_fused_qkv_matches_three_unfused_calls():
+    """One fused (3N, K) BSR matmul == three unfused bsr_linear calls."""
+    rng = np.random.RandomState(4)
+    n, k, m, tile = 64, 128, 16, (16, 16)
+    ws = [_sparse_weight(rng, n, k, tile, 0.4) for _ in range(3)]
+    x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    outs = []
+    for w in ws:
+        pk = pack_bsr(w, tile)
+        outs.append(bsr_linear(x, pk.data, pk, "rowpack"))
+    unfused = jnp.concatenate(outs, axis=1)
+
+    pk_f = pack_bsr(np.concatenate(ws, axis=0), tile)
+    plan = build_plan(pk_f)
+    fused = plan_linear(x, pack_plan_data(plan, pk_f.data), plan)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _pruned_smoke_bert(sparsity=0.75, tile=(16, 16)):
+    cfg = get_config("bert_base", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    sp = SparsityConfig(block_shape=tile, sparsity=sparsity, targets=_TARGETS)
+    pruned, _ = oneshot_prune(params, sp)
+    return cfg, pruned
+
+
+def test_bert_fused_export_matches_unfused():
+    from repro.models.sparse_exec import export_bert_sparse
+    cfg, pruned = _pruned_smoke_bert()
+    toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 24)))
+    p_f, packs_f = export_bert_sparse(pruned, cfg, tile=(16, 16),
+                                      fuse_qkv=True)
+    p_u, packs_u = export_bert_sparse(pruned, cfg, tile=(16, 16),
+                                      fuse_qkv=False)
+    assert any(key.endswith("/wqkv") for key in packs_f)
+    assert all(not key.endswith("/wqkv") for key in packs_u)
+    out_f = bert_mod.forward(p_f, cfg, toks, packs=packs_f)
+    out_u = bert_mod.forward(p_u, cfg, toks, packs=packs_u)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_u),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# cross-layer union export
+# --------------------------------------------------------------------------
+
+def test_bert_union_export_matches_per_layer():
+    """Unioned export logits == per-layer export logits; all layers share
+    one specialization per projection group (L-1 hits each)."""
+    from repro.models.sparse_exec import export_bert_sparse
+    cfg, pruned = _pruned_smoke_bert()
+    toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 24)))
+    reg = PatternRegistry()
+    p_un, packs_un = export_bert_sparse(pruned, cfg, tile=(16, 16),
+                                        cross_layer_union=True, registry=reg)
+    p_pl, packs_pl = export_bert_sparse(pruned, cfg, tile=(16, 16),
+                                        cross_layer_union=False)
+    out_un = bert_mod.forward(p_un, cfg, toks, packs=packs_un)
+    out_pl = bert_mod.forward(p_pl, cfg, toks, packs=packs_pl)
+    np.testing.assert_allclose(np.asarray(out_un), np.asarray(out_pl),
+                               rtol=1e-4, atol=1e-4)
+
+    n_groups = 4                                # wqkv, attn/wo, ffn/wi, ffn/wo
+    assert len(packs_un) == cfg.n_layers * n_groups
+    assert len({p.fingerprint for p in packs_un.values()}) == n_groups
+    assert reg.stats.misses == n_groups
+    assert reg.stats.hits == (cfg.n_layers - 1) * n_groups

@@ -1,4 +1,10 @@
 """Hypothesis property tests on system invariants."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
