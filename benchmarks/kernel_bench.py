@@ -7,7 +7,7 @@ Backends swept (see src/repro/kernels/ops.py and docs/PERF.md):
   * gather  -- one gather per stored tile (pure-XLA baseline);
   * rowpack -- row-grouped batched matmul, data scattered per call;
   * plan    -- precomputed RowPackPlan, data stored row-grouped offline
-               (the serving path of models/sparse_exec.py).
+               (the serving path of repro/serving/export.py).
 
 Besides the default (32, 32) kernel tile, the sweep includes the paper's
 32x1 linear sparsity block at serving densities.

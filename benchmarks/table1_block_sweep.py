@@ -31,7 +31,7 @@ from repro.core.sparsity import SparsityConfig
 from repro.core.pruner import oneshot_prune
 from repro.models import bert as bert_mod
 from repro.models import init_model
-from repro.models.sparse_exec import export_bert_sparse
+from repro.serving import ServingSpec, prepare_servable
 
 SEQ, BATCH, SPARSITY = 384, 1, 0.8
 BLOCK_SHAPES = [
@@ -87,14 +87,14 @@ def run(reps=3, emit=lambda s: print(s, flush=True)):
         pruned, _ = oneshot_prune(params, sp)
         # negative control: pruned weights, dense execution
         t_masked, _ = _time(dense_fn, pruned, toks, reps=reps)
-        # TVM+ analogue: BSR execution; kernel tile == sparsity block,
-        # except irregular which is packed at the default (32,32) tile
+        # TVM+ analogue: BSR execution via the serving facade; kernel tile ==
+        # sparsity block, except irregular which is packed at (32,32)
         tile = bs if bs != (1, 1) else (32, 32)
-        sparse_params, packs = export_bert_sparse(pruned, cfg, tile=tile)
-        density = float(np.mean([p.density for p in packs.values()]))
-        bsr_fn = jax.jit(lambda p, t, _packs=packs: bert_mod.forward(
-            p, cfg, t, packs=_packs))
-        t_bsr, s_bsr = _time(bsr_fn, sparse_params, toks, reps=reps)
+        servable = prepare_servable(
+            pruned, cfg, ServingSpec(tile=tile, prune="none",
+                                     cross_layer_union=False))
+        density = servable.stats()["density"]
+        t_bsr, s_bsr = _time(servable.forward, toks, reps=reps)
         ratio = t_bsr / t_dense
         uniq = count_unique_intrablock_patterns(
             np.asarray(pruned["layers"][0]["attn"]["wq"]["w"]), bs)

@@ -1,27 +1,24 @@
-"""Quickstart: the paper's algorithm->compilation co-design flow in 60 lines.
+"""Quickstart: the paper's algorithm->compilation co-design flow in 50 lines.
 
-  1. take a BERT encoder, block-prune its attention + FC weights (80%)
-  2. export to BSR (SciPy-style data/indices/indptr, tile-packed)
+  1. take a BERT encoder, declare the co-design as ONE ServingSpec
+     (block pruning recipe + tile + fusion/union + backend)
+  2. prepare_servable runs prune -> BSR export -> exec plans -> registry
   3. serve through the block-sparse kernels; verify parity with dense
-  4. inspect the pattern-reuse ("task scheduler") statistics
+  4. inspect stats(): density, union overhead, pattern reuse
+  5. save / load_servable: export cost is paid once per model
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import time
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import PatternRegistry, SparsityConfig
-from repro.core.bsr import dense_to_bsr
-from repro.core.pruner import oneshot_prune, sparsity_report
-from repro.models import bert as bert_mod
-from repro.models import init_model
-from repro.models.sparse_exec import export_bert_sparse
-
-TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "ffn/wi", "ffn/wo")
+from repro.core.pruner import sparsity_report, tied_prune
+from repro.models import init_model, model_forward
+from repro.serving import ServingSpec, load_servable, prepare_servable
 
 
 def main():
@@ -30,32 +27,37 @@ def main():
     toks = jnp.asarray(np.random.RandomState(0).randint(
         0, cfg.vocab_size, (4, 48)))
 
-    # 1. structured pruning (paper Eq. 3: block-grouped norm, magnitude rule)
-    sp = SparsityConfig(block_shape=(16, 16), sparsity=0.8, targets=TARGETS)
-    pruned, masks = oneshot_prune(params, sp)
+    # 1. + 2. one spec, one call (paper Eq. 3 pruning + TVM-analogue export).
+    # We prune outside the facade (prune='none') only because step 3's dense
+    # parity check needs the pruned dense tree too; prune='tied' would run
+    # the same recipe inside prepare_servable.
+    spec = ServingSpec(tile=(16, 16), sparsity=0.8, prune="none")
+    pruned, _ = tied_prune(params, spec.sparsity_config())
+    servable = prepare_servable(pruned, cfg, spec)
+
     print("per-weight block sparsity:",
-          {k.split('/')[-2]: round(v, 2)
-           for k, v in list(sparsity_report(pruned, sp).items())[:4]})
+          {k.split('/')[-2]: round(v, 2) for k, v in
+           list(sparsity_report(pruned, spec.sparsity_config()).items())[:4]})
 
-    # 2. BSR export (the TVM-relay-conversion analogue)
-    sparse_params, packs = export_bert_sparse(pruned, cfg, tile=(16, 16))
-    print(f"exported {len(packs)} BSR weights, "
-          f"mean tile density {np.mean([p.density for p in packs.values()]):.2f}")
-
-    # 3. sparse serving parity
-    dense_out = bert_mod.forward(pruned, cfg, toks)
-    sparse_out = bert_mod.forward(sparse_params, cfg, toks, packs=packs)
+    # 3. sparse serving parity vs dense execution of the same pruned weights
+    dense_out, _ = model_forward(pruned, cfg, {"tokens": toks})
+    sparse_out = servable.forward(toks)
     err = float(jnp.max(jnp.abs(dense_out - sparse_out)))
     print(f"dense-vs-BSR max |delta logits| = {err:.2e}")
 
-    # 4. pattern reuse: identical layer patterns compile once
-    reg = PatternRegistry()
-    fn = lambda m: m.data.sum()
-    for lp in pruned["layers"]:
-        w = np.asarray(lp["attn"]["wq"]["w"], np.float32)
-        reg.specialize(fn, dense_to_bsr(w, (16, 16)))
-    print(f"task buffer: {reg.stats.misses} compilations, "
-          f"{reg.stats.hits} reuses across {len(pruned['layers'])} layers")
+    # 4. the co-design scorecard
+    st = servable.stats()
+    print(f"stats: density {st['density']:.2f}, union overhead "
+          f"{st['union_overhead']:.2f}x, {st['unique_patterns']} unique "
+          f"patterns for {st['packed_projections']} projections, registry "
+          f"{st['registry']['hits']} hits / {st['registry']['misses']} misses")
+
+    # 5. persistence: serve again without re-running the export
+    with tempfile.TemporaryDirectory() as ckpt:
+        servable.save(ckpt)
+        reloaded = load_servable(ckpt)
+        err = float(jnp.max(jnp.abs(reloaded.forward(toks) - sparse_out)))
+        print(f"save -> load_servable round-trip delta = {err:.2e}")
 
 
 if __name__ == "__main__":

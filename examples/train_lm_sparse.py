@@ -1,6 +1,8 @@
 """Fault-tolerant sparse training driver: a decoder LM trained with gradual
 block pruning + group-lasso prox, an injected mid-run failure, automatic
-checkpoint restore, and a final BSR export -- the whole substrate in one run.
+checkpoint restore, and a final handoff to the serving facade
+(``prepare_servable`` with ``prune='none'``: the trained masks ARE the
+sparsity) -- the whole substrate in one run.
 
 Run:  PYTHONPATH=src python examples/train_lm_sparse.py [--steps 60]
 """
@@ -10,15 +12,14 @@ import logging
 import tempfile
 
 import jax
-import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core.pruner import sparsity_report
 from repro.core.sparsity import SparsityConfig
 from repro.data.pipeline import DataConfig
 from repro.launch.train import TrainConfig, Trainer
-from repro.models.sparse_exec import export_lm_sparse
 from repro.optim.adamw import AdamWConfig
+from repro.serving import ServingSpec, prepare_servable
 from repro.runtime.fault_tolerance import FaultInjector, FaultToleranceConfig
 
 logging.basicConfig(level=logging.INFO,
@@ -55,12 +56,11 @@ def main():
     print("final attention block sparsity:",
           {k.split('/')[-2]: round(v, 2) for k, v in list(rep.items())[:4]})
 
-    sparse_params, packs, stats = export_lm_sparse(state["params"], cfg,
-                                                   tile=(16, 16))
-    dens = [p.density for p in packs.values()]
-    print(f"BSR export: {len(packs)} weights, mean density "
-          f"{np.mean(dens):.2f}, union overhead "
-          f"{np.mean([s['union_overhead'] for s in stats.values() if 'union_overhead' in s]):.2f}")
+    servable = prepare_servable(state["params"], cfg,
+                                ServingSpec(tile=(16, 16), prune="none"))
+    st = servable.stats()
+    print(f"BSR export: {st['packed_projections']} weights, mean density "
+          f"{st['density']:.2f}, union overhead {st['union_overhead']:.2f}")
 
 
 if __name__ == "__main__":

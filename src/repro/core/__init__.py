@@ -5,7 +5,8 @@ from repro.core.pattern_reuse import (PatternRegistry, ReuseStats,
                                       count_unique_intrablock_patterns,
                                       pattern_similarity)
 from repro.core.pruner import (apply_masks, cubic_sparsity, init_masks,
-                               oneshot_prune, sparsity_report, update_masks)
+                               oneshot_prune, sparsity_report, tie_group,
+                               tied_prune, update_masks)
 from repro.core.regularizer import (group_penalty, group_prox, l1_prox,
                                     tree_group_penalty)
 from repro.core.sparsity import (SparsityConfig, actual_sparsity,

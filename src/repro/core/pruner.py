@@ -110,6 +110,72 @@ def oneshot_prune(params, cfg: SparsityConfig):
     return pruned, masks
 
 
+def tie_group(name: str) -> str:
+    """Tie key of a param path: layer indices are wildcarded so all layers of
+    a stack score against one shared mask ('layers/[3]/attn/wq/w' and
+    'layers/[7]/attn/wq/w' -> 'layers/*/attn/wq/w'; tuple indices render as
+    '[i]', dict keys that are digits as 'i')."""
+    return "/".join("*" if tok.strip("[]").isdigit() else tok
+                    for tok in name.split("/"))
+
+
+def tied_prune(params, cfg: SparsityConfig):
+    """One-shot prune with ONE block mask shared across all layers of each
+    projection group. Returns (params, masks) like :func:`oneshot_prune`.
+
+    Block scores are the mean block norm across the group's members (and, for
+    scan-stacked 3-D leaves, across the leading layer axis). This is the
+    serving-side stand-in for the high inter-layer pattern overlap that the
+    paper's small-block regularized training yields (§2.2): with tied masks
+    the cross-layer union pack of ``repro.serving`` adds zero padding
+    (``union_overhead`` = 1.0). Members whose shape differs from the rest of
+    their group fall back to an independent mask.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names = [_path_name(path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+
+    # group prunable leaves by wildcarded path (same 2-D shape required)
+    groups: Dict[str, list] = {}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        if _prunable(cfg, name, leaf):
+            groups.setdefault(tie_group(name), []).append(i)
+    for key in list(groups):
+        shapes = {leaves[i].shape[-2:] for i in groups[key]}
+        if len(shapes) > 1:      # heterogeneous group: untie its members
+            for i in groups.pop(key):
+                groups[names[i]] = [i]
+
+    from repro.core.sparsity import block_norms
+
+    def member_norms(leaf):
+        """(nbr, nbc) block scores; stacked 3-D leaves mean over layers."""
+        n = _vmap2d(lambda l: block_norms(l.astype(jnp.float32),
+                                          cfg.block_shape,
+                                          cfg.group_norm_ord), leaf)
+        return n if leaf.ndim == 2 else jnp.mean(n, axis=0)
+
+    new_leaves = list(leaves)
+    mask_leaves = [None] * len(leaves)
+    for idxs in groups.values():
+        norms = jnp.mean(jnp.stack([member_norms(leaves[i]) for i in idxs]),
+                         axis=0)
+        keep = max(1, int(round(norms.size * (1.0 - cfg.sparsity))))
+        _, keep_idx = jax.lax.top_k(norms.reshape(-1), keep)
+        mask = jnp.zeros((norms.size,), bool).at[keep_idx].set(True)
+        mask = mask.reshape(norms.shape)
+        expand = expand_block_mask(mask, cfg.block_shape).astype(jnp.float32)
+        for i in idxs:
+            leaf = leaves[i]
+            new_leaves[i] = (leaf.astype(jnp.float32) * expand).astype(
+                leaf.dtype)
+            mask_leaves[i] = (mask if leaf.ndim == 2 else jnp.broadcast_to(
+                mask, leaf.shape[:-2] + mask.shape))
+    pruned = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    masks = jax.tree_util.tree_unflatten(treedef, mask_leaves)
+    return pruned, masks
+
+
 def sparsity_report(params, cfg: SparsityConfig) -> Dict[str, float]:
     """Per-target actual block sparsity (for logging / EXPERIMENTS.md)."""
     from repro.core.sparsity import actual_sparsity

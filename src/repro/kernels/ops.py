@@ -21,8 +21,8 @@ Backends:
 ``default_backend()`` picks pallas on TPU, rowpack elsewhere.
 
 The serving-optimal path is NOT a ``bsr_linear`` backend: store weights
-row-grouped offline and call ``exec_plan.plan_linear`` directly (what
-models/sparse_exec.py exports do). That removes the per-call scatter too --
+row-grouped offline and call ``exec_plan.plan_linear`` directly (what the
+repro.serving exports do). That removes the per-call scatter too --
 see docs/PERF.md for the measured ladder gather -> rowpack -> plan.
 """
 from __future__ import annotations

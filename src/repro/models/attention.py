@@ -346,7 +346,7 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
     kv_override: (k, v) tensors for cross-attention (enc-dec).
 
     When the sparse export fused the q/k/v projections (``packs['wqkv']``,
-    models/sparse_exec.py), one block-sparse matmul produces all three --
+    repro/serving/export.py), one block-sparse matmul produces all three --
     one gather of x and one dispatch per layer instead of three -- and the
     output is split at the (Hq*D, Hkv*D, Hkv*D) boundaries."""
     from repro.models.common import rms_norm

@@ -8,7 +8,7 @@ paper's per-layer pruning of attention weights.
 
 ``packs`` routes attention/FC projections through the block-sparse kernels --
 this is the TVM+ execution mode; ``packs=None`` is the dense baseline. The
-pack entries are whatever models/sparse_exec.py exported: per-layer patterns,
+pack entries are whatever repro/serving/export.py exported: per-layer patterns,
 fused-QKV patterns (one dispatch per attention layer), or -- with cross-layer
 union -- one shared RowPackPlan per projection group referenced by all 12
 layer scopes, so the unrolled loop still compiles a single specialization

@@ -84,7 +84,7 @@ def init_linear(key, d_in, d_out, dtype=jnp.float32, scale=0.02):
 def linear(p, x, pack=None, backend=None):
     """Dense or block-sparse projection.
 
-    ``pack`` is static pattern metadata (from models.sparse_exec), either:
+    ``pack`` is static pattern metadata (from repro.serving.export), either:
       * a ``RowPackPlan`` -- ``p['w']`` holds row-grouped values
         (R, P, bn, bk) and the precomputed-plan fast path executes
         (kernels/exec_plan.py; no per-call pattern work at all), or

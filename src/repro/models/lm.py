@@ -8,8 +8,9 @@ while still expressing per-layer heterogeneity (gemma3 5:1 local:global,
 recurrentgemma 1:2 attn:recurrent) with static layer kinds.
 
 The paper's technique is first-class: when serving params are exported via
-models.sparse_exec, attention/mixer projections route through the BSR kernels
-(pattern static + per-layer packed values scanned).
+the repro.serving facade (prepare_servable / serving.export), attention and
+mixer projections route through the BSR kernels (pattern static + per-layer
+packed values scanned).
 """
 from __future__ import annotations
 

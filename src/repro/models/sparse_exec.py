@@ -1,274 +1,23 @@
-"""Export pruned models to BSR serving form (the TVM relay-conversion analogue).
+"""DEPRECATED shim -- the export passes moved to ``repro.serving.export``.
 
-Training keeps dense weights + block masks (core.pruner). Serving packs the
-pruned projections into tile-granular BSR and -- by default -- lowers each
-pattern to a precomputed :class:`~repro.kernels.exec_plan.RowPackPlan`: the
-pattern arrays become static plan metadata (cached through
-``core.pattern_reuse.PatternRegistry``) and the servable param tree stores
-the tile values *already row-grouped*, so the per-call path is pure compute
-(docs/PERF.md).
+This module remains import-compatible (``export_bert_sparse`` /
+``export_lm_sparse`` / ``pack_stacked`` / ``pack_single`` keep their exact
+signatures) but new code should go through the serving facade instead:
 
-Three pattern-level optimizations happen here, offline:
+    from repro.serving import ServingSpec, prepare_servable
 
-  * **plans** (``use_plans=True``): weight data is re-laid-out once at export
-    instead of on every forward call;
-  * **fused QKV** (``fuse_qkv=True``): the wq/wk/wv patterns are concatenated
-    along N into a single pack, so attention issues ONE block-sparse matmul
-    (one gather of x, one dispatch) per layer instead of three;
-  * **cross-layer union** (``export_bert_sparse(cross_layer_union=True)``):
-    the per-layer patterns of all encoder layers are unioned so a single
-    specialization serves every layer with per-layer data -- the paper's §2.2
-    task-buffer mechanism, collapsing 12 compilations to 1. For scan-stacked
-    LM layer groups the same union machinery has always applied
-    (``pack_stacked``). High inter-layer pattern overlap -- which the paper's
-    small-block regularization promotes -- keeps the union tight;
-    ``union_overhead`` quantifies the waste.
+``prepare_servable`` runs the whole prune -> BSR export -> RowPackPlan ->
+registry pipeline for every model family and returns a Servable handle with
+``forward`` / ``decode_step`` / ``stats`` / ``save`` (docs/API.md).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.serving.export import (  # noqa: F401  (re-exported API)
+    export_bert_sparse, export_lm_sparse, pack_single, pack_stacked)
 
-from repro.configs.base import ModelConfig
-from repro.core.pattern_reuse import PatternRegistry
-from repro.kernels.bsr_matmul import KernelBSR, pack_bsr
-from repro.kernels.exec_plan import pack_plan_data, plan_for_pack
-
-# projection names exported per mixer/ffn kind
-_ATTN_PROJS = ("wq", "wk", "wv", "wo")
-_QKV = ("wq", "wk", "wv")
-_FFN_PROJS = ("wi", "wg", "wo")
-
-
-def _tile_mask(w: np.ndarray, tile) -> np.ndarray:
-    n, k = w.shape
-    bn, bk = tile
-    return np.any(w.reshape(n // bn, bn, k // bk, bk) != 0, axis=(1, 3))
-
-
-def pack_stacked(w_stacked: np.ndarray, tile) -> Tuple[KernelBSR, jax.Array, Dict]:
-    """(L, N, K) -> (pattern pack, per-layer data (L, nnzt, bn, bk), stats)."""
-    l, n, k = w_stacked.shape
-    bn, bk = tile
-    masks = np.stack([_tile_mask(w_stacked[i], tile) for i in range(l)])
-    union = masks.any(axis=0)
-    # build the pattern from a dense "ones at union" stand-in
-    proto = np.kron(union.astype(np.float32), np.ones(tile, np.float32))
-    pack = pack_bsr(proto, tile)
-    rows = pack.row_id[: pack.nnzt]
-    cols = pack.col_id
-    blocks = w_stacked.reshape(l, n // bn, bn, k // bk, bk).transpose(0, 1, 3, 2, 4)
-    data = blocks[:, rows, cols]                      # (L, nnzt, bn, bk)
-    per_layer_nnz = masks.sum(axis=(1, 2))
-    stats = {
-        "union_nnzt": int(union.sum()),
-        "mean_layer_nnzt": float(per_layer_nnz.mean()),
-        "union_overhead": float(union.sum() / max(per_layer_nnz.mean(), 1.0)),
-    }
-    return pack, jnp.asarray(data), stats
-
-
-def pack_single(w: np.ndarray, tile) -> Tuple[KernelBSR, jax.Array]:
-    pack = pack_bsr(w, tile)
-    return pack, pack.data
-
-
-# --------------------------------------------------------------------------
-# serving-form helpers (KernelBSR pattern -> plan + row-grouped values)
-# --------------------------------------------------------------------------
-
-def _serving_pack(w: np.ndarray, tile, use_plans: bool,
-                  registry: Optional[PatternRegistry]):
-    """(N, K) weight -> (static pattern, values). With plans, the values are
-    row-grouped once here -- the scatter the seed backend paid per call."""
-    pack = pack_bsr(w, tile)
-    if not use_plans:
-        return pack, pack.data
-    plan = plan_for_pack(pack, registry)
-    return plan, pack_plan_data(plan, pack.data)
-
-
-def _serving_pack_stacked(w_stacked: np.ndarray, tile, use_plans: bool,
-                          registry: Optional[PatternRegistry]):
-    pack, data, stats = pack_stacked(w_stacked, tile)
-    if not use_plans:
-        return pack, data, stats
-    plan = plan_for_pack(pack, registry)
-    return plan, pack_plan_data(plan, data), stats
-
-
-def _get_w(p) -> np.ndarray:
-    return np.asarray(jax.device_get(p["w"]), np.float32)
-
-
-def _divisible(shape, tile) -> bool:
-    return shape[-2] % tile[0] == 0 and shape[-1] % tile[1] == 0
-
-
-def _fused_qkv_weight(ap, tile, stacked: bool) -> Optional[np.ndarray]:
-    """Concatenate wq/wk/wv along N (one pack, one dispatch); None when a
-    projection is missing or a segment boundary would not land on a block
-    row (each segment's N must divide the kernel tile's bn)."""
-    if not all(proj in ap for proj in _QKV):
-        return None
-    ws = [_get_w(ap[proj]) for proj in _QKV]
-    if not all(_divisible(w.shape, tile) for w in ws):
-        return None
-    return np.concatenate(ws, axis=1 if stacked else 0)
-
-
-# --------------------------------------------------------------------------
-# model exports
-# --------------------------------------------------------------------------
-
-def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
-                     fuse_qkv: bool = True, use_plans: bool = True,
-                     registry: Optional[PatternRegistry] = None):
-    """Replace attention projections of an LM param tree with packed values.
-
-    Returns (sparse_params, packs, stats): ``packs`` maps layer scopes
-    ('blocks/<i>/<proj>', 'prefix/<i>/<proj>', ...) to static patterns
-    (RowPackPlan by default, KernelBSR with ``use_plans=False``); forward()
-    consumes them via the ``packs=`` argument. Scan-stacked layer groups are
-    union-packed (one specialization, per-layer data); with ``fuse_qkv`` the
-    q/k/v projections additionally share one fused pack per layer group.
-    """
-    packs: Dict[str, object] = {}
-    stats: Dict[str, Dict] = {}
-    new = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy-ish
-
-    def export_attn(layer_params, scope, stacked):
-        if "attn" not in layer_params:
-            return layer_params
-        ap = dict(layer_params["attn"])
-        projs = list(_ATTN_PROJS)
-        if fuse_qkv:
-            w_qkv = _fused_qkv_weight(ap, tile, stacked)
-            if w_qkv is not None:
-                dtype = ap["wq"]["w"].dtype
-                if stacked:
-                    pk, data, st = _serving_pack_stacked(
-                        w_qkv, tile, use_plans, registry)
-                else:
-                    pk, data = _serving_pack(w_qkv, tile, use_plans, registry)
-                    st = {"union_nnzt": pk.real_nnzt if use_plans else pk.nnzt}
-                packs[f"{scope}/wqkv"] = pk
-                stats[f"{scope}/wqkv"] = st
-                ap["wqkv"] = {"w": data.astype(dtype)}
-                for proj in _QKV:
-                    del ap[proj]
-                projs = ["wo"]
-        for proj in projs:
-            if proj not in ap:
-                continue
-            w = _get_w(ap[proj])
-            if not _divisible(w.shape, tile):
-                continue
-            if stacked:
-                pk, data, st = _serving_pack_stacked(w, tile, use_plans,
-                                                     registry)
-            else:
-                pk, data = _serving_pack(w, tile, use_plans, registry)
-                st = {"union_nnzt": pk.real_nnzt if use_plans else pk.nnzt}
-            packs[f"{scope}/{proj}"] = pk
-            stats[f"{scope}/{proj}"] = st
-            ap[proj] = {"w": data.astype(layer_params["attn"][proj]["w"].dtype)}
-        out = dict(layer_params)
-        out["attn"] = ap
-        return out
-
-    new["prefix"] = tuple(export_attn(lp, f"prefix/{i}/attn", False)
-                          for i, lp in enumerate(params["prefix"]))
-    new["blocks"] = tuple(export_attn(lp, f"blocks/{i}/attn", True)
-                          for i, lp in enumerate(params["blocks"]))
-    new["suffix"] = tuple(export_attn(lp, f"suffix/{i}/attn", False)
-                          for i, lp in enumerate(params["suffix"]))
-    return new, packs, stats
-
-
-def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
-                       include_ffn=True, *, fuse_qkv: bool = True,
-                       cross_layer_union: bool = False,
-                       use_plans: bool = True,
-                       registry: Optional[PatternRegistry] = None,
-                       stats_out: Optional[Dict] = None):
-    """BSR export for the (unrolled) BERT encoder.
-
-    Default: one pattern per layer and projection group (fused QKV). With
-    ``cross_layer_union=True`` each projection group is union-packed ACROSS
-    the encoder layers, so all L layers share one specialization driven by
-    per-layer data -- the 12->1 compilation collapse of the paper's task
-    buffer; pass a ``registry`` to read the hit/miss instrumentation
-    (L-1 hits per group when the union is active).
-
-    ``stats_out``, if given, is filled with the per-group union stats
-    (``union_nnzt`` / ``mean_layer_nnzt`` / ``union_overhead``, keyed by
-    '<group>/<name>') -- the union-waste instrumentation the paper proposes
-    as follow-up. (Kept out of the return value for caller compatibility.)
-    """
-    layers = params["layers"]
-    n_layers = len(layers)
-    packs: Dict[str, object] = {}
-    attn_new = [dict(lp["attn"]) for lp in layers]
-    ffn_new = [dict(lp["ffn"]) for lp in layers]
-
-    # (group, exported name, per-layer weight extractor, source param name)
-    specs = []
-    fused_ws = [_fused_qkv_weight(lp["attn"], tile, False) for lp in layers] \
-        if fuse_qkv else []
-    fuse_now = fuse_qkv and all(w is not None for w in fused_ws)
-    if fuse_now:
-        by_id = {id(lp): w for lp, w in zip(layers, fused_ws)}
-        specs.append(("attn", "wqkv", lambda lp: by_id[id(lp)], "wq"))
-    else:
-        specs += [("attn", proj, (lambda lp, _p=proj: _get_w(lp["attn"][_p])),
-                   proj) for proj in _QKV]
-    specs.append(("attn", "wo", lambda lp: _get_w(lp["attn"]["wo"]), "wo"))
-    if include_ffn:
-        specs += [("ffn", proj, (lambda lp, _p=proj: _get_w(lp["ffn"][_p])),
-                   proj) for proj in ("wi", "wo")]
-
-    for group, name, getw, src in specs:
-        tgt = attn_new if group == "attn" else ffn_new
-        dtypes = [lp[group][src]["w"].dtype for lp in layers]
-        if cross_layer_union:
-            stacked = np.stack([getw(lp) for lp in layers])
-            pack, data, union_st = pack_stacked(stacked, tile)
-            if stats_out is not None:
-                stats_out[f"{group}/{name}"] = union_st
-            if use_plans:
-                # one lookup per layer: the registry's hit counter then shows
-                # the (L-1)-fold reuse of the single unioned specialization
-                shared = [plan_for_pack(pack, registry)
-                          for _ in range(n_layers)]
-                vals = pack_plan_data(shared[0], data)
-            else:
-                shared = [pack] * n_layers
-                vals = data
-            for i in range(n_layers):
-                packs[f"layers/{i}/{group}/{name}"] = shared[i]
-                tgt[i][name] = {"w": vals[i].astype(dtypes[i])}
-        else:
-            for i, lp in enumerate(layers):
-                pk, vals = _serving_pack(getw(lp), tile, use_plans, registry)
-                packs[f"layers/{i}/{group}/{name}"] = pk
-                tgt[i][name] = {"w": vals.astype(dtypes[i])}
-
-    if fuse_now:
-        for ap in attn_new:
-            for proj in _QKV:
-                del ap[proj]
-
-    new_layers = []
-    for i, lp in enumerate(layers):
-        nlp = dict(lp)
-        nlp["attn"] = attn_new[i]
-        if include_ffn:
-            nlp["ffn"] = ffn_new[i]
-        new_layers.append(nlp)
-    new = dict(params)
-    new["layers"] = tuple(new_layers)
-    return new, packs
+warnings.warn(
+    "repro.models.sparse_exec is deprecated; import from repro.serving "
+    "(prepare_servable) or repro.serving.export instead",
+    DeprecationWarning, stacklevel=2)

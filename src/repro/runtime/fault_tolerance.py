@@ -97,6 +97,14 @@ class Supervisor:
                             self.cfg.max_restarts)
                 if self.restarts > self.cfg.max_restarts:
                     raise
+                # drain any in-flight async save before reading the directory:
+                # without this, a failure shortly after a checkpoint step races
+                # the background writer's atomic rename and restore sees a
+                # stale (or empty) step list -- the flake seen under full-suite
+                # load, where the writer thread lags the train loop.
+                wait = getattr(self.store, "wait", None)
+                if wait is not None:
+                    wait()
                 latest = self.store.latest_step()
                 if latest is None:
                     raise

@@ -1,0 +1,16 @@
+"""Unified spec-driven serving API (docs/API.md).
+
+    from repro.serving import ServingSpec, prepare_servable, load_servable
+
+    servable = prepare_servable(params, cfg, ServingSpec(sparsity=0.8))
+    logits = servable.forward(batch)
+    servable.save("ckpt/")            # export cost paid once per model
+    servable = load_servable("ckpt/")
+"""
+from repro.serving.export import (export_bert_sparse, export_lm_sparse,
+                                  export_params, pack_single, pack_stacked)
+from repro.serving.servable import (SERVABLE_STEP, Servable, load_servable,
+                                    prepare_servable)
+from repro.serving.spec import DEFAULT_TARGETS, ServingSpec
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,170 @@
+"""(De)serialization helpers for Servable artifacts.
+
+Three JSON/npz-safe codecs used by ``Servable.save`` / ``load_servable``
+(serving/servable.py), layered on top of ``checkpoint/store.py``:
+
+  * **tree spec** -- a JSON description of a param pytree's structure with
+    per-leaf dtypes, so a ``like`` tree can be rebuilt at load time and
+    handed to ``CheckpointStore.restore`` (which only needs structure +
+    dtype, not values);
+  * **pack codec** -- RowPackPlan / KernelBSR static patterns flattened into
+    npz arrays + JSON meta, deduplicated by pattern fingerprint so the
+    cross-layer-union sharing (12 layer scopes -> 1 plan object) survives a
+    round-trip and the loaded servable keeps one specialization per group;
+  * **config codec** -- ModelConfig (with nested LayerKind / SparsityConfig)
+    to plain dicts and back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerKind, ModelConfig
+from repro.core.pattern_reuse import PatternRegistry
+from repro.core.sparsity import SparsityConfig
+from repro.kernels.bsr_matmul import KernelBSR
+from repro.kernels.exec_plan import (RowPackPlan, kernel_pattern_fingerprint)
+
+_PLAN_FIELDS = ("col_idx", "slot_mask", "row_of_vrow", "vrow", "slot")
+_BSR_FIELDS = ("row_id", "col_id", "t_perm")
+
+
+def pattern_key(pack) -> bytes:
+    """Fingerprint of a static pattern, uniform across plan/bsr backends --
+    the dedupe key here and the uniqueness key of ``Servable.stats()``."""
+    if isinstance(pack, RowPackPlan):
+        return pack.fingerprint
+    return kernel_pattern_fingerprint(pack)
+
+
+# --------------------------------------------------------------------------
+# tree spec
+# --------------------------------------------------------------------------
+
+def tree_spec(tree) -> dict:
+    """JSON-safe structure descriptor of a pytree of arrays (dict / tuple /
+    list containers, array or None leaves)."""
+    if isinstance(tree, dict):
+        return {"kind": "dict",
+                "items": {str(k): tree_spec(v) for k, v in tree.items()}}
+    if isinstance(tree, (tuple, list)):
+        return {"kind": "tuple" if isinstance(tree, tuple) else "list",
+                "items": [tree_spec(v) for v in tree]}
+    if tree is None:
+        return {"kind": "none"}
+    return {"kind": "leaf", "dtype": str(jnp.asarray(tree).dtype)}
+
+
+def build_like(spec: dict):
+    """Rebuild a placeholder tree from :func:`tree_spec` output -- same
+    structure, scalar zero leaves carrying the recorded dtype (all
+    ``CheckpointStore.restore`` consults)."""
+    kind = spec["kind"]
+    if kind == "dict":
+        return {k: build_like(v) for k, v in spec["items"].items()}
+    if kind in ("tuple", "list"):
+        items = [build_like(v) for v in spec["items"]]
+        return tuple(items) if kind == "tuple" else items
+    if kind == "none":
+        return None
+    return np.zeros((), np.dtype(spec["dtype"]))
+
+
+# --------------------------------------------------------------------------
+# pack codec
+# --------------------------------------------------------------------------
+
+def packs_to_arrays(packs: Dict[str, object]) -> Tuple[dict, dict]:
+    """-> (npz arrays, JSON meta). Unique patterns stored once (fingerprint
+    dedupe); ``meta['keys']`` fans each layer scope back out to its ref."""
+    arrays: Dict[str, np.ndarray] = {}
+    metas: List[dict] = []
+    index_of: Dict[bytes, int] = {}
+    keys = []
+    for key, pk in packs.items():
+        fp = pattern_key(pk)
+        idx = index_of.get(fp)
+        if idx is None:
+            idx = len(metas)
+            index_of[fp] = idx
+            arrays[f"p{idx}_fingerprint"] = np.frombuffer(fp, np.uint8)
+            if isinstance(pk, RowPackPlan):
+                metas.append({"kind": "plan", "shape": list(pk.shape),
+                              "tile": list(pk.tile), "nnzt": pk.nnzt,
+                              "real_nnzt": pk.real_nnzt})
+                for f in _PLAN_FIELDS:
+                    arrays[f"p{idx}_{f}"] = np.asarray(getattr(pk, f))
+            else:
+                # structural fields only: serving rebuilds KernelBSR around
+                # the values held in the params tree (models/common.linear),
+                # so pk.data is never read back -- storing it would duplicate
+                # every packed weight in the artifact
+                metas.append({"kind": "bsr", "shape": list(pk.shape),
+                              "tile": list(pk.tile),
+                              "real_nnzt": pk.real_nnzt})
+                for f in _BSR_FIELDS:
+                    arrays[f"p{idx}_{f}"] = np.asarray(getattr(pk, f))
+        keys.append({"key": key, "ref": idx})
+    return arrays, {"patterns": metas, "keys": keys}
+
+
+def packs_from_arrays(meta: dict, arrays, registry: PatternRegistry = None
+                      ) -> Dict[str, object]:
+    """Inverse of :func:`packs_to_arrays`. Plans are rebuilt through the
+    registry's fingerprint-keyed cache so the loaded servable shares one
+    object (and downstream one jit specialization) per unique pattern."""
+    built = []
+    for idx, m in enumerate(meta["patterns"]):
+        fp = bytes(np.asarray(arrays[f"p{idx}_fingerprint"], np.uint8))
+        if m["kind"] == "plan":
+            def build(idx=idx, m=m, fp=fp):
+                return RowPackPlan(
+                    col_idx=np.asarray(arrays[f"p{idx}_col_idx"], np.int32),
+                    slot_mask=np.asarray(arrays[f"p{idx}_slot_mask"], bool),
+                    row_of_vrow=np.asarray(arrays[f"p{idx}_row_of_vrow"],
+                                           np.int32),
+                    vrow=np.asarray(arrays[f"p{idx}_vrow"], np.int32),
+                    slot=np.asarray(arrays[f"p{idx}_slot"], np.int32),
+                    shape=tuple(m["shape"]), tile=tuple(m["tile"]),
+                    nnzt=int(m["nnzt"]), real_nnzt=int(m["real_nnzt"]),
+                    fingerprint=fp)
+            if registry is not None:
+                built.append(registry.cached(("rowpack_plan", fp), build))
+            else:
+                built.append(build())
+        else:
+            col_id = np.asarray(arrays[f"p{idx}_col_id"], np.int32)
+            bn, bk = (int(t) for t in m["tile"])
+            built.append(KernelBSR(
+                # zeros placeholder: serve-time data comes from the params
+                # tree, never from the pack (models/common.linear)
+                data=jnp.zeros((len(col_id), bn, bk), jnp.float32),
+                row_id=np.asarray(arrays[f"p{idx}_row_id"], np.int32),
+                col_id=col_id,
+                t_perm=np.asarray(arrays[f"p{idx}_t_perm"], np.int32),
+                real_nnzt=int(m["real_nnzt"]), shape=tuple(m["shape"]),
+                tile=(bn, bk)))
+    return {e["key"]: built[e["ref"]] for e in meta["keys"]}
+
+
+# --------------------------------------------------------------------------
+# config codec
+# --------------------------------------------------------------------------
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> ModelConfig:
+    d = dict(d)
+    d["pattern"] = tuple(LayerKind(**k) for k in d.get("pattern", ()))
+    d["prefix"] = tuple(LayerKind(**k) for k in d.get("prefix", ()))
+    if d.get("sparsity"):
+        sp = dict(d["sparsity"])
+        sp["block_shape"] = tuple(sp["block_shape"])
+        sp["targets"] = tuple(sp["targets"])
+        d["sparsity"] = SparsityConfig(**sp)
+    return ModelConfig(**d)

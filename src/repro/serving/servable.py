@@ -1,0 +1,214 @@
+"""prepare_servable / Servable / load_servable: the serving facade.
+
+One spec-driven entry point owns the whole algorithm->compilation pipeline
+the paper argues must be co-designed:
+
+    prune (core.pruner recipe)            -- algorithm side
+    -> BSR export (serving.export)        -- layout
+    -> RowPackPlan construction           -- execution schedule
+    -> PatternRegistry caching            -- cross-layer/task reuse
+
+for every model family, dispatched through ``models/api.py``. The returned
+:class:`Servable` is a self-contained handle: ``forward`` / ``decode_step``
+serve through the packed weights, ``stats`` surfaces the co-design
+instrumentation (density, union overhead, registry hits, padded-FLOP
+ratio), and ``save`` / :func:`load_servable` persist the artifact through
+``checkpoint/store.py`` so export cost is paid once per model, not once per
+process.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.base import ModelConfig
+from repro.core.pattern_reuse import PatternRegistry
+from repro.core.pruner import _path_name, oneshot_prune, tied_prune
+from repro.kernels.exec_plan import RowPackPlan
+from repro.models import api as model_api
+from repro.serving.export import export_params
+from repro.serving.serialize import (build_like, config_from_dict,
+                                     config_to_dict, packs_from_arrays,
+                                     packs_to_arrays, pattern_key, tree_spec)
+from repro.serving.spec import ServingSpec
+
+#: the single checkpoint slot a Servable occupies in its store directory
+SERVABLE_STEP = 0
+_PACKS_FILE = "packs.npz"
+
+
+def _norm_path(name: str) -> str:
+    """'layers/[0]/attn/wqkv/w' (tree-path rendering, core.pruner._path_name)
+    -> 'layers/0/attn/wqkv/w' (the pack-key convention)."""
+    return "/".join(tok.strip("[]") for tok in name.split("/"))
+
+
+def _cast_packed(params, packs, jdtype):
+    """Cast only the packed projection values to the spec dtype (embeddings,
+    norms, heads keep the model dtype)."""
+    targets = {key + "/w" for key in packs}
+
+    def one(path, leaf):
+        name = _norm_path(_path_name(path))
+        return leaf.astype(jdtype) if name in targets else leaf
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+class Servable:
+    """Handle over (packed params, static patterns, config, spec).
+
+    Not constructed directly -- use :func:`prepare_servable` or
+    :func:`load_servable`.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, spec: ServingSpec,
+                 packs: Dict[str, object], registry: PatternRegistry,
+                 export_stats: Optional[Dict] = None,
+                 stats_at_save: Optional[Dict] = None):
+        self.params = params
+        self.cfg = cfg
+        self.spec = spec
+        self.packs = packs
+        self.registry = registry
+        self.export_stats = export_stats or {}
+        self.stats_at_save = stats_at_save
+        self._fwd_fn = None
+        self._decode_fn = None
+
+    # -- serving ----------------------------------------------------------
+    def _as_batch(self, batch) -> Dict[str, Any]:
+        if isinstance(batch, dict):
+            return batch
+        return {"tokens": jnp.asarray(batch)}
+
+    def forward(self, batch):
+        """batch dict (models/api.py schema) or raw tokens -> logits f32.
+
+        The callable is jit'd once per Servable with the packs held static;
+        identical patterns across layers share one specialization (plans
+        hash by pattern fingerprint)."""
+        if self._fwd_fn is None:
+            cfg, packs = self.cfg, self.packs
+            self._fwd_fn = jax.jit(
+                lambda p, b: model_api.model_forward(p, cfg, b, packs=packs))
+        logits, _aux = self._fwd_fn(self.params, self._as_batch(batch))
+        return logits
+
+    def init_cache(self, batch_size: int, cache_len: int, frames=None):
+        return model_api.init_cache(self.params, self.cfg, batch_size,
+                                    cache_len, frames=frames)
+
+    def decode_step(self, cache, token, pos):
+        """(cache, token (B,1), pos) -> (logits, new_cache); encoder-only
+        families raise (models/api.py contract)."""
+        if self._decode_fn is None:
+            cfg, packs = self.cfg, self.packs
+            self._decode_fn = jax.jit(
+                lambda p, c, t, s: model_api.decode_step(p, c, cfg, t, s,
+                                                         packs=packs))
+        return self._decode_fn(self.params, cache, token, pos)
+
+    # -- instrumentation --------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """The co-design scorecard: how sparse, how shared, how padded."""
+        plans = [p for p in self.packs.values() if isinstance(p, RowPackPlan)]
+        unique = {pattern_key(p) for p in self.packs.values()}
+        union = [s["union_overhead"] for s in self.export_stats.values()
+                 if isinstance(s, dict) and "union_overhead" in s]
+        st = self.registry.stats
+        out = {
+            "family": self.cfg.family,
+            "arch": self.cfg.arch,
+            "backend": self.spec.backend,
+            "tile": list(self.spec.tile),
+            "packed_projections": len(self.packs),
+            "unique_patterns": len(unique),
+            "density": (float(np.mean([p.density
+                                       for p in self.packs.values()]))
+                        if self.packs else None),
+            "union_overhead": float(np.mean(union)) if union else None,
+            "padded_flop_ratio": (float(np.mean([p.padding_waste
+                                                 for p in plans]))
+                                  if plans else None),
+            "registry": {"hits": st.hits, "misses": st.misses,
+                         "reuse_rate": st.reuse_rate},
+        }
+        if self.stats_at_save is not None:
+            out["registry_at_save"] = self.stats_at_save.get("registry")
+        return out
+
+    # -- persistence ------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Persist params + static patterns + spec/config under ``path``
+        (a CheckpointStore directory). Export never re-runs on load."""
+        store = CheckpointStore(path, keep=1)
+        arrays, pack_meta = packs_to_arrays(self.packs)
+        meta = {
+            "spec": self.spec.to_dict(),
+            "cfg": config_to_dict(self.cfg),
+            "tree": tree_spec(self.params),
+            "packs": pack_meta,
+            "export_stats": self.export_stats,
+            "stats": self.stats(),
+        }
+        store.save(SERVABLE_STEP, self.params, blocking=True,
+                   extra={"servable": meta})
+        step_dir = os.path.join(path, f"step_{SERVABLE_STEP:09d}")
+        np.savez(os.path.join(step_dir, _PACKS_FILE), **arrays)
+        return path
+
+
+def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
+                     registry: Optional[PatternRegistry] = None) -> Servable:
+    """Run the full prune -> export -> plan -> cache pipeline for any family.
+
+    ``params`` are dense training-form weights (already-pruned weights with
+    ``spec.prune='none'``). The returned Servable's weights are in packed
+    serving form; the original tree is not modified.
+    """
+    spec = spec or ServingSpec()
+    registry = registry if registry is not None else PatternRegistry()
+
+    if spec.prune == "oneshot":
+        pruned, _ = oneshot_prune(params, spec.sparsity_config())
+    elif spec.prune == "tied":
+        pruned, _ = tied_prune(params, spec.sparsity_config())
+    else:
+        pruned = params
+
+    sparse_params, packs, stats = export_params(
+        pruned, cfg, tile=spec.tile, fuse_qkv=spec.fuse_qkv,
+        cross_layer_union=spec.cross_layer_union,
+        include_ffn=spec.include_ffn, use_plans=spec.use_plans,
+        registry=registry)
+    if spec.dtype is not None and packs:
+        jdtype = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+        sparse_params = _cast_packed(sparse_params, packs, jdtype)
+    return Servable(sparse_params, cfg, spec, packs, registry,
+                    export_stats=stats)
+
+
+def load_servable(path: str, *,
+                  registry: Optional[PatternRegistry] = None) -> Servable:
+    """Restore a saved Servable: params via ``CheckpointStore.restore``,
+    patterns via the fingerprint-keyed pack codec. No pruning, packing, or
+    plan construction re-runs; the load-time registry only pays one build
+    per unique pattern (the saved reuse counters stay readable under
+    ``stats()['registry_at_save']``)."""
+    store = CheckpointStore(path)
+    meta = store.meta(SERVABLE_STEP)["servable"]
+    cfg = config_from_dict(meta["cfg"])
+    spec = ServingSpec.from_dict(meta["spec"])
+    params = store.restore(build_like(meta["tree"]), step=SERVABLE_STEP)
+    step_dir = os.path.join(path, f"step_{SERVABLE_STEP:09d}")
+    registry = registry if registry is not None else PatternRegistry()
+    with np.load(os.path.join(step_dir, _PACKS_FILE)) as npz:
+        packs = packs_from_arrays(meta["packs"], npz, registry)
+    return Servable(params, cfg, spec, packs, registry,
+                    export_stats=meta.get("export_stats"),
+                    stats_at_save=meta.get("stats"))

@@ -1,0 +1,99 @@
+"""ServingSpec: one declarative description of the prune->export->plan->serve
+co-design (docs/API.md).
+
+The paper's thesis is that sparsity wins only materialize when the algorithm
+side (pruning shape/recipe) and the execution side (BSR packing, plan
+specialization) are chosen together. A ``ServingSpec`` is that joint choice
+as data: :func:`repro.serving.prepare_servable` consumes it and owns every
+layout/fusion/reuse decision, the way a production sparse-serving compiler
+owns them behind a single entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.core.sparsity import SparsityConfig
+
+#: default prunable projections (attention + FC, the paper's BERT targets)
+DEFAULT_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
+                   "ffn/wi", "ffn/wo")
+
+PRUNE_RECIPES = ("none", "oneshot", "tied")
+BACKENDS = ("plan", "bsr")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSpec:
+    """Declarative spec for :func:`repro.serving.prepare_servable`.
+
+    Attributes:
+      tile: kernel tile == pruning block shape. Small *sparsity* blocks from
+        training are aggregated into this tile at export (docs/PERF.md).
+      sparsity: block-sparsity target for the prune step (ignored when
+        ``prune='none'``).
+      prune: weight-preparation recipe --
+        ``'none'``    params are already pruned (e.g. by training);
+        ``'oneshot'`` independent per-layer magnitude masks
+        (:func:`repro.core.pruner.oneshot_prune`);
+        ``'tied'``    one mask shared across layers per projection group
+        (:func:`repro.core.pruner.tied_prune`) -- keeps the cross-layer
+        union tight, emulating small-block regularized training.
+      targets: substrings selecting prunable projections.
+      fuse_qkv: concatenate wq/wk/wv into one pack -> one block-sparse
+        dispatch per attention layer.
+      cross_layer_union: union the per-layer patterns of unrolled encoders so
+        all layers share ONE specialization (scan-stacked LM groups always
+        union). The paper's §2.2 task-buffer collapse.
+      backend: ``'plan'`` stores weights row-grouped offline and serves
+        through the precomputed-RowPackPlan path (the serving optimum);
+        ``'bsr'`` keeps packed ``(nnzt, bn, bk)`` values and dispatches via
+        ``bsr_linear``'s runtime backends (rowpack on CPU, pallas on TPU).
+      dtype: optional dtype override ('float32' | 'bfloat16') applied to the
+        exported packed values; None keeps the model dtype.
+      include_ffn: export FFN projections too (bert only; lm exports
+        attention projections).
+    """
+
+    tile: Tuple[int, int] = (128, 128)
+    sparsity: float = 0.8
+    prune: str = "tied"
+    targets: Sequence[str] = DEFAULT_TARGETS
+    fuse_qkv: bool = True
+    cross_layer_union: bool = True
+    backend: str = "plan"
+    dtype: Optional[str] = None
+    include_ffn: bool = True
+
+    def __post_init__(self):
+        if self.prune not in PRUNE_RECIPES:
+            raise ValueError(f"prune={self.prune!r} not in {PRUNE_RECIPES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
+        if self.dtype not in (None, "float32", "bfloat16"):
+            raise ValueError(f"unsupported dtype {self.dtype!r}")
+
+    @property
+    def use_plans(self) -> bool:
+        return self.backend == "plan"
+
+    def sparsity_config(self) -> SparsityConfig:
+        """The prune step's config (kernel tile == pruning block here; a
+        finer training-time block is aggregated at export by pack_bsr)."""
+        return SparsityConfig(block_shape=tuple(self.tile),
+                              sparsity=self.sparsity,
+                              targets=tuple(self.targets))
+
+    # -- (de)serialization -------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["tile"] = list(self.tile)
+        d["targets"] = list(self.targets)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServingSpec":
+        d = dict(d)
+        d["tile"] = tuple(d["tile"])
+        d["targets"] = tuple(d["targets"])
+        return cls(**d)

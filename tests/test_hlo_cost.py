@@ -20,6 +20,8 @@ def test_matches_xla_on_loop_free_graph():
                  jax.ShapeDtypeStruct((512, 512), jnp.float32))
     ours = HloCostModel(c.as_text()).total()
     xla = c.cost_analysis()
+    if isinstance(xla, list):   # older JAX returns one dict per partition
+        xla = xla[0]
     assert abs(ours.flops / xla["flops"] - 1) < 0.02
     assert abs(ours.bytes / xla["bytes accessed"] - 1) < 0.05
 

@@ -1,0 +1,225 @@
+"""The unified serving facade (repro.serving): prepare_servable parity vs
+dense-pruned forward for bert AND an lm config (fused + union on/off),
+tied_prune as a first-class recipe, stats() instrumentation, and the
+save -> load_servable round-trip serving without re-running export."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import SparsityConfig
+from repro.core.pruner import oneshot_prune, tie_group, tied_prune
+from repro.models import init_model, model_forward
+from repro.serving import ServingSpec, load_servable, prepare_servable
+
+RNG = np.random.RandomState(0)
+TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "ffn/wi", "ffn/wo")
+
+
+@pytest.fixture(scope="module")
+def bert():
+    cfg = get_config("bert_base", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 32)))
+    return cfg, params, toks
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 32)))
+    return cfg, params, toks
+
+
+# --------------------------------------------------------------------------
+# tied_prune (promoted into core.pruner)
+# --------------------------------------------------------------------------
+
+def test_tie_group_wildcards_layer_indices():
+    assert tie_group("layers/[3]/attn/wq/w") == "layers/*/attn/wq/w"
+    assert tie_group("layers/[3]/attn/wq/w") == tie_group("layers/[7]/attn/wq/w")
+
+
+def test_tied_prune_shares_masks_across_layers(bert):
+    cfg, params, _ = bert
+    sp = SparsityConfig(block_shape=(16, 16), sparsity=0.75, targets=TARGETS)
+    pruned, masks = tied_prune(params, sp)
+    m0 = masks["layers"][0]["attn"]["wq"]["w"]
+    m1 = masks["layers"][1]["attn"]["wq"]["w"]
+    assert m0 is not None and bool(jnp.all(m0 == m1))
+    # tied sparsity hits the target like oneshot does
+    kept = float(jnp.mean(m0))
+    assert abs((1.0 - kept) - sp.sparsity) < 0.1
+    # untargeted leaves keep no mask
+    assert masks["embed"]["w"] is None
+
+
+def test_tied_prune_matches_oneshot_sparsity_level(lm):
+    cfg, params, _ = lm
+    sp = SparsityConfig(block_shape=(16, 16), sparsity=0.7)
+    pruned, masks = tied_prune(params, sp)
+    n_masked = sum(m is not None for m in jax.tree_util.tree_leaves(
+        masks, is_leaf=lambda x: x is None))
+    assert n_masked > 0
+
+
+# --------------------------------------------------------------------------
+# prepare_servable parity (bert + lm, fused/union on and off)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fuse,union", [(True, True), (True, False),
+                                        (False, True), (False, False)])
+def test_bert_servable_matches_dense_pruned(bert, fuse, union):
+    cfg, params, toks = bert
+    spec = ServingSpec(tile=(16, 16), sparsity=0.75, prune="tied",
+                       targets=TARGETS, fuse_qkv=fuse,
+                       cross_layer_union=union)
+    servable = prepare_servable(params, cfg, spec)
+    pruned, _ = tied_prune(params, spec.sparsity_config())
+    dense, _ = model_forward(pruned, cfg, {"tokens": toks})
+    got = servable.forward(toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fuse", [True, False])
+def test_lm_servable_matches_dense_pruned(lm, fuse):
+    cfg, params, toks = lm
+    spec = ServingSpec(tile=(16, 16), sparsity=0.7, prune="oneshot",
+                       targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo"),
+                       fuse_qkv=fuse)
+    servable = prepare_servable(params, cfg, spec)
+    assert servable.packs, "no projections exported"
+    pruned, _ = oneshot_prune(params, spec.sparsity_config())
+    dense, _ = model_forward(pruned, cfg, {"tokens": toks})
+    got = servable.forward(toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_backend_matches_plan_backend(bert):
+    cfg, params, toks = bert
+    mk = lambda backend: prepare_servable(
+        params, cfg, ServingSpec(tile=(16, 16), sparsity=0.75, prune="tied",
+                                 targets=TARGETS, backend=backend))
+    np.testing.assert_allclose(np.asarray(mk("plan").forward(toks)),
+                               np.asarray(mk("bsr").forward(toks)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lm_servable_decode_step(lm):
+    cfg, params, toks = lm
+    servable = prepare_servable(
+        params, cfg, ServingSpec(tile=(16, 16), sparsity=0.7, prune="oneshot",
+                                 targets=("attn/wq", "attn/wk", "attn/wv")))
+    cache = servable.init_cache(2, 16)
+    logits, cache = servable.decode_step(cache, toks[:, :1], 0)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+
+
+def test_bert_servable_has_no_decode(bert):
+    cfg, params, _ = bert
+    servable = prepare_servable(params, cfg, ServingSpec(tile=(16, 16)))
+    with pytest.raises(ValueError):
+        servable.init_cache(1, 8)
+
+
+# --------------------------------------------------------------------------
+# instrumentation
+# --------------------------------------------------------------------------
+
+def test_stats_reports_registry_reuse_and_union(bert):
+    cfg, params, toks = bert
+    spec = ServingSpec(tile=(16, 16), sparsity=0.75, prune="tied",
+                       targets=TARGETS, cross_layer_union=True)
+    st = prepare_servable(params, cfg, spec).stats()
+    n_groups = st["unique_patterns"]              # wqkv, attn/wo, ffn/wi, wo
+    assert st["packed_projections"] == cfg.n_layers * n_groups
+    # cross-layer union: every layer after the first hits the registry
+    assert st["registry"]["misses"] == n_groups
+    assert st["registry"]["hits"] == (cfg.n_layers - 1) * n_groups
+    assert st["registry"]["reuse_rate"] > 0
+    # tied masks -> the union adds zero padding
+    assert st["union_overhead"] == pytest.approx(1.0)
+    assert 0 < st["density"] < 0.45
+    assert st["padded_flop_ratio"] >= 1.0
+
+
+def test_unique_patterns_counted_by_fingerprint_on_bsr_backend(bert,
+                                                               tmp_path):
+    """Tied masks + per-layer bsr packs: uniqueness must dedupe by pattern
+    fingerprint (not object identity), and survive a save/load unchanged."""
+    cfg, params, _ = bert
+    spec = ServingSpec(tile=(16, 16), sparsity=0.75, prune="tied",
+                       targets=TARGETS, backend="bsr",
+                       cross_layer_union=False)
+    servable = prepare_servable(params, cfg, spec)
+    st = servable.stats()
+    assert st["packed_projections"] == cfg.n_layers * st["unique_patterns"]
+    servable.save(str(tmp_path))
+    assert load_servable(str(tmp_path)).stats()["unique_patterns"] \
+        == st["unique_patterns"]
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ServingSpec(prune="magic")
+    with pytest.raises(ValueError):
+        ServingSpec(backend="cuda")
+    with pytest.raises(ValueError):
+        ServingSpec(dtype="int4")
+
+
+def test_spec_dtype_casts_packed_values_only(bert):
+    cfg, params, _ = bert
+    servable = prepare_servable(
+        params, cfg, ServingSpec(tile=(16, 16), sparsity=0.75,
+                                 targets=TARGETS, dtype="bfloat16"))
+    assert servable.params["layers"][0]["attn"]["wqkv"]["w"].dtype == jnp.bfloat16
+    assert servable.params["embed"]["w"].dtype == jnp.float32
+
+
+# --------------------------------------------------------------------------
+# persistence: save -> load_servable serves without re-running export
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["plan", "bsr"])
+def test_save_load_roundtrip(bert, tmp_path, backend):
+    cfg, params, toks = bert
+    spec = ServingSpec(tile=(16, 16), sparsity=0.75, prune="tied",
+                       targets=TARGETS, backend=backend)
+    servable = prepare_servable(params, cfg, spec)
+    want = servable.forward(toks)
+    servable.save(str(tmp_path))
+
+    loaded = load_servable(str(tmp_path))
+    got = loaded.forward(toks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # config/spec survive the trip
+    assert loaded.cfg == cfg
+    assert loaded.spec == spec
+    # pattern sharing survives: one object per unique pattern, and the
+    # build-time reuse counters stay inspectable
+    st = loaded.stats()
+    assert st["unique_patterns"] == servable.stats()["unique_patterns"]
+    assert st["registry_at_save"] == servable.stats()["registry"]
+    if backend == "plan":
+        # the load pays one plan build per unique pattern, never per scope
+        assert st["registry"]["misses"] == st["unique_patterns"]
+
+
+def test_load_servable_lm_decode_roundtrip(lm, tmp_path):
+    cfg, params, toks = lm
+    servable = prepare_servable(
+        params, cfg, ServingSpec(tile=(16, 16), sparsity=0.7, prune="oneshot",
+                                 targets=("attn/wq", "attn/wk", "attn/wv",
+                                          "attn/wo")))
+    want, _ = servable.decode_step(servable.init_cache(2, 16), toks[:, :1], 0)
+    servable.save(str(tmp_path))
+    loaded = load_servable(str(tmp_path))
+    got, _ = loaded.decode_step(loaded.init_cache(2, 16), toks[:, :1], 0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

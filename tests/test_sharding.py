@@ -35,7 +35,10 @@ class TestSpecRules:
 
     def test_indivisible_dims_replicate(self):
         # abstract mesh: spec rules shouldn't need real devices
-        wide = jax.sharding.AbstractMesh((1, 16), ("data", "model"))
+        try:   # modern signature: (axis_sizes, axis_names)
+            wide = jax.sharding.AbstractMesh((1, 16), ("data", "model"))
+        except TypeError:   # older JAX: one tuple of (name, size) pairs
+            wide = jax.sharding.AbstractMesh((("data", 1), ("model", 16)))
         spec = spec_for_param("blocks/0/attn/wk/w", (2, 100, 4096), wide)
         assert spec[1] is None     # 100 % 16 != 0 -> replicated
         assert spec[2] == "data"   # in-dim divisible by data axis -> FSDP
