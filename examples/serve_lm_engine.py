@@ -1,0 +1,85 @@
+"""Continuous-batching LM serving demo: the request-level deployment story.
+
+Builds a sparse Servable for a decoder-only LM, constructs the
+continuous-batching engine (``servable.engine(...)``), and pushes a burst of
+requests with mixed prompt lengths through a handful of request slots --
+more requests than slots, so admission, bucketed prefill, ragged batched
+decode, and slot recycling all run. Tokens stream per request through the
+``on_token`` callback while the engine batches every active request into ONE
+jitted decode call per step.
+
+Compare with examples/serve_bert_sparse.py (batched *encoder* serving):
+this demo is the decode-side counterpart the paper's runtime argument
+ultimately cares about -- concurrency without per-request graphs.
+
+Run:  PYTHONPATH=src python examples/serve_lm_engine.py
+          [--arch deepseek_7b] [--slots 4] [--requests 10] [--max-new 12]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import init_model
+from repro.serving import ServingSpec, prepare_servable
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek_7b",
+                    help="any decode-capable arch (smoke config is used)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--sparsity", type=float, default=0.7)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    print(f"initializing {cfg.arch} ({cfg.family})...")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    servable = prepare_servable(params, cfg, ServingSpec(
+        tile=(16, 16), sparsity=args.sparsity, prune="oneshot",
+        targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo")))
+    st = servable.stats()
+    print(f"sparse export: {st['packed_projections']} packed projections, "
+          f"density {st['density']:.2f}" if st["density"] is not None
+          else "no packed projections (dense serving)")
+
+    engine = servable.engine(max_slots=args.slots, cache_len=128)
+    rng = np.random.RandomState(0)
+
+    streams = {}
+
+    def on_token(rid, tok):
+        streams.setdefault(rid, []).append(tok)
+
+    def on_done(rid, toks):
+        print(f"  request {rid}: done, {len(toks)} tokens -> {toks[:8]}"
+              f"{'...' if len(toks) > 8 else ''}")
+
+    print(f"submitting {args.requests} requests "
+          f"(prompts 3..18 tokens) into {args.slots} slots...")
+    handles = []
+    for i in range(args.requests):
+        prompt = rng.randint(0, cfg.vocab_size, (3 + (5 * i) % 16,)).tolist()
+        handles.append(engine.submit(prompt, max_new_tokens=args.max_new,
+                                     on_token=on_token, on_done=on_done))
+
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+
+    s = engine.stats
+    assert all(h.done for h in handles)
+    assert all(streams[h.req_id] == h.tokens for h in handles)
+    print(f"served {s.completed} requests / {s.tokens_generated} tokens in "
+          f"{dt:.2f}s ({s.tokens_generated / dt:.1f} tok/s)")
+    print(f"{s.steps} batched decode steps, mean occupancy "
+          f"{s.mean_occupancy:.2f}/{args.slots} slots, prefill buckets "
+          f"{dict(s.bucket_hits)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,13 @@
 # 2. a smoke run of the kernel microbenchmark, refreshing the
 #    "kernel_smoke" section of BENCH_kernels.json so perf regressions are
 #    visible in-diff (the full "kernel" sweep is a manual
-#    `python benchmarks/kernel_bench.py` run).
+#    `python benchmarks/kernel_bench.py` run);
+# 3. a smoke run of the serving-engine benchmark, refreshing the
+#    "engine_smoke" section of BENCH_serving.json (full sweep:
+#    `python benchmarks/serving_bench.py`).
 #
-# The smoke runs even when tests fail (a handful of seed-era failures are
-# known; see CHANGES.md) -- the script exits nonzero if either step did.
+# The smokes run even when tests fail (a handful of seed-era failures are
+# known; see CHANGES.md) -- the script exits nonzero if any step did.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -20,5 +23,7 @@ status=0
 python -m pytest -x -q || status=$?
 
 python benchmarks/kernel_bench.py --smoke || status=$?
+
+python benchmarks/serving_bench.py --smoke || status=$?
 
 exit $status

@@ -21,6 +21,7 @@ exactly the paper's explanation for the 1x32-beats-1x384 non-monotonicity.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Dict, Hashable
 
 import jax
@@ -57,18 +58,26 @@ class PatternRegistry:
 
     def __init__(self):
         self._cache: Dict[Hashable, Any] = {}
+        # reentrant: a builder may itself consult the registry (e.g. a fused
+        # plan built from per-projection plans). Held across the build so
+        # concurrent engine admissions (serving/engine.py) cannot race plan
+        # construction -- each key is built exactly once and the hit/miss
+        # counters stay exact under threading.
+        self._lock = threading.RLock()
         self.stats = ReuseStats()
 
     def cached(self, key: Hashable, builder: Callable[[], Any]) -> Any:
         """Generic task lookup: return the cached artifact for ``key``,
-        building (a *miss*, TVM's "new task -> compile") only on first use."""
-        if key in self._cache:
-            self.stats.hits += 1
-            return self._cache[key]
-        self.stats.misses += 1
-        value = builder()
-        self._cache[key] = value
-        return value
+        building (a *miss*, TVM's "new task -> compile") only on first use.
+        Thread-safe: lookup, build, and insert happen under one lock."""
+        with self._lock:
+            if key in self._cache:
+                self.stats.hits += 1
+                return self._cache[key]
+            self.stats.misses += 1
+            value = builder()
+            self._cache[key] = value
+            return value
 
     def specialize(self, fn: Callable, bsr: BSR) -> Callable:
         """Return ``lambda data, *args: fn(bsr_with(data), *args)`` compiled

@@ -1,2 +1,4 @@
 """Model zoo: unified LM (dense/MoE/MLA/SSM/RG-LRU/VLM), enc-dec, BERT."""
-from repro.models.api import decode_step, init_cache, init_model, model_forward
+from repro.models.api import (alloc_slot, decode_step, free_slot, init_cache,
+                              init_model, model_forward, read_slot,
+                              reset_slot, write_slot)

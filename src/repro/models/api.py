@@ -46,8 +46,65 @@ def init_cache(params, cfg: ModelConfig, batch_size, cache_len, frames=None):
 
 
 def decode_step(params, cache, cfg: ModelConfig, token, pos, packs=None):
+    """``pos``: scalar (single-request convention, broadcast) or int32 (B,)
+    ragged per-slot positions; rows with pos < 0 are inactive slots whose
+    cache state is left untouched (continuous batching, docs/API.md)."""
     if cfg.family == "audio":
         return encdec_mod.decode_step(params, cache, cfg, token, pos)
     if cfg.family == "bert":
         raise ValueError("encoder-only arch has no decode step")
     return lm_mod.decode_step(params, cache, cfg, token, pos, packs=packs)
+
+
+def prefill_cache(params, cache, cfg: ModelConfig, tokens, length=None,
+                  packs=None):
+    """One-pass prompt prefill into a decode cache (lm-family layouts):
+    forward-path compute for tokens (B, S), bulk cache writes for positions
+    0..length-1 (length <= S; the tail is bucket padding). Returns
+    (logits (B, S, V), cache). Audio prefills through the scanned decode
+    path instead (its decoder prompts are BOS-sized)."""
+    if cfg.family in ("audio", "bert"):
+        raise ValueError(f"no one-pass prefill for family {cfg.family!r}")
+    return lm_mod.prefill_cache(params, cache, cfg, tokens, length,
+                                packs=packs)
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle: the batch dimension of a decode cache is request slots
+# (continuous batching, repro/serving/engine.py)
+# ---------------------------------------------------------------------------
+
+def _slot_mod(cfg: ModelConfig):
+    if cfg.family == "bert":
+        raise ValueError("encoder-only arch has no decode cache")
+    return encdec_mod if cfg.family == "audio" else lm_mod
+
+
+def reset_slot(cache, cfg: ModelConfig, slot):
+    """Zero one request slot: attention KV (pos_map -> empty) and SSM/RgLRU
+    recurrent + conv state, so a recycled slot cannot leak its previous
+    request. Returns the updated cache."""
+    return _slot_mod(cfg).reset_slot(cache, slot)
+
+
+def alloc_slot(cache, cfg: ModelConfig, slot):
+    """Claim ``slot`` for a new request: identical state-wise to
+    :func:`reset_slot` (a fresh slot IS a zeroed slot); named separately so
+    admission and retirement read as a lifecycle."""
+    return _slot_mod(cfg).reset_slot(cache, slot)
+
+
+def free_slot(cache, cfg: ModelConfig, slot):
+    """Retire ``slot`` after request completion (state hygiene: the zeroing
+    is what guarantees recycled slots start from a fresh cache)."""
+    return _slot_mod(cfg).reset_slot(cache, slot)
+
+
+def write_slot(cache, cfg: ModelConfig, slot, sub):
+    """Insert a batch-1 cache (e.g. a prefill result) into ``slot``."""
+    return _slot_mod(cfg).write_slot(cache, slot, sub)
+
+
+def read_slot(cache, cfg: ModelConfig, slot):
+    """Extract ``slot`` as a batch-1 cache (write_slot's inverse)."""
+    return _slot_mod(cfg).read_slot(cache, slot)

@@ -20,6 +20,55 @@ from repro.models.common import apply_rope, init_linear, linear, normal_init
 NEG_INF = -1e30
 
 
+def as_slot_positions(pos, batch):
+    """Normalize ``pos`` to the ragged per-slot form: an int32 (B,) vector.
+
+    Serving runs request *slots* through the batch dimension, each at its own
+    absolute position (repro/serving/engine.py). A scalar ``pos`` -- the
+    single-request calling convention -- broadcasts to every row. Negative
+    entries mark inactive slots: their cache writes are suppressed and their
+    outputs are garbage (finite, but meaningless).
+    """
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+
+
+def _masked_row_write(buf, rows, slot, val, active):
+    """Write ``val[i]`` into ``buf[i, slot[i]]`` where ``active[i]``; inactive
+    rows keep their previous value (the write happens but stores the old
+    content back, so one scatter serves both cases under jit)."""
+    keep = jnp.expand_dims(active, tuple(range(1, val.ndim)))
+    old = buf[rows, slot]
+    return buf.at[rows, slot].set(jnp.where(keep, val, old))
+
+
+def slot_reset_value(path, x_slice):
+    """Reset value for one cache leaf's slot slice (tree_map_with_path
+    callback): ``pos_map`` slots empty out to -1, everything else --
+    attention KV, quant scales, SSM state, RG-LRU h, conv history -- to 0.
+    Shared by every family's ``reset_slot`` (lm.py, encdec.py)."""
+    name = getattr(path[-1], "key", None)
+    return jnp.full_like(x_slice, -1 if name == "pos_map" else 0)
+
+
+def prefill_slot_sources(t, length, s):
+    """Cache-slot gather plan for a one-pass prompt prefill.
+
+    A prompt of ``length`` tokens (padded to ``s``, positions 0..length-1)
+    lands in a T-slot ring cache at slot = pos % T; slot j ends up holding
+    the LATEST position congruent to j. Returns ``(src, pos)``: per-slot
+    source index into the (B, S, ...) prefill tensors (clipped; gather, so
+    no duplicate-scatter ordering hazards) and the per-slot absolute
+    position (-1 = empty). ``length`` may be a traced scalar -- one compiled
+    prefill serves every prompt length in a bucket. Linear caches (T >=
+    prompt) are the ring's trivial case: slot j <- position j.
+    """
+    j = jnp.arange(t)
+    last = jnp.asarray(length, jnp.int32) - 1
+    src = j + t * ((last - j) // t)         # latest p <= last with p%T == j
+    ok = (src >= 0) & (src <= last)
+    return jnp.clip(src, 0, s - 1), jnp.where(ok, src, -1)
+
+
 def _split_heads(x, n_heads, head_dim):
     b, s, _ = x.shape
     return x.reshape(b, s, n_heads, head_dim)
@@ -271,9 +320,13 @@ def local_attention(q, k, v, *, window, q_offset=0):
 def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0):
     """One-step decode: q (B,1,Hq,D) vs caches (B,T,Hkv,D).
 
-    ``kv_positions`` (T,) holds the absolute position stored in each cache
-    slot (-1 = empty) -- this supports both linear caches (slot == position)
-    and ring caches for windowed layers (slot == position % window).
+    ``kv_positions`` holds the absolute position stored in each cache slot
+    (-1 = empty) -- this supports both linear caches (slot == position) and
+    ring caches for windowed layers (slot == position % window). It is
+    either (T,), shared by every batch row, or (B, T) with one map per
+    request slot; ``pos`` is correspondingly a scalar or a (B,) vector of
+    ragged per-slot positions, so mixed-progress requests share one batched
+    decode call with per-row causal/window masks.
     """
     b, _, hq, d = q.shape
     t, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -281,10 +334,13 @@ def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0):
     qg = q.reshape(b, 1, hkv, g, d)
     scores = jnp.einsum("bqhgd,bthd->bhgqt", qg, k_cache,
                         preferred_element_type=jnp.float32) * (d ** -0.5)
-    ok = (kv_positions >= 0) & (kv_positions <= pos)
+    kvp = kv_positions if kv_positions.ndim == 2 else kv_positions[None, :]
+    posv = jnp.asarray(pos, jnp.int32)
+    posv = posv[:, None] if posv.ndim else posv[None, None]     # (B|1, 1)
+    ok = (kvp >= 0) & (kvp <= posv)
     if window > 0:
-        ok &= kv_positions > pos - window
-    scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
+        ok &= kvp > posv - window
+    scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqt,bthd->bqhgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, hq, d)
@@ -309,8 +365,10 @@ def init_attention(key, cfg):
 
 def init_cache_attn(cfg, batch, cache_len, window=0, dtype=None):
     """Linear cache for global layers, ring cache (len=window) for local.
-    With cfg.kv_cache_quant, K/V are stored int8 with per-(slot, head)
-    scales (dequantized tile-wise inside attention)."""
+    ``pos_map`` is (batch, T): each request slot tracks its own occupancy so
+    slots at different positions batch into one decode call. With
+    cfg.kv_cache_quant, K/V are stored int8 with per-(slot, head) scales
+    (dequantized tile-wise inside attention)."""
     t = min(cache_len, window) if window > 0 else cache_len
     dtype = dtype or cfg.jdtype
     shape = (batch, t, cfg.n_kv_heads, cfg.head_dim)
@@ -319,10 +377,10 @@ def init_cache_attn(cfg, batch, cache_len, window=0, dtype=None):
                 "v": jnp.zeros(shape, jnp.int8),
                 "k_scale": jnp.zeros(shape[:3], jnp.bfloat16),
                 "v_scale": jnp.zeros(shape[:3], jnp.bfloat16),
-                "pos_map": jnp.full((t,), -1, jnp.int32)}
+                "pos_map": jnp.full((batch, t), -1, jnp.int32)}
     return {"k": jnp.zeros(shape, dtype),
             "v": jnp.zeros(shape, dtype),
-            "pos_map": jnp.full((t,), -1, jnp.int32)}
+            "pos_map": jnp.full((batch, t), -1, jnp.int32)}
 
 
 def _quantize_kv(x):
@@ -339,9 +397,36 @@ def _dequantize_kv(q, scale, dtype):
             scale[..., None].astype(jnp.float32)).astype(dtype)
 
 
+def _write_prefill_kv(cache, k, v, length):
+    """One-pass prompt prefill: replace the slot cache's contents with the
+    K/V of positions 0..length-1 (k/v: (B, S>=length, Hkv, D)). Ring caches
+    keep the window-latest positions; padding slots read as empty."""
+    b, s = k.shape[0], k.shape[1]
+    t = cache["k"].shape[1]
+    src, slot_pos = prefill_slot_sources(t, length, s)
+
+    def take(vals):
+        g = jnp.take(vals, src, axis=1)
+        keep = (slot_pos >= 0).reshape((1, t) + (1,) * (g.ndim - 2))
+        return jnp.where(keep, g, jnp.zeros_like(g))
+
+    pm = jnp.broadcast_to(slot_pos[None], (b, t))
+    if "k_scale" in cache:          # int8 quantized cache
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        return {"k": take(kq), "v": take(vq), "k_scale": take(ks),
+                "v_scale": take(vs), "pos_map": pm}
+    return {"k": take(k), "v": take(v), "pos_map": pm}
+
+
 def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
-                    packs=None, causal=True, kv_override=None):
+                    packs=None, causal=True, kv_override=None,
+                    prefill_len=None):
     """x: (B,S,d). Returns (out, new_cache). Train/prefill when cache is None.
+    With a cache and S > 1, the call is a *prompt prefill*: normal causal
+    attention over the S tokens plus a bulk cache write of positions
+    0..prefill_len-1 (prefill_len defaults to S; tokens past it are padding
+    and leave no trace -- serving/engine.py buckets prompt lengths).
 
     kv_override: (k, v) tensors for cross-attention (enc-dec).
 
@@ -381,7 +466,7 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
                        rotary_fraction=cfg.rotary_fraction)
 
     new_cache = cache
-    if cache is None:
+    if cache is None or s > 1:
         if not causal:
             out = full_attention(q, k, v, causal=False) if s <= 2048 else \
                 flash_attention(q, k, v, causal=False,
@@ -394,35 +479,46 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
             out = flash_attention(q, k, v, causal=True, window=window,
                                   q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
                                   softcap=cfg.attn_logit_softcap)
+        if cache is not None:       # prompt prefill: bulk-write the KV
+            assert kv_override is None, "prefill is self-attention only"
+            new_cache = _write_prefill_kv(
+                cache, k, v, s if prefill_len is None else prefill_len)
     else:
         assert s == 1 and pos is not None
         if kv_override is None:
             t = cache["k"].shape[1]
-            slot = pos % t
-            pm = cache["pos_map"].at[slot].set(pos)
+            posv = as_slot_positions(pos, b)
+            active = posv >= 0
+            slot = jnp.maximum(posv, 0) % t                 # (B,) ring slots
+            rows = jnp.arange(b)
+            pm = cache["pos_map"]
+            if pm.ndim == 1:                                # legacy shared map
+                pm = jnp.broadcast_to(pm, (b, t))
+            pm = _masked_row_write(pm, rows, slot, jnp.maximum(posv, 0),
+                                   active)
             if "k_scale" in cache:   # int8 quantized cache
                 kq, ks = _quantize_kv(k)
                 vq, vs = _quantize_kv(v)
-                ck = jax.lax.dynamic_update_slice(cache["k"], kq,
-                                                  (0, slot, 0, 0))
-                cv = jax.lax.dynamic_update_slice(cache["v"], vq,
-                                                  (0, slot, 0, 0))
-                cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
-                                                   (0, slot, 0))
-                cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
-                                                   (0, slot, 0))
+                ck = _masked_row_write(cache["k"], rows, slot, kq[:, 0],
+                                       active)
+                cv = _masked_row_write(cache["v"], rows, slot, vq[:, 0],
+                                       active)
+                cks = _masked_row_write(cache["k_scale"], rows, slot,
+                                        ks[:, 0], active)
+                cvs = _masked_row_write(cache["v_scale"], rows, slot,
+                                        vs[:, 0], active)
                 new_cache = {"k": ck, "v": cv, "k_scale": cks,
                              "v_scale": cvs, "pos_map": pm}
                 kd = _dequantize_kv(ck, cks, q.dtype)
                 vd = _dequantize_kv(cv, cvs, q.dtype)
-                out = decode_attention(q, kd, vd, pm, pos, window=window)
+                out = decode_attention(q, kd, vd, pm, posv, window=window)
             else:
-                ck = jax.lax.dynamic_update_slice(cache["k"], k,
-                                                  (0, slot, 0, 0))
-                cv = jax.lax.dynamic_update_slice(cache["v"], v,
-                                                  (0, slot, 0, 0))
+                ck = _masked_row_write(cache["k"], rows, slot, k[:, 0],
+                                       active)
+                cv = _masked_row_write(cache["v"], rows, slot, v[:, 0],
+                                       active)
                 new_cache = {"k": ck, "v": cv, "pos_map": pm}
-                out = decode_attention(q, ck, cv, pm, pos, window=window)
+                out = decode_attention(q, ck, cv, pm, posv, window=window)
         else:
             # cross-attn decode: every encoder position is visible
             t = k.shape[1]

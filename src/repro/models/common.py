@@ -103,6 +103,21 @@ def linear(p, x, pack=None, backend=None):
     return jnp.einsum("...k,nk->...n", x, p["w"])
 
 
+def prefill_conv_history(x, valid, length, width, dtype):
+    """Conv-cache state after a one-pass prompt prefill: the last ``width``
+    pre-conv inputs of the real prompt. ``x``: (B, S, C) bucket-padded
+    inputs, ``valid``: (1, S, 1) real-token mask, ``length`` (traced OK) the
+    prompt length. Masking then left-padding ``width`` zeros makes prompts
+    shorter than the conv window zero-fill exactly like a fresh decode
+    cache. Shared by the SSM and RG-LRU prefill paths."""
+    b = x.shape[0]
+    padded = jnp.concatenate(
+        [jnp.zeros((b, width) + x.shape[2:], x.dtype),
+         jnp.where(valid, x, 0)], axis=1)
+    return jax.lax.dynamic_slice_in_dim(
+        padded, jnp.asarray(length, jnp.int32), width, axis=1).astype(dtype)
+
+
 def init_mlp(key, d_model, d_ff, act="swiglu", dtype=jnp.float32):
     k1, k2, k3 = jax.random.split(key, 3)
     if act in ("swiglu", "geglu"):

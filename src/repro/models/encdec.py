@@ -126,9 +126,13 @@ def init_cache(params, cfg: ModelConfig, frames, cache_len):
 
 
 def decode_step(params, cache, cfg: ModelConfig, token, pos):
+    """``pos``: scalar or ragged (B,) per-slot positions (lm.decode_step
+    convention; rows with pos < 0 are inactive and leave their cache
+    untouched)."""
     b = token.shape[0]
     h = jnp.take(params["embed"]["w"], token, axis=0)
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    pos = attn.as_slot_positions(pos, b)
+    positions = jnp.maximum(pos, 0)[:, None]
 
     def body(h, xs):
         lp, self_c, ck, cv = xs
@@ -145,3 +149,28 @@ def decode_step(params, cache, cfg: ModelConfig, token, pos):
                         preferred_element_type=jnp.float32)
     return logits, {"self": new_self, "cross_k": cache["cross_k"],
                     "cross_v": cache["cross_v"]}
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle (every cache leaf is layer-stacked: slot dim at axis 1)
+# ---------------------------------------------------------------------------
+
+def reset_slot(cache, slot):
+    """Zero request slot ``slot``: ring self-KV (+pos_map -> -1) AND the
+    per-slot cross K/V, so a recycled slot cannot leak its previous
+    request's audio context."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: x.at[:, slot].set(attn.slot_reset_value(p, x[:, slot])),
+        cache)
+
+
+def write_slot(cache, slot, sub):
+    """Insert a batch-1 cache (init_cache over one request's frames) into
+    slot ``slot`` -- admission writes both the fresh self cache and the
+    request's encoder cross K/V."""
+    return jax.tree_util.tree_map(lambda x, y: x.at[:, slot].set(y[:, 0]),
+                                  cache, sub)
+
+
+def read_slot(cache, slot):
+    return jax.tree_util.tree_map(lambda x: x[:, slot:slot + 1], cache)

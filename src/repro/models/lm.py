@@ -86,26 +86,28 @@ def init_lm(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(p, h, cfg, kind: LayerKind, *, positions, cache=None,
-                 pos=None, packs=None):
+                 pos=None, packs=None, prefill_len=None):
     hn = apply_norm(p["norm1"], h, cfg.norm)
     aux = jnp.zeros((), jnp.float32)
     mix_packs = _layer_packs(packs, "attn") or _layer_packs(packs, "mixer")
     if kind.mixer in ("attn", "local"):
         out, new_mix_cache = attn.apply_attention(
             p["attn"], hn, cfg, positions=positions, window=kind.window,
-            cache=cache.get("mix") if cache else None, pos=pos, packs=mix_packs)
+            cache=cache.get("mix") if cache else None, pos=pos,
+            packs=mix_packs, prefill_len=prefill_len)
     elif kind.mixer == "mla":
         out, new_mix_cache = mla_mod.apply_mla(
             p["attn"], hn, cfg, positions=positions,
-            cache=cache.get("mix") if cache else None, pos=pos, packs=mix_packs)
+            cache=cache.get("mix") if cache else None, pos=pos,
+            packs=mix_packs, prefill_len=prefill_len)
     elif kind.mixer == "ssm":
         out, new_mix_cache = ssm_mod.apply_ssm(
             p["mixer"], hn, cfg, cache=cache.get("mix") if cache else None,
-            pos=pos, packs=mix_packs)
+            pos=pos, packs=mix_packs, prefill_len=prefill_len)
     elif kind.mixer == "rglru":
         out, new_mix_cache = rglru_mod.apply_rglru(
             p["mixer"], hn, cfg, cache=cache.get("mix") if cache else None,
-            pos=pos, packs=mix_packs)
+            pos=pos, packs=mix_packs, prefill_len=prefill_len)
     # name the mixer output so the remat policy can pin it: the layer-body
     # recompute then skips re-running attention forward (saves ~2 of the 9
     # O(S^2) passes per layer; §Perf iter 4)
@@ -217,14 +219,72 @@ def init_cache(cfg: ModelConfig, batch, cache_len):
     }
 
 
+# ---------------------------------------------------------------------------
+# slot lifecycle (continuous batching: the batch dim is request slots)
+#
+# Cache leaves carry the slot dim at axis 0 in the unrolled prefix/suffix
+# sections and at axis 1 in the scan-stacked ``blocks`` groups (leading dim =
+# layer period), so the slot ops are defined here where that layout is known.
+# ---------------------------------------------------------------------------
+
+def _map_slot_sections(fn0, fn1, *caches):
+    """Apply ``fn0`` (slot axis 0) / ``fn1`` (slot axis 1) leafwise across
+    one or more structurally identical caches."""
+    tmap = jax.tree_util.tree_map
+    return {
+        "prefix": tuple(tmap(fn0, *cs)
+                        for cs in zip(*(c["prefix"] for c in caches))),
+        "blocks": tuple(tmap(fn1, *cs)
+                        for cs in zip(*(c["blocks"] for c in caches))),
+        "suffix": tuple(tmap(fn0, *cs)
+                        for cs in zip(*(c["suffix"] for c in caches))),
+    }
+
+
+def reset_slot(cache, slot):
+    """Zero request slot ``slot``: attention KV + pos_map AND the SSM/RgLRU
+    recurrent and conv state, so a recycled slot cannot leak its previous
+    request. Returns the updated cache (functional)."""
+    reset = attn.slot_reset_value
+    mp = jax.tree_util.tree_map_with_path
+    f0 = lambda c: mp(lambda p, x: x.at[slot].set(reset(p, x[slot])), c)
+    f1 = lambda c: mp(
+        lambda p, x: x.at[:, slot].set(reset(p, x[:, slot])), c)
+    return {"prefix": tuple(f0(c) for c in cache["prefix"]),
+            "blocks": tuple(f1(c) for c in cache["blocks"]),
+            "suffix": tuple(f0(c) for c in cache["suffix"])}
+
+
+def write_slot(cache, slot, sub):
+    """Insert single-request cache ``sub`` (batch == 1, e.g. a prefill
+    result) into slot ``slot`` of the batched ``cache``."""
+    return _map_slot_sections(lambda x, y: x.at[slot].set(y[0]),
+                              lambda x, y: x.at[:, slot].set(y[:, 0]),
+                              cache, sub)
+
+
+def read_slot(cache, slot):
+    """Extract slot ``slot`` as a batch-1 cache (the write_slot inverse)."""
+    return _map_slot_sections(lambda x: x[slot:slot + 1],
+                              lambda x: x[:, slot:slot + 1], cache)
+
+
 def decode_step(params, cache, cfg: ModelConfig, token, pos, *, packs=None):
-    """token (B, 1) + caches at absolute position ``pos`` -> (logits, cache)."""
+    """token (B, 1) + caches at absolute position ``pos`` -> (logits, cache).
+
+    ``pos`` is a scalar (every row at the same position -- the single-request
+    convention) or an int32 (B,) vector of ragged per-slot positions: each
+    batch row is an independent request slot with its own causal/window mask
+    and cache write slot. Rows with ``pos < 0`` are inactive -- their cache
+    state is left untouched and their logits are meaningless.
+    """
     prefix, pattern, n_periods, suffix = cfg.layer_plan()
     b = token.shape[0]
     h = jnp.take(params["embed"]["w"], token, axis=0)
     if cfg.scale_embedding:
         h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    pos = attn.as_slot_positions(pos, b)
+    positions = jnp.maximum(pos, 0)[:, None]          # (B, 1), rope-safe
 
     new_prefix = []
     for i, kind in enumerate(prefix):
@@ -253,6 +313,64 @@ def decode_step(params, cache, cfg: ModelConfig, token, pos, *, packs=None):
         h, c, _ = _apply_layer(params["suffix"][i], h, cfg, kind,
                                positions=positions, cache=cache["suffix"][i],
                                pos=pos, packs=_layer_packs(packs, f"suffix/{i}"))
+        new_suffix.append(c)
+
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = jnp.einsum("bsd,vd->bsv", h, head,
+                        preferred_element_type=jnp.float32)
+    new_cache = {"prefix": tuple(new_prefix), "blocks": new_blocks,
+                 "suffix": tuple(new_suffix)}
+    return logits, new_cache
+
+
+def prefill_cache(params, cache, cfg: ModelConfig, tokens, length=None, *,
+                  packs=None):
+    """One-pass prompt prefill: ``tokens`` (B, S) starting at position 0 run
+    through the *forward* attention/SSD/LRU paths (one weight stream for the
+    whole prompt, not one per token), while every layer bulk-writes the
+    state of positions 0..length-1 into ``cache``. ``length`` (<= S, traced
+    OK) marks the real prompt; the tail is bucket padding and leaves no
+    trace. Returns (logits (B, S, V) f32, cache) -- sample the next token
+    from ``logits[:, length - 1]``.
+    """
+    prefix, pattern, n_periods, suffix = cfg.layer_plan()
+    b, s = tokens.shape
+    length = s if length is None else length
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    if cfg.scale_embedding:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    positions = jnp.arange(s)[None, :]
+
+    new_prefix = []
+    for i, kind in enumerate(prefix):
+        h, c, _ = _apply_layer(params["prefix"][i], h, cfg, kind,
+                               positions=positions, cache=cache["prefix"][i],
+                               prefill_len=length,
+                               packs=_layer_packs(packs, f"prefix/{i}"))
+        new_prefix.append(c)
+
+    new_blocks = cache["blocks"]
+    if n_periods > 0:
+        def body(h, xs):
+            layer_ps, layer_cs = xs
+            new_cs = []
+            for i, kind in enumerate(pattern):
+                h, c, _ = _apply_layer(layer_ps[i], h, cfg, kind,
+                                       positions=positions, cache=layer_cs[i],
+                                       prefill_len=length,
+                                       packs=_layer_packs(packs, f"blocks/{i}"))
+                new_cs.append(c)
+            return h, tuple(new_cs)
+        h, new_blocks = jax.lax.scan(body, h,
+                                     (params["blocks"], cache["blocks"]))
+
+    new_suffix = []
+    for i, kind in enumerate(suffix):
+        h, c, _ = _apply_layer(params["suffix"][i], h, cfg, kind,
+                               positions=positions, cache=cache["suffix"][i],
+                               prefill_len=length,
+                               packs=_layer_packs(packs, f"suffix/{i}"))
         new_suffix.append(c)
 
     h = apply_norm(params["final_norm"], h, cfg.norm)

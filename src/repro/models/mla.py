@@ -11,7 +11,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import decode_attention, flash_attention, full_attention
+from repro.models.attention import (_masked_row_write, as_slot_positions,
+                                    decode_attention, flash_attention,
+                                    full_attention, prefill_slot_sources)
 from repro.models.common import apply_rope, init_linear, linear, rms_norm
 
 
@@ -35,27 +37,28 @@ def init_cache_mla(cfg, batch, cache_len, dtype=None):
     dtype = dtype or cfg.jdtype
     return {"c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
             "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
-            "pos_map": jnp.full((cache_len,), -1, jnp.int32)}
+            "pos_map": jnp.full((batch, cache_len), -1, jnp.int32)}
 
 
-def _project_q(p, x, cfg):
+def _project_q(p, x, cfg, packs=None):
     b, s, _ = x.shape
     h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
-    q = linear(p["wq"], x).reshape(b, s, h, dn + dr)
+    q = linear(p["wq"], x, packs and packs.get("wq")).reshape(b, s, h, dn + dr)
     return q[..., :dn], q[..., dn:]
 
 
-def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None):
+def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None,
+              prefill_len=None):
     b, s, d = x.shape
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    q_nope, q_rope = _project_q(p, x, cfg)
+    q_nope, q_rope = _project_q(p, x, cfg, packs)
     q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
 
     c_kv = rms_norm(linear(p["w_dkv"], x), p["kv_norm"]["scale"])
     k_rope = apply_rope(linear(p["w_krope"], x)[:, :, None, :],
                         positions, theta=cfg.rope_theta)       # (b,s,1,dr)
 
-    if cache is None:
+    if cache is None or s > 1:
         # expanded path: materialize per-head K/V from latents
         k_nope = linear(p["w_uk"], c_kv).reshape(b, s, h, dn)
         v = linear(p["w_uv"], c_kv).reshape(b, s, h, dv)
@@ -68,16 +71,37 @@ def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None):
         o = attn(q, k, vp, causal=True)[..., :dv]
         out = linear(p["wo"], o.reshape(b, s, h * dv),
                      packs and packs.get("wo"))
-        return out, None
+        if cache is None:
+            return out, None
+        # prompt prefill: bulk-write the latent cache (linear, T >= prompt)
+        t = cache["c_kv"].shape[1]
+        src, slot_pos = prefill_slot_sources(
+            t, s if prefill_len is None else prefill_len, s)
+        keep2 = (slot_pos >= 0)[None, :, None]
+        new_cache = {
+            "c_kv": jnp.where(keep2, jnp.take(c_kv, src, axis=1), 0.0
+                              ).astype(cache["c_kv"].dtype),
+            "k_rope": jnp.where(keep2, jnp.take(k_rope[:, :, 0, :], src,
+                                                axis=1), 0.0
+                                ).astype(cache["k_rope"].dtype),
+            "pos_map": jnp.broadcast_to(slot_pos[None], (b, t)),
+        }
+        return out, new_cache
 
     # ---- absorbed decode: score against the latent cache ----------------
     assert s == 1 and pos is not None
     t = cache["c_kv"].shape[1]
-    slot = pos % t
-    c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, slot, 0))
-    r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope[:, :, 0, :],
-                                           (0, slot, 0))
-    pm = cache["pos_map"].at[slot].set(pos)
+    posv = as_slot_positions(pos, b)                    # ragged per-slot pos
+    active = posv >= 0
+    slot = jnp.maximum(posv, 0) % t
+    rows = jnp.arange(b)
+    c_cache = _masked_row_write(cache["c_kv"], rows, slot, c_kv[:, 0], active)
+    r_cache = _masked_row_write(cache["k_rope"], rows, slot,
+                                k_rope[:, 0, 0, :], active)
+    pm = cache["pos_map"]
+    if pm.ndim == 1:                                    # legacy shared map
+        pm = jnp.broadcast_to(pm, (b, t))
+    pm = _masked_row_write(pm, rows, slot, jnp.maximum(posv, 0), active)
     new_cache = {"c_kv": c_cache, "k_rope": r_cache, "pos_map": pm}
 
     w_uk = p["w_uk"]["w"].reshape(h, dn, cfg.kv_lora_rank)    # (h, dn, r)
@@ -87,8 +111,8 @@ def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None):
     s_rope = jnp.einsum("bqhd,btd->bhqt", q_rope.astype(jnp.float32),
                         r_cache.astype(jnp.float32))
     scores = (s_lat + s_rope) * ((dn + dr) ** -0.5)
-    ok = (pm >= 0) & (pm <= pos)
-    scores = jnp.where(ok[None, None, None, :], scores, -1e30)
+    ok = (pm >= 0) & (pm <= posv[:, None])              # per-row causal mask
+    scores = jnp.where(ok[:, None, None, :], scores, -1e30)
     pr = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhqt,btr->bqhr", pr, c_cache.astype(jnp.float32))
     w_uv = p["w_uv"]["w"].reshape(h, dv, cfg.kv_lora_rank)

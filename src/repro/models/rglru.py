@@ -16,7 +16,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import init_linear, linear, normal_init
+from repro.models.attention import as_slot_positions
+from repro.models.common import (init_linear, linear, normal_init,
+                                 prefill_conv_history)
 
 _C = 8.0
 
@@ -66,15 +68,25 @@ def _lru_gates(p, xr):
     return a, gated_in
 
 
-def apply_rglru(p, x, cfg, *, cache=None, pos=None, packs=None, **_):
+def apply_rglru(p, x, cfg, *, cache=None, pos=None, packs=None,
+                prefill_len=None, **_):
     b, s, _ = x.shape
     gate = jax.nn.gelu(linear(p["in_gate"], x,
                               packs and packs.get("in_gate")).astype(jnp.float32))
     xr = linear(p["in_x"], x, packs and packs.get("in_x"))
 
-    if cache is None:
+    prefill = cache is not None and s > 1
+    if cache is None or prefill:
+        xr_raw = xr
         xr = _conv(xr, p["conv_w"], p["conv_b"])
         a, u = _lru_gates(p, xr)
+        if prefill:
+            # padding steps (>= prefill_len) become identity: a = 1, u = 0,
+            # so the scan's value at length-1 persists to the last slot
+            length = s if prefill_len is None else prefill_len
+            valid = (jnp.arange(s) < length)[None, :, None]
+            a = jnp.where(valid, a, 1.0)
+            u = jnp.where(valid, u, 0.0)
         # parallel linear recurrence: h_t = a_t h_{t-1} + u_t
         def combine(c1, c2):
             a1, u1 = c1
@@ -83,12 +95,26 @@ def apply_rglru(p, x, cfg, *, cache=None, pos=None, packs=None, **_):
         aa, hh = jax.lax.associative_scan(combine, (a, u), axis=1)
         h = hh
         new_cache = None
+        if prefill:
+            new_cache = {
+                "h": hh[:, -1],                 # padding holds h at length-1
+                "conv": prefill_conv_history(xr_raw, valid, length,
+                                             cfg.conv_width - 1,
+                                             cache["conv"].dtype),
+            }
     else:
+        # inactive slots (ragged pos < 0) keep h and the conv history
+        # untouched -- see attention.as_slot_positions
+        active = (as_slot_positions(pos, b) >= 0) if pos is not None \
+            else jnp.ones((b,), bool)
         hist = jnp.concatenate([cache["conv"], xr], axis=1)
         xr = _conv(hist, p["conv_w"], p["conv_b"])[:, -1:]
         a, u = _lru_gates(p, xr)
-        h = a[:, 0] * cache["h"] + u[:, 0]
-        new_cache = {"h": h, "conv": hist[:, 1:]}
+        h = jnp.where(active[:, None], a[:, 0] * cache["h"] + u[:, 0],
+                      cache["h"])
+        new_conv = jnp.where(active[:, None, None], hist[:, 1:],
+                             cache["conv"])
+        new_cache = {"h": h, "conv": new_conv}
         h = h[:, None]
 
     y = (h * gate).astype(x.dtype)

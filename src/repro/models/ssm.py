@@ -14,7 +14,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import init_linear, linear, normal_init, rms_norm
+from repro.models.attention import as_slot_positions
+from repro.models.common import (init_linear, linear, normal_init,
+                                 prefill_conv_history, rms_norm)
 
 
 def _dims(cfg):
@@ -79,14 +81,16 @@ def _split_proj(zxbcdt, cfg):
     return z, x, bmat, cmat, dt
 
 
-def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None, **_):
+def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None,
+              prefill_len=None, **_):
     b, s, _ = xin.shape
     d_inner, h, p_dim, n = _dims(cfg)
     zxbcdt = linear(p["in_proj"], xin, packs and packs.get("in_proj"))
     z, x, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
 
+    prefill = cache is not None and s > 1
     conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
-    if cache is None:
+    if cache is None or prefill:
         conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
     else:
         hist = jnp.concatenate([cache["conv"], conv_in], axis=1)
@@ -98,19 +102,39 @@ def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None, **_):
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
                          p["dt_bias"][None, None, :])       # (b,s,h)
     a_neg = -jnp.exp(p["A_log"])                             # (h,)
+    if prefill:
+        # prompt prefill: padding tokens (>= prefill_len) must be identity
+        # steps -- dt = 0 zeroes both their decay (exp(0) = 1) and their
+        # state contribution, so the scan's final carry IS the state after
+        # the real prompt
+        length = s if prefill_len is None else prefill_len
+        valid = (jnp.arange(s) < length)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
     da = dt * a_neg[None, None, :]                           # log-decay (b,s,h)
     bmat = bmat.astype(jnp.float32)                          # (b,s,n)
     cmat = cmat.astype(jnp.float32)
 
-    if cache is None:
-        y = _ssd_chunked(xh, dt, da, bmat, cmat, cfg.ssm_chunk)
+    if cache is None or prefill:
+        y, state = _ssd_chunked(xh, dt, da, bmat, cmat, cfg.ssm_chunk,
+                                return_state=True)
         new_cache = None
+        if prefill:
+            new_cache = {"state": state,
+                         "conv": prefill_conv_history(
+                             conv_in, valid, length, cfg.conv_width - 1,
+                             cache["conv"].dtype)}
     else:
-        # O(1) recurrent decode step
+        # O(1) recurrent decode step; inactive slots (ragged pos < 0) keep
+        # their recurrent + conv state untouched so a shared batched decode
+        # call cannot corrupt a paused or free request slot
+        active = (as_slot_positions(pos, b) >= 0) if pos is not None \
+            else jnp.ones((b,), bool)
         state = cache["state"]                               # (b,h,p,n)
         decay = jnp.exp(da[:, 0, :])[..., None, None]        # (b,h,1,1)
         upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], bmat[:, 0])
-        state = state * decay + upd
+        state = jnp.where(active[:, None, None, None],
+                          state * decay + upd, cache["state"])
+        new_conv = jnp.where(active[:, None, None], new_conv, cache["conv"])
         y = jnp.einsum("bhpn,bn->bhp", state, cmat[:, 0])
         y = y.reshape(b, 1, h, p_dim)
         new_cache = {"state": state, "conv": new_conv}
@@ -123,8 +147,10 @@ def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None, **_):
     return out, new_cache
 
 
-def _ssd_chunked(x, dt, da, bmat, cmat, chunk):
-    """Chunked SSD. x:(b,s,h,p) f32, dt/da:(b,s,h), B/C:(b,s,n)."""
+def _ssd_chunked(x, dt, da, bmat, cmat, chunk, return_state=False):
+    """Chunked SSD. x:(b,s,h,p) f32, dt/da:(b,s,h), B/C:(b,s,n).
+    With ``return_state`` also returns the final recurrent state (b,h,p,n)
+    -- the carry a one-pass prompt prefill hands to the decode path."""
     b, s, h, p_dim = x.shape
     n = bmat.shape[-1]
     q = min(chunk, s)
@@ -163,7 +189,7 @@ def _ssd_chunked(x, dt, da, bmat, cmat, chunk):
         carry = carry * dec[..., None, None] + st
         return carry, out
     init = jnp.zeros((b, h, p_dim, n), jnp.float32)
-    _, prev_states = jax.lax.scan(
+    final_state, prev_states = jax.lax.scan(
         step, init, (states.transpose(1, 0, 2, 3, 4),
                      chunk_decay.transpose(1, 0, 2)))
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
@@ -173,4 +199,6 @@ def _ssd_chunked(x, dt, da, bmat, cmat, chunk):
     y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
                        cc, prev_states, decay_from_start)
     y = (y_diag + y_off).reshape(b, nc * q, h, p_dim)
+    if return_state:
+        return y[:, :s], final_state
     return y[:, :s]

@@ -6,7 +6,12 @@
     logits = servable.forward(batch)
     servable.save("ckpt/")            # export cost paid once per model
     servable = load_servable("ckpt/")
+
+    engine = servable.engine(max_slots=16, cache_len=512)   # continuous
+    h = engine.submit(prompt_tokens, max_new_tokens=32)     # batching
+    engine.run(); print(h.tokens)
 """
+from repro.serving.engine import EngineRequest, EngineStats, ServingEngine
 from repro.serving.export import (export_bert_sparse, export_lm_sparse,
                                   export_params, pack_single, pack_stacked)
 from repro.serving.servable import (SERVABLE_STEP, Servable, load_servable,

@@ -1,0 +1,291 @@
+"""Continuous-batching serving engine: request slots over one batched decode.
+
+The model layer's decode path takes a ragged ``pos: (B,)`` vector (one
+absolute position per batch row, -1 = inactive; models/api.py), which turns
+the batch dimension into *request slots*. This module adds the request-level
+machinery on top:
+
+  * an **admission queue** -- ``submit()`` enqueues requests; each ``step()``
+    admits as many as there are free slots;
+  * **prefill-into-cache** -- an admitted prompt runs ONE forward pass on a
+    batch-1 cache (``models.api.prefill_cache``: the full prompt streams the
+    weights once, with bulk KV/recurrent-state writes; audio scans the
+    decode path instead, its prompts being BOS-sized). Prompt lengths are
+    padded to power-of-two *buckets* so the per-bucket jit executables stay
+    warm -- padding tokens leave no trace in the cache -- and the result is
+    inserted into the engine cache with ``write_slot``;
+  * **one jitted batched decode per step** over all ``max_slots`` rows --
+    mixed-progress requests share the call via per-slot causal/window masks;
+    the engine cache is donated to the step, so decode is copy-free;
+  * **slot lifecycle** -- completion fires the request's callbacks and
+    ``free_slot``-zeroes the slot (attention KV *and* SSM/RgLRU recurrent
+    state), so a recycled slot cannot leak its previous request.
+
+Construct via :meth:`repro.serving.Servable.engine`::
+
+    engine = servable.engine(max_slots=16, cache_len=512)
+    h = engine.submit([1, 2, 3], max_new_tokens=32,
+                      on_token=lambda rid, tok: print(rid, tok))
+    engine.run()                      # drain queue + active slots
+    print(h.tokens)                   # greedy continuation
+
+Known batching caveat: MoE layers route over the whole batch with a
+capacity limit, so token drops can depend on which slots are co-resident --
+for MoE configs the engine is still correct serving-wise but not bitwise
+equal to sequential decode (all other families are; tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api as model_api
+
+__all__ = ["EngineRequest", "EngineStats", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    """One submitted request; doubles as the caller's result handle."""
+
+    req_id: int
+    prompt: np.ndarray                      # (L,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    frames: Optional[np.ndarray] = None     # audio family: encoder input
+    on_token: Optional[Callable[[int, int], None]] = None
+    on_done: Optional[Callable[[int, List[int]], None]] = None
+
+    # engine-owned state
+    slot: int = -1
+    pos: int = -1                           # next decode position
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    step_logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0                  # batched decode calls
+    prefills: int = 0
+    tokens_generated: int = 0
+    occupancy_sum: int = 0          # sum over steps of active slots
+    completed: int = 0
+    bucket_hits: Dict[int, int] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(int))
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    def as_dict(self) -> Dict:
+        return {"steps": self.steps, "prefills": self.prefills,
+                "tokens_generated": self.tokens_generated,
+                "completed": self.completed,
+                "mean_occupancy": round(self.mean_occupancy, 3),
+                "prefill_buckets": dict(self.bucket_hits)}
+
+
+class ServingEngine:
+    """Slot-addressable continuous-batching engine over a Servable.
+
+    ``max_slots`` bounds request concurrency (the static batch of the one
+    jitted decode executable); ``cache_len`` bounds prompt + generation
+    length per slot (windowed/recurrent layers keep their own tighter
+    state bounds).
+    """
+
+    def __init__(self, servable, max_slots: int = 8, cache_len: int = 256,
+                 *, min_bucket: int = 8, collect_logits: bool = False):
+        if servable.cfg.family == "bert":
+            raise ValueError("encoder-only arch has no decode step")
+        self.servable = servable
+        self.cfg = servable.cfg
+        self.max_slots = int(max_slots)
+        self.cache_len = int(cache_len)
+        # floor of 2: a length-1 "prefill" would hit the single-token decode
+        # path (s == 1), which expects a pos argument
+        self.min_bucket = max(2, int(min_bucket))
+        self.collect_logits = collect_logits
+        self.stats = EngineStats()
+
+        self._sub_template = None
+        if self.cfg.family == "audio":
+            # structure-only cache: encode batch-1 zero frames and broadcast
+            # the slot axis (axis 1; every leaf is layer-stacked) -- the real
+            # cross K/V arrives per request via write_slot at admission
+            one = model_api.init_cache(
+                servable.params, self.cfg, 1, self.cache_len,
+                frames=jnp.zeros((1, self.cfg.n_audio_ctx, self.cfg.d_model),
+                                 self.cfg.jdtype))
+            self.cache = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    x, x.shape[:1] + (self.max_slots,) + x.shape[2:]), one)
+        else:
+            self.cache = model_api.init_cache(servable.params, self.cfg,
+                                              self.max_slots, self.cache_len)
+            # single-request cache template reused by every prefill (the
+            # prefill is functional; audio rebuilds per request from frames)
+            self._sub_template = model_api.init_cache(
+                servable.params, self.cfg, 1, self.cache_len)
+
+        self._tokens = np.zeros((self.max_slots, 1), np.int32)
+        self._pos = np.full((self.max_slots,), -1, np.int32)
+        self._free: List[int] = list(range(self.max_slots))
+        self._active: Dict[int, EngineRequest] = {}
+        self._queue: "collections.deque[EngineRequest]" = collections.deque()
+        self._requests: List[EngineRequest] = []
+        self._next_id = 0
+
+        # jitted functions are owned by the Servable and shared across its
+        # engines: one decode executable per max_slots shape, one prefill
+        # trace per bucket length, warm for the engine's whole lifetime (and
+        # the next engine's). The decode cache argument is donated, so the
+        # hot loop never copies the slot caches.
+        self._decode = servable._engine_decode_fn()
+        self._prefill = servable._engine_prefill_fn()
+        self._write_slot, self._free_slot = servable._engine_slot_fns()
+
+    # -- submission -------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,
+               eos_id: Optional[int] = None, frames=None,
+               on_token: Optional[Callable[[int, int], None]] = None,
+               on_done: Optional[Callable[[int, List[int]], None]] = None
+               ) -> EngineRequest:
+        """Enqueue a request; returns its handle (``.tokens`` fills as the
+        engine runs, ``.done`` flips on completion)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the prefill "
+                             "already samples the first token)")
+        if prompt.size + max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds cache_len ({self.cache_len})")
+        if self.cfg.family == "audio" and frames is None:
+            raise ValueError("audio requests need encoder frames")
+        req = EngineRequest(req_id=self._next_id, prompt=prompt,
+                            max_new_tokens=int(max_new_tokens), eos_id=eos_id,
+                            frames=frames, on_token=on_token, on_done=on_done)
+        self._next_id += 1
+        self._queue.append(req)
+        self._requests.append(req)
+        return req
+
+    # -- prefill ----------------------------------------------------------
+    def _bucket(self, length: int) -> int:
+        b = max(self.min_bucket, 1 << (length - 1).bit_length())
+        return min(b, self.cache_len)
+
+    def _admit(self, req: EngineRequest) -> None:
+        slot = self._free.pop(0)
+        length = int(req.prompt.size)
+        bucket = self._bucket(length)
+        self.stats.prefills += 1
+        self.stats.bucket_hits[bucket] += 1
+
+        if self.cfg.family == "audio":
+            sub = model_api.init_cache(
+                self.servable.params, self.cfg, 1, self.cache_len,
+                frames=jnp.asarray(req.frames)[None]
+                if np.ndim(req.frames) == 2 else jnp.asarray(req.frames))
+        else:
+            sub = self._sub_template
+        toks = np.zeros((bucket,), np.int32)
+        toks[:length] = req.prompt
+        pos_seq = np.full((bucket,), -1, np.int32)
+        pos_seq[:length] = np.arange(length)
+        sub, logits = self._prefill(self.servable.params, sub,
+                                    jnp.asarray(toks), jnp.asarray(pos_seq),
+                                    jnp.int32(length))
+        self.cache = self._write_slot(self.cache, jnp.int32(slot), sub)
+
+        req.slot, req.pos = slot, length
+        self._active[slot] = req
+        row = np.asarray(logits[length - 1])    # once per admission: fine
+        self._emit(req, int(np.argmax(row)), row)
+
+    # -- stepping ---------------------------------------------------------
+    def _emit(self, req: EngineRequest, tok: int, logits_row=None) -> None:
+        """Record one greedily sampled token and retire the request if it
+        just completed. ``logits_row`` (V,) is only materialized on host
+        when the engine collects logits."""
+        req.tokens.append(tok)
+        if self.collect_logits and logits_row is not None:
+            req.step_logits.append(np.asarray(logits_row, np.float32))
+        self.stats.tokens_generated += 1
+        if req.on_token is not None:
+            req.on_token(req.req_id, tok)
+        if (req.n_generated >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            self._finish(req)
+        else:
+            self._tokens[req.slot, 0] = tok
+            self._pos[req.slot] = req.pos
+
+    def _finish(self, req: EngineRequest) -> None:
+        slot = req.slot
+        req.done = True
+        self.stats.completed += 1
+        # zero attention KV and recurrent state: recycled slots start fresh
+        self.cache = self._free_slot(self.cache, jnp.int32(slot))
+        self._pos[slot] = -1
+        self._tokens[slot, 0] = 0
+        del self._active[slot]
+        self._free.append(slot)
+        self._free.sort()
+        req.slot = -1
+        if req.on_done is not None:
+            req.on_done(req.req_id, list(req.tokens))
+
+    def step(self) -> bool:
+        """Admit what fits, then run ONE batched decode over all active
+        slots. Returns True while there is (or may be) work left."""
+        while self._free and self._queue:
+            self._admit(self._queue.popleft())
+        if not self._active:
+            return bool(self._queue)
+
+        self.stats.steps += 1
+        self.stats.occupancy_sum += len(self._active)
+        next_tok, logits, self.cache = self._decode(
+            self.servable.params, self.cache, jnp.asarray(self._tokens),
+            jnp.asarray(self._pos))
+        toks = np.asarray(next_tok)             # (max_slots,) int32 only
+        rows = np.asarray(logits[:, 0, :]) if self.collect_logits else None
+        for slot in sorted(self._active):
+            req = self._active[slot]
+            req.pos += 1
+            self._emit(req, int(toks[slot]),
+                       rows[slot] if rows is not None else None)
+        return bool(self._active or self._queue)
+
+    def run(self, max_steps: Optional[int] = None) -> List[EngineRequest]:
+        """Drain the queue and all active slots; returns completed requests
+        in submission order."""
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return [r for r in self._requests if r.done]
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)

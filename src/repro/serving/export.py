@@ -27,8 +27,7 @@ Three pattern-level optimizations happen here, offline:
 These passes are consumed by the :func:`repro.serving.prepare_servable`
 facade (docs/API.md), which dispatches on ``cfg.family`` via
 :func:`export_params`; the per-family entry points remain available for
-callers that need one pass in isolation. ``repro.models.sparse_exec``
-re-exports them as deprecated shims.
+callers that need one pass in isolation.
 """
 from __future__ import annotations
 

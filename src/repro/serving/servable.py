@@ -79,6 +79,10 @@ class Servable:
         self.stats_at_save = stats_at_save
         self._fwd_fn = None
         self._decode_fn = None
+        self._engine_decode = None
+        self._engine_prefill = None
+        self._engine_write = None
+        self._engine_free = None
 
     # -- serving ----------------------------------------------------------
     def _as_batch(self, batch) -> Dict[str, Any]:
@@ -105,13 +109,89 @@ class Servable:
 
     def decode_step(self, cache, token, pos):
         """(cache, token (B,1), pos) -> (logits, new_cache); encoder-only
-        families raise (models/api.py contract)."""
+        families raise (models/api.py contract). ``pos`` is a scalar or a
+        ragged int32 (B,) vector of per-slot positions (-1 = inactive row,
+        cache untouched) -- the continuous-batching calling convention."""
         if self._decode_fn is None:
             cfg, packs = self.cfg, self.packs
             self._decode_fn = jax.jit(
                 lambda p, c, t, s: model_api.decode_step(p, c, cfg, t, s,
                                                          packs=packs))
         return self._decode_fn(self.params, cache, token, pos)
+
+    def engine(self, max_slots: int = 8, cache_len: int = 256, **kw):
+        """Construct a continuous-batching :class:`~repro.serving.engine.
+        ServingEngine` over this servable: request slots, admission queue,
+        bucketed prefill, one batched decode per step (docs/API.md)."""
+        from repro.serving.engine import ServingEngine
+        return ServingEngine(self, max_slots=max_slots, cache_len=cache_len,
+                             **kw)
+
+    def _engine_decode_fn(self):
+        """Jitted batched decode shared by every engine of this servable
+        (jit retraces per (max_slots, cache) shape; executables persist
+        across engine instances). Returns ``(greedy_tokens (B,), logits,
+        cache)`` -- the argmax runs on device so the hot loop only moves B
+        int32s to host; the full logits land on host only when an engine
+        collects them. The cache argument is DONATED -- engine hot-loop use
+        only; :meth:`decode_step` is the non-donating API."""
+        if self._engine_decode is None:
+            cfg, packs = self.cfg, self.packs
+
+            def decode(p, c, t, s):
+                logits, c = model_api.decode_step(p, c, cfg, t, s,
+                                                  packs=packs)
+                nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+                return nxt, logits, c
+
+            self._engine_decode = jax.jit(decode, donate_argnums=(1,))
+        return self._engine_decode
+
+    def _engine_prefill_fn(self):
+        """Jitted prompt prefill shared by every engine of this servable.
+        Uniform signature ``(params, cache1, tokens (bucket,), pos_seq
+        (bucket,), length) -> (cache1, logits (bucket, V))``; one trace per
+        bucket length serves every admission (``length`` is traced).
+
+        lm-family models run the ONE-PASS forward prefill
+        (``models.api.prefill_cache``): the whole prompt streams the weights
+        once, instead of once per token. Audio (enc-dec) scans the
+        single-token decode path -- its decoder prompts are BOS-sized, and
+        padding steps carry pos = -1 so they write nothing."""
+        if self._engine_prefill is None:
+            cfg, packs = self.cfg, self.packs
+
+            if cfg.family == "audio":
+                def prefill(params, cache, tokens, pos_seq, length):
+                    def step(c, tp):
+                        tok, p = tp
+                        logits, c = model_api.decode_step(
+                            params, c, cfg, tok[None, None], p[None])
+                        return c, logits[0, 0]
+                    return jax.lax.scan(step, cache, (tokens, pos_seq))
+            else:
+                def prefill(params, cache, tokens, pos_seq, length):
+                    logits, cache = model_api.prefill_cache(
+                        params, cache, cfg, tokens[None], length, packs=packs)
+                    return cache, logits[0]
+
+            self._engine_prefill = jax.jit(prefill)
+        return self._engine_prefill
+
+    def _engine_slot_fns(self):
+        """Jitted ``(write_slot, free_slot)`` with the batched cache DONATED:
+        slot insertion and retirement become in-place scatters instead of
+        whole-cache copies (the slot index is traced, so one executable per
+        cache shape serves every slot)."""
+        if self._engine_write is None:
+            cfg = self.cfg
+            self._engine_write = jax.jit(
+                lambda c, i, sub: model_api.write_slot(c, cfg, i, sub),
+                donate_argnums=(0,))
+            self._engine_free = jax.jit(
+                lambda c, i: model_api.free_slot(c, cfg, i),
+                donate_argnums=(0,))
+        return self._engine_write, self._engine_free
 
     # -- instrumentation --------------------------------------------------
     def stats(self) -> Dict[str, Any]:
@@ -180,6 +260,9 @@ def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
         pruned, _ = tied_prune(params, spec.sparsity_config())
     else:
         pruned = params
+
+    if spec.backend == "dense":     # negative control: no BSR support
+        return Servable(pruned, cfg, spec, {}, registry, export_stats={})
 
     sparse_params, packs, stats = export_params(
         pruned, cfg, tile=spec.tile, fuse_qkv=spec.fuse_qkv,

@@ -20,7 +20,7 @@ DEFAULT_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
                    "ffn/wi", "ffn/wo")
 
 PRUNE_RECIPES = ("none", "oneshot", "tied")
-BACKENDS = ("plan", "bsr")
+BACKENDS = ("plan", "bsr", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +48,10 @@ class ServingSpec:
       backend: ``'plan'`` stores weights row-grouped offline and serves
         through the precomputed-RowPackPlan path (the serving optimum);
         ``'bsr'`` keeps packed ``(nnzt, bn, bk)`` values and dispatches via
-        ``bsr_linear``'s runtime backends (rowpack on CPU, pallas on TPU).
+        ``bsr_linear``'s runtime backends (rowpack on CPU, pallas on TPU);
+        ``'dense'`` skips BSR export entirely -- the (possibly pruned)
+        weights serve through plain dense matmuls, the paper's negative
+        control and the benchmark baseline.
       dtype: optional dtype override ('float32' | 'bfloat16') applied to the
         exported packed values; None keeps the model dtype.
       include_ffn: export FFN projections too (bert only; lm exports

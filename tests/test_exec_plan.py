@@ -172,7 +172,7 @@ def _pruned_smoke_bert(sparsity=0.75, tile=(16, 16)):
 
 
 def test_bert_fused_export_matches_unfused():
-    from repro.models.sparse_exec import export_bert_sparse
+    from repro.serving.export import export_bert_sparse
     cfg, pruned = _pruned_smoke_bert()
     toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 24)))
     p_f, packs_f = export_bert_sparse(pruned, cfg, tile=(16, 16),
@@ -194,7 +194,7 @@ def test_bert_fused_export_matches_unfused():
 def test_bert_union_export_matches_per_layer():
     """Unioned export logits == per-layer export logits; all layers share
     one specialization per projection group (L-1 hits each)."""
-    from repro.models.sparse_exec import export_bert_sparse
+    from repro.serving.export import export_bert_sparse
     cfg, pruned = _pruned_smoke_bert()
     toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 24)))
     reg = PatternRegistry()

@@ -12,8 +12,8 @@ from repro.core import PatternRegistry, SparsityConfig
 from repro.core.pruner import oneshot_prune
 from repro.models import bert as bert_mod
 from repro.models import init_model, model_forward
-from repro.models.sparse_exec import (export_bert_sparse, export_lm_sparse,
-                                      pack_stacked)
+from repro.serving.export import (export_bert_sparse, export_lm_sparse,
+                                  pack_stacked)
 
 RNG = np.random.RandomState(0)
 

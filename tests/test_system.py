@@ -21,7 +21,7 @@ from repro.core import (SparsityConfig, count_unique_intrablock_patterns,
 from repro.kernels import pack_bsr
 from repro.models import bert as bert_mod
 from repro.models import init_model
-from repro.models.sparse_exec import export_bert_sparse
+from repro.serving.export import export_bert_sparse
 
 RNG = np.random.RandomState(7)
 
