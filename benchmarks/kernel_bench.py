@@ -16,6 +16,14 @@ Output CSV: name,us_per_call,derived  (derived = speedup vs dense); the same
 records are persisted to BENCH_kernels.json at the repo root (section
 "kernel") so future PRs have a perf trajectory to compare against.
 
+Every cell also runs the serving autotuner (kernels/autotune.py,
+``ServingSpec backend='auto'``) over the same candidate set and records
+whether its pick lands within 5% of the cell's measured best -- the
+"measure, don't assume" check of the Sparsity Roofline argument, persisted
+as the "autotune" section. With REPRO_AUTOTUNE_STUB=1 (CI) the pick comes
+from the deterministic proxy instead of wall clocks; the section then
+records mode="stub" and the 5% flag is informational only.
+
 Run:  PYTHONPATH=src python benchmarks/kernel_bench.py [--smoke] [--no-json]
 """
 from __future__ import annotations
@@ -29,6 +37,7 @@ import numpy as np
 
 from repro.core.sparsity import prune_to_sparsity
 from repro.kernels import pack_bsr
+from repro.kernels.autotune import choose_backend
 from repro.kernels.exec_plan import (pack_plan_data, plan_for_pack,
                                      plan_linear)
 from repro.kernels.ops import bsr_linear
@@ -47,9 +56,12 @@ def _time_group(fns_args, reps=7):
     """Paired timing: interleave the reps of all contestants round-robin so
     machine drift (shared cores, thermal) hits every arm equally -- backend
     *ordering* is then trustworthy even when absolute times wander. Returns
-    min-of-reps per contestant (scheduler noise on a shared box is
-    one-sided: it only slows a run down, so the minimum approximates the
-    quiet-machine time)."""
+    ``(mins, scores)``: min-of-reps per contestant (scheduler noise on a
+    shared box is one-sided: it only slows a run down, so the minimum
+    approximates the quiet-machine time) and the median paired ratio vs
+    the first contestant (each round's arms see the same machine state --
+    the drift-robust *ordering* statistic, same one the autotuner ranks
+    by)."""
     for fn, args in fns_args:
         jax.block_until_ready(fn(*args))        # compile + warm
     ts = [[] for _ in fns_args]
@@ -58,7 +70,10 @@ def _time_group(fns_args, reps=7):
             t0 = time.perf_counter()
             jax.block_until_ready(fn(*args))
             ts[i].append(time.perf_counter() - t0)
-    return [float(np.min(t)) for t in ts]
+    anchor = np.asarray(ts[0], np.float64)
+    scores = [float(np.median(np.asarray(t, np.float64) / anchor))
+              for t in ts]
+    return [float(np.min(t)) for t in ts], scores
 
 
 def _sparse_fn(pk, backend):
@@ -84,6 +99,7 @@ def run(emit=print, smoke=False, write_json=True, reps=7):
     else:
         sweeps = [(SQUARE_TILE, DENSITIES), (LINEAR_TILE, LINEAR_DENSITIES)]
     records = []
+    auto_records = []
     for name, n, k in SHAPES:
         x = jnp.asarray(rng.randn(M, k).astype(np.float32))
         w = jnp.asarray(rng.randn(n, k).astype(np.float32))
@@ -111,8 +127,9 @@ def run(emit=print, smoke=False, write_json=True, reps=7):
                 # min-of-reps ordering is stable against scheduler noise
                 # (the shared box needs ~30 paired reps to resolve <10% gaps)
                 d_reps = reps if d > 0.2 or smoke else max(reps, 31)
-                times = _time_group([(fn, (x, data))
-                                     for _, fn, data in arms], reps=d_reps)
+                times, scores = _time_group([(fn, (x, data))
+                                             for _, fn, data in arms],
+                                            reps=d_reps)
                 t_dense = times[0]
                 for (backend, _, _), t_s in zip(arms, times):
                     emit(f"kernel/{name}_{backend}{tile_tag}"
@@ -123,10 +140,37 @@ def run(emit=print, smoke=False, write_json=True, reps=7):
                         "backend": backend, "tile": list(tile),
                         "density": d, "us": round(t_s * 1e6, 1),
                         "speedup_vs_dense": round(t_dense / t_s, 3)})
+                # autotuner cross-check over this cell's candidate set:
+                # its independent pick must land within 5% of the paired
+                # measurement's best arm (stub mode: deterministic proxy).
+                # Both sides use the same rep discipline AND the same
+                # drift-robust ordering statistic (median paired ratio);
+                # residual disagreement is then pure session-to-session
+                # drift on genuine near-ties
+                by_arm = {nm: t for (nm, _, _), t in zip(arms, times)}
+                by_score = {nm: s for (nm, _, _), s in zip(arms, scores)}
+                choice = choose_backend(
+                    pk, m=M, candidates=tuple(by_arm), reps=d_reps)
+                best = min(by_score, key=by_score.get)
+                auto_records.append({
+                    "shape": name, "tile": list(tile), "density": d,
+                    "chosen": choice.backend, "best_measured": best,
+                    "chosen_us": round(by_arm[choice.backend] * 1e6, 1),
+                    "best_us": round(by_arm[best] * 1e6, 1),
+                    "chosen_score": round(by_score[choice.backend], 4),
+                    "best_score": round(by_score[best], 4),
+                    "within_5pct": bool(by_score[choice.backend]
+                                        <= 1.05 * by_score[best]),
+                    "cache_hit": choice.cache_hit, "mode": choice.mode})
+    n_ok = sum(r["within_5pct"] for r in auto_records)
+    emit(f"# autotune: {n_ok}/{len(auto_records)} cells within 5% of best "
+         f"fixed backend [{auto_records[0]['mode'] if auto_records else '-'}]")
     if write_json:
         # the smoke subset must not clobber the full sweep's trajectory
         section = "kernel_smoke" if smoke else "kernel"
         path = update_bench_json(section, records)
+        update_bench_json("autotune_smoke" if smoke else "autotune",
+                          auto_records)
         emit(f"# wrote {len(records)} records to {path} [{section}]")
     return records
 

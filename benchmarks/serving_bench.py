@@ -8,16 +8,25 @@ negative control). Each cell submits 2x slots requests of mixed prompt
 lengths, so admission, bucketed prefill, slot recycling and the batched
 ragged decode all exercise on the hot path.
 
-What to expect (docs/PERF.md records measured numbers): tokens/s grows
-with slot count for both arms -- one batched decode step amortizes weight
-traffic over all active slots -- and the sparse arm tracks or beats dense
-once the per-step matmuls dominate scheduling overhead.
+Two sections are produced:
 
-Results are persisted to BENCH_serving.json at the repo root (sections
-"engine" / "engine_smoke") via repro.runtime.bench_io, keeping the perf
-trajectory machine-readable across PRs.
+  * "engine" -- the per-step loop (sync_every=1): one host round-trip per
+    token, the PR-3 baseline. Each cell now also reports the wall-clock
+    breakdown (prefill vs decode vs host-sync seconds, engine stats).
+  * "engine_fused" -- the fused-window loop: a ``--sync-every`` sweep at
+    the highest concurrency, where K decode steps run inside one jitted
+    scan and the host syncs once per window (models.api.decode_many).
+    The per-step baseline showed ~200 ms/step on this box with the device
+    busy for a fraction of it -- host dispatch, the overhead regime the
+    CPU sparse-serving literature says to engineer away (arXiv:2306.16601).
 
-Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--smoke] [--no-json]
+Results are persisted to BENCH_serving.json at the repo root via
+repro.runtime.bench_io, keeping the perf trajectory machine-readable
+across PRs; scripts/check.sh warns when a fresh smoke regresses >20%
+against the committed numbers (scripts/bench_guard.py).
+
+Run:  PYTHONPATH=src python benchmarks/serving_bench.py
+          [--smoke] [--no-json] [--skip-baseline] [--sync-every 1,4,8,16]
 """
 from __future__ import annotations
 
@@ -36,6 +45,8 @@ from repro.serving import ServingSpec, prepare_servable
 SLOT_COUNTS = (1, 4, 16)
 SPARSITY = 0.8
 TILE = (64, 64)
+SYNC_SWEEP = (1, 4, 8, 16)
+SYNC_SWEEP_SMOKE = (1, 4)
 
 
 def bench_path() -> str:
@@ -57,20 +68,24 @@ def _bert_sized_lm(smoke: bool) -> ModelConfig:
 
 
 def _run_cell(servable, slots, *, prompt_len, max_new, cache_len, rng,
-              reps=2):
-    """One (backend, concurrency) cell: warm the jit caches with a
-    single-request run, then time a 2x-slots request burst ``reps`` times
-    and keep the fastest (scheduler noise on the shared box is one-sided --
-    it only slows a run down -- so min-of-reps approximates the
-    quiet-machine time, same discipline as kernel_bench)."""
-    warm = servable.engine(max_slots=slots, cache_len=cache_len)
+              reps=2, sync_every=1):
+    """One (backend, concurrency, sync_every) cell: warm the jit caches
+    with a single-request run at the same window length (so every fused-K
+    executable the timed run needs is already traced), then time a
+    2x-slots request burst ``reps`` times and keep the fastest (scheduler
+    noise on the shared box is one-sided -- it only slows a run down -- so
+    min-of-reps approximates the quiet-machine time, same discipline as
+    kernel_bench)."""
+    warm = servable.engine(max_slots=slots, cache_len=cache_len,
+                           sync_every=sync_every)
     warm.submit(rng.randint(0, servable.cfg.vocab_size, (prompt_len,)),
-                max_new_tokens=2)
+                max_new_tokens=max_new)
     warm.run()
 
     best = None
     for _ in range(reps):
-        eng = servable.engine(max_slots=slots, cache_len=cache_len)
+        eng = servable.engine(max_slots=slots, cache_len=cache_len,
+                              sync_every=sync_every)
         # same bucket as the warmup (prompt lengths vary under one power of
         # two) so the timed runs pay zero compilation
         lens = [max(2, prompt_len - (i % 4)) for i in range(2 * slots)]
@@ -84,20 +99,42 @@ def _run_cell(servable, slots, *, prompt_len, max_new, cache_len, rng,
             best = (dt, eng, len(reqs))
     dt, eng, n_reqs = best
     toks = eng.stats.tokens_generated
+    st = eng.stats
     return {"slots": slots, "requests": n_reqs, "tokens": toks,
             "seconds": round(dt, 4), "tokens_per_s": round(toks / dt, 2),
-            "decode_steps": eng.stats.steps,
-            "mean_occupancy": round(eng.stats.mean_occupancy, 2),
-            "prefill_buckets": dict(eng.stats.bucket_hits)}
+            "sync_every": sync_every,
+            "decode_steps": st.steps, "windows": st.windows,
+            "mean_occupancy": round(st.mean_occupancy, 2),
+            "prefill_buckets": dict(st.bucket_hits),
+            # wall-clock breakdown (seconds, engine-measured): prompt
+            # prefill, decode windows (device call -> outputs on host),
+            # host-side sync (token drain + callbacks + slot recycling)
+            "breakdown": {
+                "prefill_s": round(st.prefill_s, 4),
+                "decode_s": round(st.decode_s, 4),
+                "sync_s": round(st.sync_s, 4),
+                "decode_ms_per_step": round(
+                    1e3 * st.decode_s / max(st.steps, 1), 2),
+                "sync_ms_per_window": round(
+                    1e3 * st.sync_s / max(st.windows, 1), 2),
+            }}
 
 
-def run(emit=print, smoke=False, write_json=True):
-    cfg = _bert_sized_lm(smoke)
-    prompt_len = 8 if smoke else 16
-    max_new = 8 if smoke else 32
-    cache_len = 64 if smoke else 128
-    rng = np.random.RandomState(0)
+def _bench_params(smoke: bool):
+    return {"prompt_len": 8 if smoke else 16,
+            "max_new": 8 if smoke else 32,
+            "cache_len": 64 if smoke else 128}
 
+
+#: the paper's targets: attention AND the FC projections, where most of
+#: the decode FLOPs live (ffn export for lm families landed with the
+#: fused-decode PR; both arms prune identically -- dense is the
+#: no-format-support negative control over the SAME pruned weights)
+TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
+           "ffn/wi", "ffn/wg", "ffn/wo")
+
+
+def _build_arms(cfg, emit):
     emit(f"initializing {cfg.arch} ({cfg.n_layers}L x {cfg.d_model}d)...")
     params = init_model(jax.random.PRNGKey(0), cfg)
     # tied masks: one pattern shared by all layers of a scan-stacked group,
@@ -105,17 +142,25 @@ def run(emit=print, smoke=False, write_json=True):
     # per-layer masks would union to ~1 - (1-d)^L tile density)
     arms = {
         "sparse": prepare_servable(params, cfg, ServingSpec(
-            tile=TILE, sparsity=SPARSITY, prune="tied",
-            targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo"),
+            tile=TILE, sparsity=SPARSITY, prune="tied", targets=TARGETS,
             backend="plan")),
         "dense": prepare_servable(params, cfg, ServingSpec(
-            tile=TILE, sparsity=SPARSITY, prune="tied",
-            targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo"),
+            tile=TILE, sparsity=SPARSITY, prune="tied", targets=TARGETS,
             backend="dense")),
     }
     emit(f"sparse export: density="
          f"{arms['sparse'].stats()['density']:.2f} (target {SPARSITY:.0%} "
          f"pruned @ {TILE[0]}x{TILE[1]})")
+    return arms
+
+
+def run(emit=print, smoke=False, write_json=True, arms=None):
+    cfg = _bert_sized_lm(smoke)
+    bp = _bench_params(smoke)
+    prompt_len, max_new, cache_len = (bp["prompt_len"], bp["max_new"],
+                                      bp["cache_len"])
+    rng = np.random.RandomState(0)
+    arms = arms or _build_arms(cfg, emit)
 
     results = {name: [] for name in arms}
     emit(f"{'arm':8s} {'slots':>5s} {'tokens':>7s} {'sec':>8s} "
@@ -151,5 +196,79 @@ def run(emit=print, smoke=False, write_json=True):
     return results
 
 
+def run_fused(emit=print, smoke=False, write_json=True, sync_sweep=None,
+              arms=None):
+    """The tentpole measurement: tokens/s vs ``sync_every`` at the highest
+    concurrency, fused windows against the per-step loop (sync_every=1 in
+    the same sweep doubles as the paired baseline). Reports the wall-clock
+    breakdown per cell so the host-dispatch share is visible."""
+    cfg = _bert_sized_lm(smoke)
+    bp = _bench_params(smoke)
+    slots = 4 if smoke else SLOT_COUNTS[-1]
+    sweep = tuple(sync_sweep or (SYNC_SWEEP_SMOKE if smoke else SYNC_SWEEP))
+    rng = np.random.RandomState(1)
+    arms = arms or _build_arms(cfg, emit)
+
+    results = {name: [] for name in arms}
+    emit(f"{'arm':8s} {'sync':>5s} {'tokens':>7s} {'sec':>8s} "
+         f"{'tok/s':>8s} {'dec ms/step':>12s}")
+    for sync_every in sweep:
+        for name, servable in arms.items():
+            cell = _run_cell(servable, slots, rng=rng,
+                             prompt_len=bp["prompt_len"],
+                             max_new=bp["max_new"],
+                             cache_len=bp["cache_len"],
+                             reps=1 if smoke else 2, sync_every=sync_every)
+            results[name].append(cell)
+            emit(f"{name:8s} {sync_every:5d} {cell['tokens']:7d} "
+                 f"{cell['seconds']:8.3f} {cell['tokens_per_s']:8.1f} "
+                 f"{cell['breakdown']['decode_ms_per_step']:12.2f}")
+
+    # "vs per-step" only means something when the sweep actually contains
+    # the per-step arm (sync_every == 1); a custom sweep without it gets
+    # no speedup record rather than a mislabeled ratio in the trajectory
+    def _speedup(cells):
+        base = [c for c in cells if c["sync_every"] == 1]
+        if not base:
+            return None
+        return round(max(c["tokens_per_s"] for c in cells) /
+                     base[0]["tokens_per_s"], 2)
+    speedup = {name: _speedup(cells) for name, cells in results.items()}
+    if all(v is not None for v in speedup.values()):
+        emit("fused speedup vs per-step (best cell / sync-1 cell): "
+             + ", ".join(f"{k} {v}x" for k, v in speedup.items()))
+    else:
+        emit("(no sync_every=1 arm in sweep: per-step speedup not recorded)")
+
+    if write_json:
+        section = "engine_fused_smoke" if smoke else "engine_fused"
+        path = update_bench_json(section, {
+            "model": cfg.arch,
+            "layers": cfg.n_layers, "d_model": cfg.d_model,
+            "sparsity": SPARSITY, "tile": list(TILE),
+            "prompt_len": bp["prompt_len"], "max_new_tokens": bp["max_new"],
+            "slots": slots, "sync_every_sweep": list(sweep),
+            "results": results,
+            "fused_speedup_vs_per_step": speedup,
+        }, path=bench_path())
+        emit(f"wrote {section} section to {path}")
+    return results
+
+
+def main(argv):
+    smoke = "--smoke" in argv
+    write_json = "--no-json" not in argv
+    sweep = None
+    if "--sync-every" in argv:
+        sweep = tuple(int(v) for v in
+                      argv[argv.index("--sync-every") + 1].split(","))
+    cfg = _bert_sized_lm(smoke)
+    arms = _build_arms(cfg, print)
+    if "--skip-baseline" not in argv:
+        run(smoke=smoke, write_json=write_json, arms=arms)
+    run_fused(smoke=smoke, write_json=write_json, sync_sweep=sweep,
+              arms=arms)
+
+
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv, write_json="--no-json" not in sys.argv)
+    main(sys.argv[1:])

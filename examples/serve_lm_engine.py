@@ -6,7 +6,10 @@ requests with mixed prompt lengths through a handful of request slots --
 more requests than slots, so admission, bucketed prefill, ragged batched
 decode, and slot recycling all run. Tokens stream per request through the
 ``on_token`` callback while the engine batches every active request into ONE
-jitted decode call per step.
+jitted decode *window* -- ``--sync-every`` fused steps between host syncs
+(docs/API.md §Engine; ``--sync-every 1`` shows the per-step loop the fused
+path replaced). ``--temperature``/``--top-k``/``--seed`` switch greedy
+decoding to on-device seeded sampling.
 
 Compare with examples/serve_bert_sparse.py (batched *encoder* serving):
 this demo is the decode-side counterpart the paper's runtime argument
@@ -14,6 +17,7 @@ ultimately cares about -- concurrency without per-request graphs.
 
 Run:  PYTHONPATH=src python examples/serve_lm_engine.py
           [--arch deepseek_7b] [--slots 4] [--requests 10] [--max-new 12]
+          [--sync-every 8] [--temperature 0.8] [--top-k 40]
 """
 import argparse
 import time
@@ -34,6 +38,12 @@ def main():
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--sparsity", type=float, default=0.7)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="fused decode window length K (1 = per-step loop)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples on device")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -47,7 +57,10 @@ def main():
           f"density {st['density']:.2f}" if st["density"] is not None
           else "no packed projections (dense serving)")
 
-    engine = servable.engine(max_slots=args.slots, cache_len=128)
+    engine = servable.engine(max_slots=args.slots, cache_len=128,
+                             sync_every=args.sync_every,
+                             temperature=args.temperature,
+                             top_k=args.top_k, seed=args.seed)
     rng = np.random.RandomState(0)
 
     streams = {}
@@ -76,9 +89,12 @@ def main():
     assert all(streams[h.req_id] == h.tokens for h in handles)
     print(f"served {s.completed} requests / {s.tokens_generated} tokens in "
           f"{dt:.2f}s ({s.tokens_generated / dt:.1f} tok/s)")
-    print(f"{s.steps} batched decode steps, mean occupancy "
+    print(f"{s.steps} decode steps in {s.windows} fused windows "
+          f"(sync_every={args.sync_every}), mean occupancy "
           f"{s.mean_occupancy:.2f}/{args.slots} slots, prefill buckets "
           f"{dict(s.bucket_hits)}")
+    print(f"wall-clock breakdown: prefill {s.prefill_s:.2f}s, decode "
+          f"{s.decode_s:.2f}s, host-sync {s.sync_s:.2f}s")
 
 
 if __name__ == "__main__":

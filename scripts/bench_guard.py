@@ -1,0 +1,80 @@
+"""Bench regression guard: warn when fresh serving throughput regresses.
+
+Compares the tokens/s of matching cells between a baseline BENCH_serving
+json (the committed numbers, copied aside before the smoke refresh) and a
+freshly written one. A drop larger than the threshold prints a WARNING per
+cell; the exit code stays 0 (warn, don't fail -- the reference box is
+shared and noisy; the warning makes the regression visible in CI logs and
+in-diff without blocking on machine weather). ``--strict`` flips warnings
+into a nonzero exit for local use.
+
+Usage:
+    python scripts/bench_guard.py BASELINE.json FRESH.json \
+        [--threshold 0.2] [--strict]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SECTIONS = ("engine_smoke", "engine", "engine_fused_smoke", "engine_fused")
+
+
+def _cells(section_payload):
+    """-> {(arm, slots, sync_every): tokens_per_s}"""
+    out = {}
+    for arm, cells in (section_payload.get("results") or {}).items():
+        for cell in cells:
+            key = (arm, cell.get("slots"), cell.get("sync_every", 1))
+            out[key] = cell.get("tokens_per_s")
+    return out
+
+
+def compare(baseline: dict, fresh: dict, threshold: float = 0.2):
+    """-> list of (section, cell key, baseline tok/s, fresh tok/s)."""
+    regressions = []
+    for section in SECTIONS:
+        if section not in baseline or section not in fresh:
+            continue
+        base_cells = _cells(baseline[section])
+        fresh_cells = _cells(fresh[section])
+        for key, base_tps in base_cells.items():
+            new_tps = fresh_cells.get(key)
+            if not base_tps or not new_tps:
+                continue
+            if new_tps < (1.0 - threshold) * base_tps:
+                regressions.append((section, key, base_tps, new_tps))
+    return regressions
+
+
+def main(argv):
+    threshold = 0.2
+    argv = list(argv)
+    if "--threshold" in argv:
+        i = argv.index("--threshold")
+        threshold = float(argv[i + 1])
+        del argv[i:i + 2]           # value must not read as a positional
+    args = [a for a in argv if not a.startswith("--")]
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    try:
+        with open(args[0]) as f:
+            baseline = json.load(f)
+        with open(args[1]) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_guard: cannot compare ({e}); skipping")
+        return 0
+    regressions = compare(baseline, fresh, threshold)
+    for section, (arm, slots, sync), base_tps, new_tps in regressions:
+        print(f"WARNING: bench regression in {section}: {arm} slots={slots} "
+              f"sync_every={sync}: {base_tps:.1f} -> {new_tps:.1f} tok/s "
+              f"({100 * (new_tps / base_tps - 1):+.0f}%)")
+    if not regressions:
+        print(f"bench_guard: no >{threshold:.0%} throughput regression")
+    return 1 if (regressions and "--strict" in argv) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -8,9 +8,13 @@
 #    "kernel_smoke" section of BENCH_kernels.json so perf regressions are
 #    visible in-diff (the full "kernel" sweep is a manual
 #    `python benchmarks/kernel_bench.py` run);
-# 3. a smoke run of the serving-engine benchmark, refreshing the
-#    "engine_smoke" section of BENCH_serving.json (full sweep:
-#    `python benchmarks/serving_bench.py`).
+# 3. a smoke run of the serving-engine benchmark (per-step baseline +
+#    fused sync_every sweep), refreshing the "engine_smoke" /
+#    "engine_fused_smoke" sections of BENCH_serving.json (full sweep:
+#    `python benchmarks/serving_bench.py`);
+# 4. the bench regression guard: compares the fresh smoke tokens/s against
+#    the committed BENCH_serving.json baseline and WARNS (never fails) on
+#    a >20% drop -- visible in CI logs without blocking on machine noise.
 #
 # The smokes run even when tests fail (a handful of seed-era failures are
 # known; see CHANGES.md) -- the script exits nonzero if any step did.
@@ -22,8 +26,18 @@ status=0
 
 python -m pytest -x -q || status=$?
 
+# keep the committed serving numbers aside as the regression baseline
+bench_baseline="$(mktemp)"
+cp BENCH_serving.json "$bench_baseline" 2>/dev/null || true
+
 python benchmarks/kernel_bench.py --smoke || status=$?
 
 python benchmarks/serving_bench.py --smoke || status=$?
+
+# warn-only guard: >20% tokens/s drop vs the committed baseline
+if [ -s "$bench_baseline" ]; then
+    python scripts/bench_guard.py "$bench_baseline" BENCH_serving.json || status=$?
+fi
+rm -f "$bench_baseline"
 
 exit $status

@@ -1,4 +1,6 @@
 """Pallas TPU kernels for the paper's BSR operators + oracles + wrappers."""
+from repro.kernels.autotune import (AutotuneCache, BackendChoice, MaskedPack,
+                                    choose_backend, default_cache_path)
 from repro.kernels.bsr_matmul import (KernelBSR, dds, dds_t, masked_matmul,
                                       pack_bsr, sddmm)
 from repro.kernels.exec_plan import (RowPackPlan, build_plan,

@@ -1,0 +1,418 @@
+"""Measured backend selection for block-sparse serving (``backend='auto'``).
+
+The Sparsity Roofline argument (arXiv:2310.00496) -- and this repo's own
+``BENCH_kernels.json`` -- say the profitable (backend, tile, density)
+region must be *measured on the target device*, not assumed: on the CPU
+reference box dense wins most cells outright, ``gather`` overtakes it only
+below ~10% density, and ``plan`` only at the paper's 32x1 linear tile.
+A hardcoded ``default_backend()`` cannot express any of that. This module
+micro-benchmarks the candidate execution paths
+
+    dense    -- plain ``x @ w.T`` (the negative control / usual CPU winner)
+    gather   -- one gather per stored tile (``bsr_linear`` backend)
+    rowpack  -- row-grouped batched matmul, per-call scatter
+    plan     -- precomputed RowPackPlan, data row-grouped offline
+    pallas   -- the TPU kernel (native on TPU; interpret mode elsewhere)
+    masked   -- dense-layout tile-skipping kernel (TPU)
+
+per *pattern fingerprint* on the current device, picks the fastest, and
+persists the winner so the cost is paid once per (pattern, device) --
+across processes, not just per process.
+
+Cache location and invalidation
+-------------------------------
+Winners live in ONE json file: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``. Each entry is keyed by
+``sha1(pattern fingerprint) : m<batch rows> : <device kind> : <mode> :
+c<candidate-set digest>``, so a different sparsity pattern, measurement
+batch size, device, timing mode, or candidate set never reuses a stale
+winner -- there is nothing else to invalidate. Delete the file (or point
+the env var elsewhere) to force re-tuning.
+
+Stub mode (CI determinism)
+--------------------------
+With ``REPRO_AUTOTUNE_STUB=1`` (or ``stub=True``) no wall-clock timing
+runs: backends are ranked by a deterministic FLOP/traffic proxy, so
+``backend='auto'`` paths are exercised reproducibly in CI. Tests can also
+inject a frozen ``timer`` to exercise the wall-clock code path without
+real clocks (tests/test_autotune.py).
+
+Interpret-mode honesty: off-TPU, ``pallas`` and ``masked`` execute in
+Pallas interpret mode -- a correctness vehicle thousands of times slower
+than any serving path -- so wall-clock mode drops them from the candidate
+set off-TPU rather than spending minutes proving they lose (docs/PERF.md).
+The stub proxy still ranks them (with an interpret penalty), so their
+dispatch path stays exercised.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import exec_plan as xp
+from repro.kernels.bsr_matmul import KernelBSR, masked_matmul
+
+CANDIDATES = ("dense", "gather", "rowpack", "plan", "pallas", "masked")
+#: interpret-mode-only off TPU: excluded from wall-clock candidate sets
+#: there (docs/PERF.md); the stub proxy still ranks them
+INTERPRET_ONLY = ("pallas", "masked")
+
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_ENV_STUB = "REPRO_AUTOTUNE_STUB"
+
+
+def stub_mode() -> bool:
+    return os.environ.get(_ENV_STUB, "").strip() not in ("", "0", "false")
+
+
+def device_kind() -> str:
+    d = jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', '?')}".replace(" ", "_")
+
+
+def pattern_digest(pack: KernelBSR) -> str:
+    return hashlib.sha1(xp.kernel_pattern_fingerprint(pack)).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# pack wrappers consumed by models/common.linear
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BackendChoice:
+    """A KernelBSR pattern pinned to a measured ``bsr_linear`` backend.
+
+    ``prepare_servable(spec.backend='auto')`` stores these in ``packs``
+    when the winner is a runtime-dispatch backend (gather / rowpack /
+    pallas); the params tree keeps the packed ``(nnzt, bn, bk)`` values
+    and ``models/common.linear`` routes through ``bsr_matmul`` with this
+    backend instead of ``default_backend()``."""
+
+    pack: KernelBSR
+    backend: str
+
+    @property
+    def shape(self):
+        return self.pack.shape
+
+    @property
+    def tile(self):
+        return self.pack.tile
+
+    @property
+    def density(self) -> float:
+        return self.pack.density
+
+    @property
+    def fingerprint(self) -> bytes:
+        return (b"choice:" + self.backend.encode()
+                + xp.kernel_pattern_fingerprint(self.pack))
+
+    def __hash__(self):
+        return hash(self.fingerprint)
+
+    def __eq__(self, other):
+        return (isinstance(other, BackendChoice)
+                and self.fingerprint == other.fingerprint)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MaskedPack:
+    """Dense-layout serving through the tile-skipping ``masked`` kernel:
+    the params tree keeps the DENSE ``(N, K)`` weight and only this static
+    tile occupancy mask rides in ``packs`` (compute skipped, weight
+    traffic paid -- the paper's format-support negative control)."""
+
+    tile_mask: np.ndarray     # (R, C) bool, True = stored tile
+    shape: Tuple[int, int]
+    tile: Tuple[int, int]
+
+    @property
+    def density(self) -> float:
+        return float(np.mean(self.tile_mask))
+
+    @property
+    def fingerprint(self) -> bytes:
+        header = np.array([*self.shape, *self.tile], np.int64)
+        return (b"masked:" + header.tobytes()
+                + np.packbits(np.asarray(self.tile_mask, bool)).tobytes())
+
+    def __hash__(self):
+        return hash(self.fingerprint)
+
+    def __eq__(self, other):
+        return (isinstance(other, MaskedPack)
+                and self.fingerprint == other.fingerprint)
+
+
+def masked_pack_from(pack: KernelBSR) -> MaskedPack:
+    mask = np.zeros((pack.n_brows, pack.n_bcols), bool)
+    rows = np.asarray(pack.row_id[: pack.real_nnzt])
+    cols = np.asarray(pack.col_id[: pack.real_nnzt])
+    mask[rows, cols] = True
+    return MaskedPack(tile_mask=mask, shape=pack.shape, tile=pack.tile)
+
+
+def dense_from_pack(pack: KernelBSR, data=None) -> np.ndarray:
+    """Densify a KernelBSR back to (N, K) -- the dense / masked candidate's
+    weight. ``data`` defaults to the pack's stored values."""
+    data = np.asarray(jax.device_get(pack.data if data is None else data))
+    n, k = pack.shape
+    bn, bk = pack.tile
+    w = np.zeros((n // bn, bn, k // bk, bk), data.dtype)
+    rows = np.asarray(pack.row_id[: pack.real_nnzt])
+    cols = np.asarray(pack.col_id[: pack.real_nnzt])
+    w[rows, :, cols, :] = data[: pack.real_nnzt]
+    return w.reshape(n, k)
+
+
+# --------------------------------------------------------------------------
+# the on-disk winner cache
+# --------------------------------------------------------------------------
+
+def default_cache_path() -> str:
+    env = os.environ.get(_ENV_CACHE)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+
+class AutotuneCache:
+    """Winner cache persisted as one JSON file (see module docstring for
+    the key scheme / invalidation rules). Reads merge-on-write, so
+    concurrent processes at worst re-measure -- they never corrupt."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self.stats = CacheStats()
+        self._entries: Optional[Dict[str, dict]] = None
+
+    def _load(self) -> Dict[str, dict]:
+        if self._entries is None:
+            self._entries = {}
+            try:
+                with open(self.path) as f:
+                    doc = json.load(f)
+                if isinstance(doc, dict):
+                    self._entries = dict(doc.get("entries", {}))
+            except (OSError, json.JSONDecodeError):
+                pass
+        return self._entries
+
+    def get(self, key: str) -> Optional[dict]:
+        rec = self._load().get(key)
+        if rec is None:
+            self.stats.misses += 1
+        else:
+            self.stats.hits += 1
+        return rec
+
+    def put(self, key: str, record: dict) -> None:
+        entries = self._load()
+        entries[key] = record
+        # merge-on-write: pick up entries other processes added meanwhile
+        on_disk: Dict[str, dict] = {}
+        try:
+            with open(self.path) as f:
+                on_disk = dict(json.load(f).get("entries", {}))
+        except (OSError, json.JSONDecodeError, AttributeError):
+            pass
+        on_disk.update(entries)
+        self._entries = on_disk
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": on_disk}, f, indent=1,
+                      sort_keys=True)
+        os.replace(tmp, self.path)
+
+
+_DEFAULT_CACHE: Optional[AutotuneCache] = None
+
+
+def default_cache() -> AutotuneCache:
+    """Process-wide cache over :func:`default_cache_path` (re-resolved if
+    the env var changed, so tests can repoint it)."""
+    global _DEFAULT_CACHE
+    path = default_cache_path()
+    if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != path:
+        _DEFAULT_CACHE = AutotuneCache(path)
+    return _DEFAULT_CACHE
+
+
+# --------------------------------------------------------------------------
+# candidate executors + measurement
+# --------------------------------------------------------------------------
+
+def _candidate_fn(pack: KernelBSR, name: str):
+    """-> (jitted fn, data arg) executing this backend for ``pack``."""
+    from repro.kernels.ops import bsr_linear  # local: ops imports exec_plan
+    if name == "dense":
+        w = jnp.asarray(dense_from_pack(pack))
+        return jax.jit(lambda x, w_: x @ w_.T), w
+    if name == "plan":
+        plan = xp.plan_for_pack(pack)
+        data = xp.pack_plan_data(plan, pack.data)
+        return jax.jit(lambda x, d, _p=plan: xp.plan_linear(x, d, _p)), data
+    if name == "masked":
+        mp = masked_pack_from(pack)
+        w = jnp.asarray(dense_from_pack(pack))
+        mask = jnp.asarray(mp.tile_mask)
+        tile = pack.tile
+        return (jax.jit(lambda x, w_: masked_matmul(
+            x, w_, mask, tile=tile,
+            interpret=jax.default_backend() != "tpu")), w)
+    if name in ("gather", "rowpack", "pallas"):
+        return (jax.jit(lambda x, d, _pk=pack, _b=name:
+                        bsr_linear(x, d, _pk, _b)), pack.data)
+    raise ValueError(f"unknown autotune candidate {name!r}")
+
+
+def measure(pack: KernelBSR, m: int, candidates: Sequence[str], *,
+            reps: int = 5, timer: Optional[Callable] = None
+            ) -> Tuple[Dict[str, float], Dict[str, float]]:
+    """Paired wall-clock micro-benchmark: interleave the reps of all
+    candidates round-robin (machine drift hits every arm equally, the
+    kernel_bench discipline). Returns ``(times, scores)``:
+
+      * ``times`` -- min-of-reps seconds per candidate (reporting);
+      * ``scores`` -- the RANKING statistic: per round, each arm's time is
+        divided by the round's first-candidate time (arms in one round see
+        the same machine state), and the median of those paired ratios is
+        taken. On a shared box whose speed drifts between rounds this
+        orders near-ties far more reliably than comparing each arm's
+        luckiest absolute rep.
+
+    ``timer(name, fn, args)`` substitutes the measurement -- the
+    frozen-clock hook for tests (scores == times there)."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(m, pack.shape[1]).astype(np.float32))
+    arms = [(name,) + _candidate_fn(pack, name) for name in candidates]
+    if timer is not None:
+        times = {name: float(timer(name, fn, (x, data)))
+                 for name, fn, data in arms}
+        return times, dict(times)
+    for _, fn, data in arms:
+        jax.block_until_ready(fn(x, data))          # compile + warm
+    ts: Dict[str, list] = {name: [] for name, _, _ in arms}
+    for _ in range(reps):
+        for name, fn, data in arms:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x, data))
+            ts[name].append(time.perf_counter() - t0)
+    anchor = np.asarray(ts[arms[0][0]], np.float64)
+    scores = {name: float(np.median(np.asarray(t, np.float64) / anchor))
+              for name, t in ts.items()}
+    return {name: float(np.min(t)) for name, t in ts.items()}, scores
+
+
+def stub_costs(pack: KernelBSR, m: int,
+               candidates: Sequence[str]) -> Dict[str, float]:
+    """Deterministic FLOP/traffic proxy (pseudo-seconds) used instead of
+    wall clocks in stub mode. Not calibrated -- its only contracts are
+    determinism and roughly-roofline-shaped ordering (dense wins dense-ish
+    cells, the sparse paths win only when density actually pays, interpret
+    mode never wins off-TPU)."""
+    n, k = pack.shape
+    bn, bk = pack.tile
+    nnzt = pack.real_nnzt
+    rows = np.asarray(pack.row_id[: nnzt], np.int64)
+    counts = np.bincount(rows, minlength=pack.n_brows)
+    p_max = max(1, int(counts.max()))
+    plan = xp.plan_for_pack(pack)
+    on_tpu = jax.default_backend() == "tpu"
+    interp = 0.0 if on_tpu else 1e6 * nnzt          # interpret-mode penalty
+    traffic = 8.0                                   # weight-stream weight
+    out = {}
+    for name in candidates:
+        if name == "dense":
+            c = m * n * k + traffic * n * k
+        elif name == "gather":
+            c = 2.5 * m * nnzt * bn * bk + traffic * nnzt * bn * bk
+        elif name == "rowpack":
+            # per-call scatter of every stored tile + padded batched matmul
+            c = (4 * traffic * nnzt * bn * bk
+                 + m * pack.n_brows * p_max * bn * bk)
+        elif name == "plan":
+            c = (m * plan.n_vrows * plan.p_max * bn * bk
+                 + traffic * nnzt * bn * bk)
+            if plan.spilled:
+                c += m * plan.n_vrows * bn
+        elif name == "pallas":
+            c = m * nnzt * bn * bk + traffic * nnzt * bn * bk + interp
+        elif name == "masked":
+            c = m * nnzt * bn * bk + traffic * n * k + interp
+        else:
+            raise ValueError(f"unknown autotune candidate {name!r}")
+        out[name] = float(c)
+    return out
+
+
+# --------------------------------------------------------------------------
+# the chooser
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    backend: str
+    costs: Dict[str, float]     # seconds (wallclock) or proxy (stub)
+    cache_hit: bool
+    mode: str                   # 'wallclock' | 'stub'
+    key: str
+
+
+def choose_backend(pack: KernelBSR, m: int = 256, *,
+                   candidates: Optional[Sequence[str]] = None,
+                   cache: Optional[AutotuneCache] = None,
+                   stub: Optional[bool] = None, reps: int = 5,
+                   timer: Optional[Callable] = None) -> Choice:
+    """Pick the fastest execution path for ``pack`` on this device.
+
+    Consults the on-disk winner cache first (one measurement per
+    (pattern, m, device, mode) EVER, across processes); on a miss it
+    measures (or, in stub mode, ranks by the deterministic proxy) and
+    persists the winner.
+    """
+    stub = stub_mode() if stub is None else bool(stub)
+    cache = cache if cache is not None else default_cache()
+    if candidates is None:
+        candidates = list(CANDIDATES)
+        if not stub and timer is None and jax.default_backend() != "tpu":
+            candidates = [c for c in candidates if c not in INTERPRET_ONLY]
+    mode = "stub" if stub else "wallclock"
+    # the candidate set is part of the key: a winner measured over a
+    # narrow set must not answer for a broader one (the extra backends
+    # were never measured)
+    cand_tag = hashlib.sha1(
+        ",".join(sorted(candidates)).encode()).hexdigest()[:8]
+    key = (f"{pattern_digest(pack)}:m{int(m)}:{device_kind()}:{mode}"
+           f":c{cand_tag}")
+    rec = cache.get(key)
+    if rec is not None and rec.get("backend") in candidates:
+        return Choice(rec["backend"], dict(rec.get("costs", {})), True,
+                      mode, key)
+    if stub:
+        costs = stub_costs(pack, m, candidates)
+        scores = costs
+    else:
+        costs, scores = measure(pack, m, candidates, reps=reps, timer=timer)
+    backend = min(scores, key=scores.get)
+    cache.put(key, {"backend": backend, "costs": costs, "mode": mode,
+                    "m": int(m), "device": device_kind(),
+                    "created": time.strftime("%Y-%m-%dT%H:%M:%S")})
+    return Choice(backend, costs, False, mode, key)

@@ -8,12 +8,15 @@ batch keys by family:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import bert as bert_mod
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
+from repro.models.attention import as_slot_positions
+from repro.models.sampling import sample_tokens
 
 
 def init_model(key, cfg: ModelConfig):
@@ -54,6 +57,66 @@ def decode_step(params, cache, cfg: ModelConfig, token, pos, packs=None):
     if cfg.family == "bert":
         raise ValueError("encoder-only arch has no decode step")
     return lm_mod.decode_step(params, cache, cfg, token, pos, packs=packs)
+
+
+def decode_many(params, cache, cfg: ModelConfig, token, pos, n_steps, *,
+                packs=None, remaining=None, eos_id=None, key=None,
+                temperature: float = 0.0, top_k: int = 0):
+    """Fused multi-token decode: ``n_steps`` decode steps inside ONE
+    ``lax.scan``, with sampling, per-slot EOS/stop handling and position
+    bookkeeping all on device -- the host only syncs once per window
+    (repro/serving/engine.py drains the emitted tokens at sync points).
+
+    Args:
+      token: (B, 1) int32 -- the current token of each request slot.
+      pos: scalar or ragged (B,) int32 slot positions (the ``decode_step``
+        convention; pos < 0 = inactive slot, a device-side no-op).
+      n_steps: static window length K.
+      remaining: optional (B,) int32 token budget per slot; a slot that
+        exhausts it mid-window deactivates itself (pos -> -1) and emits
+        nothing further. None = unbounded within the window.
+      eos_id: optional scalar or (B,) int32 stop token per slot (-1 =
+        none); sampling it deactivates the slot *after* emitting it.
+      key / temperature / top_k: sampling config (models/sampling.py);
+        temperature 0 = greedy, and the PRNG key is folded by (slot,
+        position) so fused and per-step decoding sample identically.
+
+    Returns ``(tokens (K, B) int32, valid (K, B) bool, state)`` where
+    ``valid[k, b]`` marks tokens actually emitted by live slots and
+    ``state`` is the carry to continue from:
+    ``{'token', 'pos', 'remaining', 'cache'}``.
+    """
+    b = token.shape[0]
+    pos = as_slot_positions(pos, b)
+    if remaining is None:
+        remaining = jnp.full((b,), jnp.iinfo(jnp.int32).max // 2, jnp.int32)
+    else:
+        remaining = jnp.asarray(remaining, jnp.int32)
+    if eos_id is None:
+        eos = jnp.full((b,), -1, jnp.int32)
+    else:
+        eos = jnp.broadcast_to(jnp.asarray(eos_id, jnp.int32), (b,))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def body(carry, _):
+        tok, p, rem, c = carry
+        logits, c = decode_step(params, c, cfg, tok, p, packs=packs)
+        nxt = sample_tokens(logits[:, 0, :], key, p,
+                            temperature=temperature, top_k=top_k)
+        active = p >= 0
+        nxt = jnp.where(active, nxt, 0)
+        rem = jnp.where(active, rem - 1, rem)
+        done = active & ((rem <= 0) | ((eos >= 0) & (nxt == eos)))
+        new_pos = jnp.where(done, -1, jnp.where(active, p + 1, p))
+        new_tok = jnp.where(active, nxt, tok[:, 0])[:, None]
+        return (new_tok, new_pos, rem, c), (nxt, active)
+
+    (token, pos, remaining, cache), (toks, valid) = jax.lax.scan(
+        body, (token, pos, remaining, cache), None, length=n_steps)
+    state = {"token": token, "pos": pos, "remaining": remaining,
+             "cache": cache}
+    return toks, valid, state
 
 
 def prefill_cache(params, cache, cfg: ModelConfig, tokens, length=None,

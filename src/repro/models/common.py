@@ -84,17 +84,31 @@ def init_linear(key, d_in, d_out, dtype=jnp.float32, scale=0.02):
 def linear(p, x, pack=None, backend=None):
     """Dense or block-sparse projection.
 
-    ``pack`` is static pattern metadata (from repro.serving.export), either:
+    ``pack`` is static pattern metadata (from repro.serving.export), one of:
       * a ``RowPackPlan`` -- ``p['w']`` holds row-grouped values
         (R, P, bn, bk) and the precomputed-plan fast path executes
-        (kernels/exec_plan.py; no per-call pattern work at all), or
+        (kernels/exec_plan.py; no per-call pattern work at all);
       * a ``KernelBSR`` -- ``p['w']`` holds packed tile values (nnzt, bn, bk)
-        and the matmul dispatches through ``bsr_linear``'s backends.
+        and the matmul dispatches through ``bsr_linear``'s backends;
+      * an ``autotune.BackendChoice`` -- a KernelBSR pattern pinned to the
+        backend the autotuner measured fastest for it (backend='auto');
+      * an ``autotune.MaskedPack`` -- ``p['w']`` stays a DENSE (N, K)
+        weight and the tile-skipping ``masked`` kernel executes.
     """
     if pack is not None:
         from repro.kernels.exec_plan import RowPackPlan, plan_matmul
         if isinstance(pack, RowPackPlan):
             return plan_matmul(x, p["w"], pack)
+        from repro.kernels.autotune import BackendChoice, MaskedPack
+        if isinstance(pack, BackendChoice):
+            backend, pack = pack.backend, pack.pack
+        if isinstance(pack, MaskedPack):
+            from repro.kernels.bsr_matmul import masked_matmul
+            lead = x.shape[:-1]
+            y = masked_matmul(x.reshape(-1, x.shape[-1]), p["w"],
+                              jnp.asarray(pack.tile_mask), tile=pack.tile,
+                              interpret=jax.default_backend() != "tpu")
+            return y.reshape(*lead, pack.shape[0])
         from repro.kernels.ops import bsr_matmul  # local import, cycle-free
         from repro.kernels.bsr_matmul import KernelBSR
         kb = KernelBSR(p["w"], pack.row_id, pack.col_id, pack.t_perm,

@@ -1,0 +1,75 @@
+"""On-device token sampling for the serving decode paths.
+
+Greedy, temperature, and top-k sampling over a batch of logit rows with
+*slot- and position-keyed* PRNG: the key used by slot ``b`` to sample the
+token that follows position ``p`` is ``fold_in(fold_in(base_key, b), p)``.
+Because the key depends only on (base_key, slot, position) -- never on how
+many decode calls the host issued, how steps were fused, or which other
+requests were co-resident -- the fused K-step loop (``models.api.
+decode_many``) and the per-step loop produce bit-identical samples for the
+same base key (tests/test_decode_many.py::test_seeded_sampling_parity).
+
+``temperature`` and ``top_k`` are compile-time constants (the serving
+engine fixes them per engine), so the greedy path stays a pure argmax with
+no PRNG work at all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["sample_tokens", "sample_token_row", "slot_keys"]
+
+
+def slot_keys(key, pos):
+    """Per-row sampling keys for a batch of slots: ``(B,)`` keys derived as
+    ``fold_in(fold_in(key, row), max(pos, 0))``."""
+    b = pos.shape[0]
+
+    def one(i, p):
+        return jax.random.fold_in(jax.random.fold_in(key, i), p)
+
+    return jax.vmap(one)(jnp.arange(b, dtype=jnp.int32),
+                         jnp.maximum(jnp.asarray(pos, jnp.int32), 0))
+
+
+def sample_tokens(logits, key, pos, *, temperature: float = 0.0,
+                  top_k: int = 0):
+    """``logits (B, V)`` -> sampled token ids ``(B,)`` int32.
+
+    ``temperature == 0`` is greedy argmax (``key``/``pos`` unused, no PRNG
+    in the trace). Otherwise logits are scaled by ``1/temperature`` and
+    sampled categorically, optionally restricted to the ``top_k`` largest
+    entries per row. ``pos`` is the per-slot absolute position the sample
+    *follows* (the engine's ragged ``pos`` vector); inactive rows
+    (pos < 0) still produce a (meaningless) token -- callers mask them.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = slot_keys(key, pos)
+    scaled = logits.astype(jnp.float32) / float(temperature)
+    if top_k and top_k > 0:
+        vals, idx = jax.lax.top_k(scaled, int(top_k))
+        choice = jax.vmap(jax.random.categorical)(keys, vals)
+        return jnp.take_along_axis(
+            idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+
+def sample_token_row(logits_row, key, slot: int, position: int, *,
+                     temperature: float = 0.0, top_k: int = 0) -> int:
+    """Single-row variant with the SAME key derivation as
+    :func:`sample_tokens`, for host-side call sites that hold one logits
+    row for a known slot (the engine's prefill-sampled first token). The
+    row's key is ``fold_in(fold_in(key, slot), max(position, 0))`` --
+    identical to what the batched decode would use for that slot."""
+    if temperature <= 0.0:
+        return int(np.argmax(np.asarray(logits_row)))
+    k = jax.random.fold_in(jax.random.fold_in(key, int(slot)),
+                           max(int(position), 0))
+    scaled = jnp.asarray(logits_row, jnp.float32) / float(temperature)
+    if top_k and top_k > 0:
+        vals, idx = jax.lax.top_k(scaled, int(top_k))
+        return int(idx[jax.random.categorical(k, vals)])
+    return int(jax.random.categorical(k, scaled))

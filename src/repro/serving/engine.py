@@ -14,20 +14,37 @@ machinery on top:
     padded to power-of-two *buckets* so the per-bucket jit executables stay
     warm -- padding tokens leave no trace in the cache -- and the result is
     inserted into the engine cache with ``write_slot``;
-  * **one jitted batched decode per step** over all ``max_slots`` rows --
-    mixed-progress requests share the call via per-slot causal/window masks;
-    the engine cache is donated to the step, so decode is copy-free;
+  * **fused decode windows** -- with ``sync_every = K > 1`` each ``step()``
+    runs up to K decode steps inside ONE jitted ``lax.scan``
+    (``models.api.decode_many``): sampling (greedy or temperature/top-k,
+    PRNG keys threaded on device), per-slot EOS/stop handling and position
+    bookkeeping all stay on device, and the host syncs once per window to
+    drain emitted tokens, fire callbacks, recycle finished slots and admit
+    queued requests. This removes the per-token host dispatch that
+    dominated the per-step loop (docs/PERF.md); ``sync_every=1`` (or
+    ``collect_logits=True``, which needs per-step logits on host) keeps
+    the one-decode-per-step loop;
+  * **one jitted batched decode (window) per step** over all ``max_slots``
+    rows -- mixed-progress requests share the call via per-slot
+    causal/window masks; the engine cache is donated, so decode is
+    copy-free;
   * **slot lifecycle** -- completion fires the request's callbacks and
     ``free_slot``-zeroes the slot (attention KV *and* SSM/RgLRU recurrent
-    state), so a recycled slot cannot leak its previous request.
+    state), so a recycled slot cannot leak its previous request. Slots
+    that finish mid-window become device-side no-ops until the sync point
+    recycles them.
 
 Construct via :meth:`repro.serving.Servable.engine`::
 
-    engine = servable.engine(max_slots=16, cache_len=512)
+    engine = servable.engine(max_slots=16, cache_len=512, sync_every=8)
     h = engine.submit([1, 2, 3], max_new_tokens=32,
                       on_token=lambda rid, tok: print(rid, tok))
     engine.run()                      # drain queue + active slots
     print(h.tokens)                   # greedy continuation
+
+Sampling is configured per engine (``temperature`` / ``top_k`` / ``seed``);
+the PRNG key is folded by (slot, position), so fused and per-step decoding
+emit identical tokens for the same seed (models/sampling.py).
 
 Known batching caveat: MoE layers route over the whole batch with a
 capacity limit, so token drops can depend on which slots are co-resident --
@@ -38,6 +55,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -45,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api as model_api
+from repro.models.sampling import sample_token_row
 
 __all__ = ["EngineRequest", "EngineStats", "ServingEngine"]
 
@@ -75,24 +94,36 @@ class EngineRequest:
 
 @dataclasses.dataclass
 class EngineStats:
-    steps: int = 0                  # batched decode calls
+    steps: int = 0                  # decode steps (fused windows count K)
+    windows: int = 0                # device dispatches (fused or per-step)
     prefills: int = 0
     tokens_generated: int = 0
     occupancy_sum: int = 0          # sum over steps of active slots
     completed: int = 0
     bucket_hits: Dict[int, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
+    # wall-clock breakdown of the serving loop (seconds): prompt prefill
+    # (compute + slot insert), decode windows (device call until outputs
+    # materialize on host), and host-side sync work (token drain,
+    # callbacks, slot recycling) -- benchmarks/serving_bench.py reports it
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    sync_s: float = 0.0
 
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / self.steps if self.steps else 0.0
 
     def as_dict(self) -> Dict:
-        return {"steps": self.steps, "prefills": self.prefills,
+        return {"steps": self.steps, "windows": self.windows,
+                "prefills": self.prefills,
                 "tokens_generated": self.tokens_generated,
                 "completed": self.completed,
                 "mean_occupancy": round(self.mean_occupancy, 3),
-                "prefill_buckets": dict(self.bucket_hits)}
+                "prefill_buckets": dict(self.bucket_hits),
+                "prefill_s": round(self.prefill_s, 4),
+                "decode_s": round(self.decode_s, 4),
+                "sync_s": round(self.sync_s, 4)}
 
 
 class ServingEngine:
@@ -101,11 +132,15 @@ class ServingEngine:
     ``max_slots`` bounds request concurrency (the static batch of the one
     jitted decode executable); ``cache_len`` bounds prompt + generation
     length per slot (windowed/recurrent layers keep their own tighter
-    state bounds).
+    state bounds). ``sync_every = K`` fuses up to K decode steps into one
+    on-device window between host syncs (``collect_logits`` forces K = 1:
+    per-step logits only exist on host in the unfused loop).
     """
 
     def __init__(self, servable, max_slots: int = 8, cache_len: int = 256,
-                 *, min_bucket: int = 8, collect_logits: bool = False):
+                 *, min_bucket: int = 8, collect_logits: bool = False,
+                 sync_every: int = 8, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0):
         if servable.cfg.family == "bert":
             raise ValueError("encoder-only arch has no decode step")
         self.servable = servable
@@ -116,6 +151,10 @@ class ServingEngine:
         # path (s == 1), which expects a pos argument
         self.min_bucket = max(2, int(min_bucket))
         self.collect_logits = collect_logits
+        self.sync_every = 1 if collect_logits else max(1, int(sync_every))
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._key = jax.random.PRNGKey(int(seed))
         self.stats = EngineStats()
 
         self._sub_template = None
@@ -140,18 +179,26 @@ class ServingEngine:
 
         self._tokens = np.zeros((self.max_slots, 1), np.int32)
         self._pos = np.full((self.max_slots,), -1, np.int32)
+        self._remaining = np.zeros((self.max_slots,), np.int32)
+        self._eos = np.full((self.max_slots,), -1, np.int32)
         self._free: List[int] = list(range(self.max_slots))
         self._active: Dict[int, EngineRequest] = {}
         self._queue: "collections.deque[EngineRequest]" = collections.deque()
-        self._requests: List[EngineRequest] = []
+        # completed since the last run() drain -- the engine does NOT
+        # retain request history beyond that (a long-lived engine would
+        # otherwise hold every prompt/generation ever served); callers
+        # keep their own handles
+        self._done: List[EngineRequest] = []
         self._next_id = 0
 
         # jitted functions are owned by the Servable and shared across its
-        # engines: one decode executable per max_slots shape, one prefill
-        # trace per bucket length, warm for the engine's whole lifetime (and
-        # the next engine's). The decode cache argument is donated, so the
-        # hot loop never copies the slot caches.
+        # engines: one decode executable per max_slots shape (and per fused
+        # window length K), one prefill trace per bucket length, warm for
+        # the engine's whole lifetime (and the next engine's). The decode
+        # cache argument is donated, so the hot loop never copies the slot
+        # caches.
         self._decode = servable._engine_decode_fn()
+        self._decode_many = servable._engine_decode_many_fn()
         self._prefill = servable._engine_prefill_fn()
         self._write_slot, self._free_slot = servable._engine_slot_fns()
 
@@ -180,7 +227,6 @@ class ServingEngine:
                             frames=frames, on_token=on_token, on_done=on_done)
         self._next_id += 1
         self._queue.append(req)
-        self._requests.append(req)
         return req
 
     # -- prefill ----------------------------------------------------------
@@ -189,6 +235,7 @@ class ServingEngine:
         return min(b, self.cache_len)
 
     def _admit(self, req: EngineRequest) -> None:
+        t0 = time.perf_counter()
         slot = self._free.pop(0)
         length = int(req.prompt.size)
         bucket = self._bucket(length)
@@ -213,14 +260,19 @@ class ServingEngine:
 
         req.slot, req.pos = slot, length
         self._active[slot] = req
+        self._eos[slot] = -1 if req.eos_id is None else int(req.eos_id)
         row = np.asarray(logits[length - 1])    # once per admission: fine
-        self._emit(req, int(np.argmax(row)), row)
+        tok = sample_token_row(row, self._key, slot, length - 1,
+                               temperature=self.temperature,
+                               top_k=self.top_k)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self._emit(req, int(tok), row)
 
     # -- stepping ---------------------------------------------------------
     def _emit(self, req: EngineRequest, tok: int, logits_row=None) -> None:
-        """Record one greedily sampled token and retire the request if it
-        just completed. ``logits_row`` (V,) is only materialized on host
-        when the engine collects logits."""
+        """Record one sampled token and retire the request if it just
+        completed. ``logits_row`` (V,) is only materialized on host when
+        the engine collects logits."""
         req.tokens.append(tok)
         if self.collect_logits and logits_row is not None:
             req.step_logits.append(np.asarray(logits_row, np.float32))
@@ -233,6 +285,7 @@ class ServingEngine:
         else:
             self._tokens[req.slot, 0] = tok
             self._pos[req.slot] = req.pos
+            self._remaining[req.slot] = req.max_new_tokens - req.n_generated
 
     def _finish(self, req: EngineRequest) -> None:
         slot = req.slot
@@ -242,44 +295,114 @@ class ServingEngine:
         self.cache = self._free_slot(self.cache, jnp.int32(slot))
         self._pos[slot] = -1
         self._tokens[slot, 0] = 0
+        self._remaining[slot] = 0
+        self._eos[slot] = -1
         del self._active[slot]
         self._free.append(slot)
         self._free.sort()
         req.slot = -1
+        self._done.append(req)
         if req.on_done is not None:
             req.on_done(req.req_id, list(req.tokens))
 
     def step(self) -> bool:
-        """Admit what fits, then run ONE batched decode over all active
-        slots. Returns True while there is (or may be) work left."""
+        """Admit what fits, then run ONE batched decode window (up to
+        ``sync_every`` fused steps) over all active slots. Returns True
+        while there is (or may be) work left."""
         while self._free and self._queue:
             self._admit(self._queue.popleft())
         if not self._active:
             return bool(self._queue)
+        k = min(self.sync_every,
+                max(int(self._remaining[s]) for s in self._active))
+        if k <= 1:
+            self._step_single()
+        else:
+            self._step_fused(k)
+        return bool(self._active or self._queue)
 
+    def _step_single(self) -> None:
+        """The unfused loop: one decode, one host sync per token. Kept for
+        ``sync_every=1`` and ``collect_logits`` (per-step logits only exist
+        on host here)."""
+        t0 = time.perf_counter()
         self.stats.steps += 1
+        self.stats.windows += 1
         self.stats.occupancy_sum += len(self._active)
         next_tok, logits, self.cache = self._decode(
             self.servable.params, self.cache, jnp.asarray(self._tokens),
-            jnp.asarray(self._pos))
+            jnp.asarray(self._pos), self._key, self.temperature, self.top_k)
         toks = np.asarray(next_tok)             # (max_slots,) int32 only
         rows = np.asarray(logits[:, 0, :]) if self.collect_logits else None
+        self.stats.decode_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
         for slot in sorted(self._active):
             req = self._active[slot]
             req.pos += 1
             self._emit(req, int(toks[slot]),
                        rows[slot] if rows is not None else None)
-        return bool(self._active or self._queue)
+        self.stats.sync_s += time.perf_counter() - t0
+
+    def _step_fused(self, k: int) -> None:
+        """The fused hot loop: K decode steps inside one jitted scan
+        (sampling, EOS and position bookkeeping on device), then ONE host
+        sync that drains the emitted tokens, fires callbacks in step order
+        and recycles finished slots. ``k`` never exceeds the largest
+        remaining budget, so a window cannot overshoot ``max_new_tokens``;
+        slots that hit EOS (or their budget) mid-window deactivate
+        themselves on device and ride along as no-ops until the sync."""
+        t0 = time.perf_counter()
+        self.stats.steps += k
+        self.stats.windows += 1
+        toks, valid, state = self._decode_many(
+            self.servable.params, self.cache, jnp.asarray(self._tokens),
+            jnp.asarray(self._pos), jnp.asarray(self._remaining),
+            jnp.asarray(self._eos), self._key, k, self.temperature,
+            self.top_k)
+        self.cache = state["cache"]
+        toks_h = np.asarray(toks)               # (K, B) int32
+        valid_h = np.asarray(valid)             # (K, B) bool
+        # writable host mirrors (np.asarray of a jax array is read-only)
+        self._tokens = np.array(state["token"], np.int32)
+        self._pos = np.array(state["pos"], np.int32)
+        self._remaining = np.array(state["remaining"], np.int32)
+        self.stats.decode_s += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        self.stats.occupancy_sum += int(valid_h.sum())
+        window = sorted(self._active)
+        for step in range(k):
+            for slot in window:
+                if not valid_h[step, slot]:
+                    continue
+                req = self._active[slot]
+                req.pos += 1
+                tok = int(toks_h[step, slot])
+                req.tokens.append(tok)
+                self.stats.tokens_generated += 1
+                if req.on_token is not None:
+                    req.on_token(req.req_id, tok)
+        for slot in window:
+            req = self._active[slot]
+            if self._pos[slot] < 0:             # device marked it finished
+                # _finish re-zeroes the host mirrors; cache hygiene via
+                # free_slot as in the per-step path
+                self._finish(req)
+        self.stats.sync_s += time.perf_counter() - t0
 
     def run(self, max_steps: Optional[int] = None) -> List[EngineRequest]:
-        """Drain the queue and all active slots; returns completed requests
-        in submission order."""
+        """Drain the queue and all active slots; returns the requests that
+        completed since the last drain, in submission order, and releases
+        them from engine tracking (callers keep their handles -- the
+        engine itself retains no request history, so a long-lived engine's
+        memory is bounded by its live requests)."""
         steps = 0
         while self.step():
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
-        return [r for r in self._requests if r.done]
+        done, self._done = self._done, []
+        return sorted(done, key=lambda r: r.req_id)
 
     # -- introspection ----------------------------------------------------
     @property

@@ -88,24 +88,73 @@ def pack_single(w: np.ndarray, tile) -> Tuple[KernelBSR, jax.Array]:
 # serving-form helpers (KernelBSR pattern -> plan + row-grouped values)
 # --------------------------------------------------------------------------
 
+def _realize_backend(pack, data, backend: str,
+                     registry: Optional[PatternRegistry]):
+    """(pattern, packed values, chosen backend) -> (static pack stored in
+    ``packs``, values stored in the params tree). ``data`` is
+    ``(nnzt, bn, bk)`` or layer-stacked ``(L, nnzt, bn, bk)``.
+
+      * ``plan``    -> RowPackPlan + row-grouped values (the default path);
+      * ``bsr``     -> bare KernelBSR (runtime ``default_backend()``);
+      * ``gather``/``rowpack``/``pallas`` -> the pattern pinned to that
+        ``bsr_linear`` backend (``autotune.BackendChoice``);
+      * ``masked``  -> dense-layout values + static tile mask
+        (``autotune.MaskedPack``);
+      * ``dense``   -> ``(None, None)``: the caller keeps the original
+        dense weight and stores no pack (measurement said format support
+        does not pay here).
+    """
+    if backend == "plan":
+        plan = plan_for_pack(pack, registry)
+        return plan, pack_plan_data(plan, data)
+    if backend == "bsr":
+        return pack, data
+    if backend == "dense":
+        return None, None
+    from repro.kernels.autotune import (BackendChoice, dense_from_pack,
+                                        masked_pack_from)
+    if backend == "masked":
+        data = np.asarray(jax.device_get(jnp.asarray(data)))
+        if data.ndim == 4:      # (L, nnzt, bn, bk) -> (L, N, K)
+            vals = np.stack([dense_from_pack(pack, d) for d in data])
+        else:
+            vals = dense_from_pack(pack, data)
+        return masked_pack_from(pack), jnp.asarray(vals)
+    if backend in ("gather", "rowpack", "pallas"):
+        return BackendChoice(pack, backend), data
+    raise ValueError(f"unknown serving backend {backend!r}")
+
+
 def _serving_pack(w: np.ndarray, tile, use_plans: bool,
-                  registry: Optional[PatternRegistry]):
-    """(N, K) weight -> (static pattern, values). With plans, the values are
-    row-grouped once here -- the scatter the seed backend paid per call."""
+                  registry: Optional[PatternRegistry], chooser=None):
+    """(N, K) weight -> (static pattern, values, autotune meta). With plans,
+    the values are row-grouped once here -- the scatter the seed backend
+    paid per call. A ``chooser`` (kernels/autotune.py) overrides the
+    plan/bsr default with the measured winner for this pattern."""
     pack = pack_bsr(w, tile)
-    if not use_plans:
-        return pack, pack.data
-    plan = plan_for_pack(pack, registry)
-    return plan, pack_plan_data(plan, pack.data)
+    if chooser is None:
+        pk, vals = _realize_backend(pack, pack.data,
+                                    "plan" if use_plans else "bsr", registry)
+        return pk, vals, None
+    choice = chooser(pack)
+    pk, vals = _realize_backend(pack, pack.data, choice.backend, registry)
+    return pk, vals, {"backend": choice.backend,
+                      "cache_hit": choice.cache_hit, "mode": choice.mode}
 
 
 def _serving_pack_stacked(w_stacked: np.ndarray, tile, use_plans: bool,
-                          registry: Optional[PatternRegistry]):
+                          registry: Optional[PatternRegistry], chooser=None):
     pack, data, stats = pack_stacked(w_stacked, tile)
-    if not use_plans:
-        return pack, data, stats
-    plan = plan_for_pack(pack, registry)
-    return plan, pack_plan_data(plan, data), stats
+    if chooser is None:
+        pk, vals = _realize_backend(pack, data,
+                                    "plan" if use_plans else "bsr", registry)
+        return pk, vals, stats
+    choice = chooser(pack)
+    pk, vals = _realize_backend(pack, data, choice.backend, registry)
+    stats = dict(stats)
+    stats["autotune"] = {"backend": choice.backend,
+                         "cache_hit": choice.cache_hit, "mode": choice.mode}
+    return pk, vals, stats
 
 
 def _get_w(p) -> np.ndarray:
@@ -132,10 +181,26 @@ def _fused_qkv_weight(ap, tile, stacked: bool) -> Optional[np.ndarray]:
 # per-family export passes
 # --------------------------------------------------------------------------
 
+def _pack_nnzt(pk) -> Optional[int]:
+    """Stored-tile count of any static pack kind (plan / bsr / choice /
+    masked), for the per-scope export stats."""
+    if pk is None:
+        return None
+    inner = getattr(pk, "pack", pk)             # BackendChoice wraps a BSR
+    if hasattr(inner, "real_nnzt"):
+        return int(inner.real_nnzt)
+    if hasattr(inner, "tile_mask"):
+        return int(np.sum(inner.tile_mask))
+    return None
+
+
 def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
                      fuse_qkv: bool = True, use_plans: bool = True,
-                     registry: Optional[PatternRegistry] = None):
-    """Replace attention projections of an LM param tree with packed values.
+                     include_ffn: bool = True,
+                     registry: Optional[PatternRegistry] = None,
+                     backend_chooser=None):
+    """Replace attention (and pruned FFN) projections of an LM param tree
+    with packed values.
 
     Returns (sparse_params, packs, stats): ``packs`` maps layer scopes
     ('blocks/<i>/<proj>', 'prefix/<i>/<proj>', ...) to static patterns
@@ -143,10 +208,42 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
     consumes them via the ``packs=`` argument. Scan-stacked layer groups are
     union-packed (one specialization, per-layer data); with ``fuse_qkv`` the
     q/k/v projections additionally share one fused pack per layer group.
+
+    With ``include_ffn`` the dense-MLP projections (wi/wg/wo -- the paper's
+    FC targets, where most decode FLOPs live) are exported too, but ONLY
+    when actually block-sparse at the kernel tile: packing an unpruned
+    (100%-density) projection is pure loss, so attention-only prune
+    recipes serve their FFN dense exactly as before. MoE FFNs are skipped
+    (expert routing has no packs route).
+
+    ``backend_chooser`` (spec ``backend='auto'``, kernels/autotune.py)
+    overrides the representation per pattern with the measured winner; a
+    ``dense`` verdict keeps the original weight (no pack) and is recorded
+    in ``stats`` like every other choice.
     """
     packs: Dict[str, object] = {}
     stats: Dict[str, Dict] = {}
     new = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy-ish
+
+    def _export_one(w, scope, stacked):
+        """Pack one weight (single or layer-stacked), record its stats
+        under ``scope``, and register the pack. Returns the serving values,
+        or None when the pattern serves dense (autotune verdict) -- the
+        caller then keeps the original weight."""
+        if stacked:
+            pk, data, st = _serving_pack_stacked(
+                w, tile, use_plans, registry, backend_chooser)
+        else:
+            pk, data, meta = _serving_pack(
+                w, tile, use_plans, registry, backend_chooser)
+            st = {"union_nnzt": _pack_nnzt(pk)}
+            if meta:
+                st["autotune"] = meta
+        stats[scope] = st
+        if pk is None:
+            return None
+        packs[scope] = pk
+        return data
 
     def export_attn(layer_params, scope, stacked):
         if "attn" not in layer_params:
@@ -157,17 +254,12 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
             w_qkv = _fused_qkv_weight(ap, tile, stacked)
             if w_qkv is not None:
                 dtype = ap["wq"]["w"].dtype
-                if stacked:
-                    pk, data, st = _serving_pack_stacked(
-                        w_qkv, tile, use_plans, registry)
-                else:
-                    pk, data = _serving_pack(w_qkv, tile, use_plans, registry)
-                    st = {"union_nnzt": pk.real_nnzt if use_plans else pk.nnzt}
-                packs[f"{scope}/wqkv"] = pk
-                stats[f"{scope}/wqkv"] = st
-                ap["wqkv"] = {"w": data.astype(dtype)}
-                for proj in _QKV:
-                    del ap[proj]
+                data = _export_one(w_qkv, f"{scope}/wqkv", stacked)
+                if data is not None:
+                    ap["wqkv"] = {"w": data.astype(dtype)}
+                    for proj in _QKV:
+                        del ap[proj]
+                # measured dense: wq/wk/wv stay, unfused
                 projs = ["wo"]
         for proj in projs:
             if proj not in ap:
@@ -175,24 +267,57 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
             w = _get_w(ap[proj])
             if not _divisible(w.shape, tile):
                 continue
-            if stacked:
-                pk, data, st = _serving_pack_stacked(w, tile, use_plans,
-                                                     registry)
-            else:
-                pk, data = _serving_pack(w, tile, use_plans, registry)
-                st = {"union_nnzt": pk.real_nnzt if use_plans else pk.nnzt}
-            packs[f"{scope}/{proj}"] = pk
-            stats[f"{scope}/{proj}"] = st
-            ap[proj] = {"w": data.astype(layer_params["attn"][proj]["w"].dtype)}
+            data = _export_one(w, f"{scope}/{proj}", stacked)
+            if data is not None:
+                ap[proj] = {"w": data.astype(
+                    layer_params["attn"][proj]["w"].dtype)}
         out = dict(layer_params)
         out["attn"] = ap
         return out
 
-    new["prefix"] = tuple(export_attn(lp, f"prefix/{i}/attn", False)
+    def _is_sparse(w: np.ndarray, stacked: bool) -> bool:
+        """True iff the (stacked-union) tile occupancy is < 100%: packing a
+        dense projection only adds padding and gather overhead."""
+        if stacked:
+            occ = np.stack([_tile_mask(w[i], tile) for i in range(w.shape[0])]
+                           ).any(axis=0)
+        else:
+            occ = _tile_mask(w, tile)
+        return bool(occ.mean() < 1.0)
+
+    def export_ffn(layer_params, scope, stacked):
+        # dense-MLP layers only ({'wi': {'w': ...}, ...}): MoE expert trees
+        # keep raw (E, d, f) arrays under the same names and have no packs
+        # route
+        if ("ffn" not in layer_params
+                or not isinstance(layer_params["ffn"].get("wi"), dict)):
+            return layer_params
+        fp = dict(layer_params["ffn"])
+        for proj in _FFN_PROJS:
+            if proj not in fp:
+                continue
+            w = _get_w(fp[proj])
+            if not _divisible(w.shape, tile) or not _is_sparse(w, stacked):
+                continue
+            data = _export_one(w, f"{scope}/{proj}", stacked)
+            if data is not None:
+                fp[proj] = {"w": data.astype(
+                    layer_params["ffn"][proj]["w"].dtype)}
+        out = dict(layer_params)
+        out["ffn"] = fp
+        return out
+
+    def export_layer(lp, scope, stacked):
+        lp = export_attn(lp, f"{scope}/attn", stacked)
+        if include_ffn:
+            lp = export_ffn(lp, f"{scope}/ffn", stacked)
+        return lp
+
+    new["prefix"] = tuple(export_layer(lp, f"prefix/{i}", False)
                           for i, lp in enumerate(params["prefix"]))
-    new["blocks"] = tuple(export_attn(lp, f"blocks/{i}/attn", True)
+    new["blocks"] = tuple(export_layer(lp, f"blocks/{i}", True)
                           for i, lp in enumerate(params["blocks"]))
-    new["suffix"] = tuple(export_attn(lp, f"suffix/{i}/attn", False)
+    new["suffix"] = tuple(export_layer(lp, f"suffix/{i}", False)
                           for i, lp in enumerate(params["suffix"]))
     return new, packs, stats
 
@@ -202,7 +327,8 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
                        cross_layer_union: bool = False,
                        use_plans: bool = True,
                        registry: Optional[PatternRegistry] = None,
-                       stats_out: Optional[Dict] = None):
+                       stats_out: Optional[Dict] = None,
+                       backend_chooser=None):
     """BSR export for the (unrolled) BERT encoder.
 
     Default: one pattern per layer and projection group (fused QKV). With
@@ -245,9 +371,16 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
         if cross_layer_union:
             stacked = np.stack([getw(lp) for lp in layers])
             pack, data, union_st = pack_stacked(stacked, tile)
-            if stats_out is not None:
-                stats_out[f"{group}/{name}"] = union_st
-            if use_plans:
+            if backend_chooser is not None:
+                choice = backend_chooser(pack)
+                union_st = dict(union_st)
+                union_st["autotune"] = {"backend": choice.backend,
+                                        "cache_hit": choice.cache_hit,
+                                        "mode": choice.mode}
+                pk, vals = _realize_backend(pack, data, choice.backend,
+                                            registry)
+                shared = [pk] * n_layers
+            elif use_plans:
                 # one lookup per layer: the registry's hit counter then shows
                 # the (L-1)-fold reuse of the single unioned specialization
                 shared = [plan_for_pack(pack, registry)
@@ -256,19 +389,32 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
             else:
                 shared = [pack] * n_layers
                 vals = data
+            if stats_out is not None:
+                stats_out[f"{group}/{name}"] = union_st
+            if shared[0] is None:       # measured dense: weights untouched
+                continue
             for i in range(n_layers):
                 packs[f"layers/{i}/{group}/{name}"] = shared[i]
                 tgt[i][name] = {"w": vals[i].astype(dtypes[i])}
         else:
             for i, lp in enumerate(layers):
-                pk, vals = _serving_pack(getw(lp), tile, use_plans, registry)
+                pk, vals, meta = _serving_pack(getw(lp), tile, use_plans,
+                                               registry, backend_chooser)
+                if stats_out is not None and meta:
+                    stats_out[f"layers/{i}/{group}/{name}"] = {
+                        "union_nnzt": _pack_nnzt(pk), "autotune": meta}
+                if pk is None:          # measured dense: weight untouched
+                    continue
                 packs[f"layers/{i}/{group}/{name}"] = pk
                 tgt[i][name] = {"w": vals.astype(dtypes[i])}
 
     if fuse_now:
-        for ap in attn_new:
-            for proj in _QKV:
-                del ap[proj]
+        # only drop the per-projection weights of layers whose fused pack
+        # was actually exported (an autotune 'dense' verdict keeps them)
+        for i, ap in enumerate(attn_new):
+            if f"layers/{i}/attn/wqkv" in packs:
+                for proj in _QKV:
+                    del ap[proj]
 
     new_layers = []
     for i, lp in enumerate(layers):
@@ -289,7 +435,8 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
 def export_params(params, cfg: ModelConfig, tile=(128, 128), *,
                   fuse_qkv: bool = True, cross_layer_union: bool = True,
                   include_ffn: bool = True, use_plans: bool = True,
-                  registry: Optional[PatternRegistry] = None):
+                  registry: Optional[PatternRegistry] = None,
+                  backend_chooser=None):
     """Export any model family's param tree to serving form.
 
     Returns ``(sparse_params, packs, stats)``. Dispatch mirrors
@@ -308,11 +455,14 @@ def export_params(params, cfg: ModelConfig, tile=(128, 128), *,
         sparse_params, packs = export_bert_sparse(
             params, cfg, tile=tile, include_ffn=include_ffn,
             fuse_qkv=fuse_qkv, cross_layer_union=cross_layer_union,
-            use_plans=use_plans, registry=registry, stats_out=stats)
+            use_plans=use_plans, registry=registry, stats_out=stats,
+            backend_chooser=backend_chooser)
         return sparse_params, packs, stats
     if cfg.family in LM_FAMILIES:
         return export_lm_sparse(params, cfg, tile=tile, fuse_qkv=fuse_qkv,
-                                use_plans=use_plans, registry=registry)
+                                use_plans=use_plans, include_ffn=include_ffn,
+                                registry=registry,
+                                backend_chooser=backend_chooser)
     if cfg.family == "audio":
         return params, {}, {"__unsupported__": {
             "family": cfg.family,

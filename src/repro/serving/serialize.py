@@ -25,6 +25,7 @@ import numpy as np
 from repro.configs.base import LayerKind, ModelConfig
 from repro.core.pattern_reuse import PatternRegistry
 from repro.core.sparsity import SparsityConfig
+from repro.kernels.autotune import BackendChoice, MaskedPack
 from repro.kernels.bsr_matmul import KernelBSR
 from repro.kernels.exec_plan import (RowPackPlan, kernel_pattern_fingerprint)
 
@@ -33,9 +34,12 @@ _BSR_FIELDS = ("row_id", "col_id", "t_perm")
 
 
 def pattern_key(pack) -> bytes:
-    """Fingerprint of a static pattern, uniform across plan/bsr backends --
-    the dedupe key here and the uniqueness key of ``Servable.stats()``."""
-    if isinstance(pack, RowPackPlan):
+    """Fingerprint of a static pattern, uniform across the pack kinds
+    (plan / bsr / autotuned choice / masked) -- the dedupe key here and the
+    uniqueness key of ``Servable.stats()``. Choice/masked packs embed the
+    backend in their fingerprint, so the same pattern pinned to two
+    different backends is (correctly) two keys."""
+    if isinstance(pack, (RowPackPlan, BackendChoice, MaskedPack)):
         return pack.fingerprint
     return kernel_pattern_fingerprint(pack)
 
@@ -97,6 +101,18 @@ def packs_to_arrays(packs: Dict[str, object]) -> Tuple[dict, dict]:
                               "real_nnzt": pk.real_nnzt})
                 for f in _PLAN_FIELDS:
                     arrays[f"p{idx}_{f}"] = np.asarray(getattr(pk, f))
+            elif isinstance(pk, MaskedPack):
+                metas.append({"kind": "masked", "shape": list(pk.shape),
+                              "tile": list(pk.tile)})
+                arrays[f"p{idx}_tile_mask"] = np.asarray(pk.tile_mask, bool)
+            elif isinstance(pk, BackendChoice):
+                inner = pk.pack
+                metas.append({"kind": "choice", "backend": pk.backend,
+                              "shape": list(inner.shape),
+                              "tile": list(inner.tile),
+                              "real_nnzt": inner.real_nnzt})
+                for f in _BSR_FIELDS:
+                    arrays[f"p{idx}_{f}"] = np.asarray(getattr(inner, f))
             else:
                 # structural fields only: serving rebuilds KernelBSR around
                 # the values held in the params tree (models/common.linear),
@@ -135,10 +151,14 @@ def packs_from_arrays(meta: dict, arrays, registry: PatternRegistry = None
                 built.append(registry.cached(("rowpack_plan", fp), build))
             else:
                 built.append(build())
+        elif m["kind"] == "masked":
+            built.append(MaskedPack(
+                tile_mask=np.asarray(arrays[f"p{idx}_tile_mask"], bool),
+                shape=tuple(m["shape"]), tile=tuple(m["tile"])))
         else:
             col_id = np.asarray(arrays[f"p{idx}_col_id"], np.int32)
             bn, bk = (int(t) for t in m["tile"])
-            built.append(KernelBSR(
+            bsr = KernelBSR(
                 # zeros placeholder: serve-time data comes from the params
                 # tree, never from the pack (models/common.linear)
                 data=jnp.zeros((len(col_id), bn, bk), jnp.float32),
@@ -146,7 +166,9 @@ def packs_from_arrays(meta: dict, arrays, registry: PatternRegistry = None
                 col_id=col_id,
                 t_perm=np.asarray(arrays[f"p{idx}_t_perm"], np.int32),
                 real_nnzt=int(m["real_nnzt"]), shape=tuple(m["shape"]),
-                tile=(bn, bk)))
+                tile=(bn, bk))
+            built.append(BackendChoice(bsr, m["backend"])
+                         if m["kind"] == "choice" else bsr)
     return {e["key"]: built[e["ref"]] for e in meta["keys"]}
 
 

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 from repro.configs.base import ModelConfig
+from repro.models.sampling import sample_tokens
 from repro.core.pattern_reuse import PatternRegistry
 from repro.core.pruner import _path_name, oneshot_prune, tied_prune
 from repro.kernels.exec_plan import RowPackPlan
@@ -79,7 +80,9 @@ class Servable:
         self.stats_at_save = stats_at_save
         self._fwd_fn = None
         self._decode_fn = None
+        self._decode_many_fn = None
         self._engine_decode = None
+        self._engine_decode_many = None
         self._engine_prefill = None
         self._engine_write = None
         self._engine_free = None
@@ -119,6 +122,40 @@ class Servable:
                                                          packs=packs))
         return self._decode_fn(self.params, cache, token, pos)
 
+    def decode_many(self, cache, token, pos, n_steps, *, remaining=None,
+                    eos_id=None, key=None, temperature: float = 0.0,
+                    top_k: int = 0):
+        """Fused K-step decode (``models.api.decode_many``): K decode steps,
+        sampling and per-slot EOS/stop masking inside ONE jitted
+        ``lax.scan`` -- one host round-trip per window instead of per
+        token. Returns ``(tokens (K, B), valid (K, B), state)``; this is
+        the non-donating API (the engine hot loop uses the donated
+        executable, ``_engine_decode_many_fn``). Retraces per distinct
+        ``(K, temperature, top_k)``."""
+        if self._decode_many_fn is None:
+            cfg, packs = self.cfg, self.packs
+
+            def fused(p, c, t, s, rem, eos, k, n, temp, tk):
+                return model_api.decode_many(
+                    p, c, cfg, t, s, n, packs=packs, remaining=rem,
+                    eos_id=eos, key=k, temperature=temp, top_k=tk)
+
+            self._decode_many_fn = jax.jit(fused, static_argnums=(7, 8, 9))
+        b = jnp.shape(token)[0]
+        if remaining is None:
+            remaining = jnp.full((b,), jnp.iinfo(jnp.int32).max // 2,
+                                 jnp.int32)
+        if eos_id is None:
+            eos_id = jnp.full((b,), -1, jnp.int32)
+        else:
+            eos_id = jnp.broadcast_to(jnp.asarray(eos_id, jnp.int32), (b,))
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return self._decode_many_fn(self.params, cache, token, pos,
+                                    jnp.asarray(remaining, jnp.int32),
+                                    eos_id, key, int(n_steps),
+                                    float(temperature), int(top_k))
+
     def engine(self, max_slots: int = 8, cache_len: int = 256, **kw):
         """Construct a continuous-batching :class:`~repro.serving.engine.
         ServingEngine` over this servable: request slots, admission queue,
@@ -129,23 +166,49 @@ class Servable:
 
     def _engine_decode_fn(self):
         """Jitted batched decode shared by every engine of this servable
-        (jit retraces per (max_slots, cache) shape; executables persist
-        across engine instances). Returns ``(greedy_tokens (B,), logits,
-        cache)`` -- the argmax runs on device so the hot loop only moves B
-        int32s to host; the full logits land on host only when an engine
-        collects them. The cache argument is DONATED -- engine hot-loop use
-        only; :meth:`decode_step` is the non-donating API."""
+        (jit retraces per (max_slots, cache) shape and per static
+        (temperature, top_k); executables persist across engine
+        instances). Returns ``(sampled_tokens (B,), logits, cache)`` --
+        sampling (greedy argmax, or temperature/top-k with the
+        slot+position-keyed PRNG of models/sampling.py) runs on device so
+        the hot loop only moves B int32s to host; the full logits land on
+        host only when an engine collects them. The cache argument is
+        DONATED -- engine hot-loop use only; :meth:`decode_step` is the
+        non-donating API."""
         if self._engine_decode is None:
             cfg, packs = self.cfg, self.packs
 
-            def decode(p, c, t, s):
+            def decode(p, c, t, s, key, temperature, top_k):
                 logits, c = model_api.decode_step(p, c, cfg, t, s,
                                                   packs=packs)
-                nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+                nxt = sample_tokens(logits[:, 0, :], key, s,
+                                    temperature=temperature, top_k=top_k)
                 return nxt, logits, c
 
-            self._engine_decode = jax.jit(decode, donate_argnums=(1,))
+            self._engine_decode = jax.jit(decode, donate_argnums=(1,),
+                                          static_argnums=(5, 6))
         return self._engine_decode
+
+    def _engine_decode_many_fn(self):
+        """Jitted fused K-step decode for the engine hot loop: K decode
+        steps + sampling + per-slot EOS/budget masking inside one
+        ``lax.scan`` (``models.api.decode_many``), cache DONATED. One
+        executable per static (K, temperature, top_k) -- the engine bounds
+        K by ``sync_every``, so the trace count stays small and every
+        window after the first reuses a warm executable."""
+        if self._engine_decode_many is None:
+            cfg, packs = self.cfg, self.packs
+
+            def fused(p, c, t, s, rem, eos, key, n_steps, temperature,
+                      top_k):
+                return model_api.decode_many(
+                    p, c, cfg, t, s, n_steps, packs=packs, remaining=rem,
+                    eos_id=eos, key=key, temperature=temperature,
+                    top_k=top_k)
+
+            self._engine_decode_many = jax.jit(
+                fused, donate_argnums=(1,), static_argnums=(7, 8, 9))
+        return self._engine_decode_many
 
     def _engine_prefill_fn(self):
         """Jitted prompt prefill shared by every engine of this servable.
@@ -218,6 +281,19 @@ class Servable:
             "registry": {"hits": st.hits, "misses": st.misses,
                          "reuse_rate": st.reuse_rate},
         }
+        # autotune verdicts (backend='auto'): measured winner per layer
+        # group + how often the on-disk winner cache answered
+        auto = {k: s["autotune"] for k, s in self.export_stats.items()
+                if isinstance(s, dict) and "autotune" in s}
+        if auto:
+            out["autotune"] = {
+                "backends": {k: a["backend"] for k, a in auto.items()},
+                "cache_hits": sum(1 for a in auto.values()
+                                  if a.get("cache_hit")),
+                "cache_misses": sum(1 for a in auto.values()
+                                    if not a.get("cache_hit")),
+                "mode": next(iter(auto.values())).get("mode"),
+            }
         if self.stats_at_save is not None:
             out["registry_at_save"] = self.stats_at_save.get("registry")
         return out
@@ -264,11 +340,18 @@ def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
     if spec.backend == "dense":     # negative control: no BSR support
         return Servable(pruned, cfg, spec, {}, registry, export_stats={})
 
+    chooser = None
+    if spec.backend == "auto":
+        from repro.kernels.autotune import choose_backend
+
+        def chooser(pack):
+            return choose_backend(pack, m=spec.autotune_m)
+
     sparse_params, packs, stats = export_params(
         pruned, cfg, tile=spec.tile, fuse_qkv=spec.fuse_qkv,
         cross_layer_union=spec.cross_layer_union,
         include_ffn=spec.include_ffn, use_plans=spec.use_plans,
-        registry=registry)
+        registry=registry, backend_chooser=chooser)
     if spec.dtype is not None and packs:
         jdtype = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
         sparse_params = _cast_packed(sparse_params, packs, jdtype)

@@ -20,7 +20,7 @@ DEFAULT_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
                    "ffn/wi", "ffn/wo")
 
 PRUNE_RECIPES = ("none", "oneshot", "tied")
-BACKENDS = ("plan", "bsr", "dense")
+BACKENDS = ("plan", "bsr", "dense", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,11 +51,21 @@ class ServingSpec:
         ``bsr_linear``'s runtime backends (rowpack on CPU, pallas on TPU);
         ``'dense'`` skips BSR export entirely -- the (possibly pruned)
         weights serve through plain dense matmuls, the paper's negative
-        control and the benchmark baseline.
+        control and the benchmark baseline; ``'auto'`` micro-benchmarks
+        {dense, gather, rowpack, plan, pallas, masked} per pattern
+        fingerprint on the current device (``kernels/autotune.py``) and
+        pins each projection group to the measured winner -- winners are
+        persisted on disk and reused across processes, and ``stats()``
+        reports the chosen backend per layer group.
+      autotune_m: batch-rows the ``'auto'`` micro-benchmark measures at
+        (part of the winner-cache key; other backends ignore it).
       dtype: optional dtype override ('float32' | 'bfloat16') applied to the
         exported packed values; None keeps the model dtype.
-      include_ffn: export FFN projections too (bert only; lm exports
-        attention projections).
+      include_ffn: export FFN projections too. For bert this is
+        unconditional; lm-family exports pack a dense-MLP projection only
+        when it is actually block-sparse at the kernel tile (packing an
+        unpruned projection is pure loss), so attention-only prune recipes
+        keep serving their FFN dense.
     """
 
     tile: Tuple[int, int] = (128, 128)
@@ -67,6 +77,7 @@ class ServingSpec:
     backend: str = "plan"
     dtype: Optional[str] = None
     include_ffn: bool = True
+    autotune_m: int = 256
 
     def __post_init__(self):
         if self.prune not in PRUNE_RECIPES:

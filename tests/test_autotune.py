@@ -1,0 +1,187 @@
+"""Autotuned backend selection (kernels/autotune.py, backend='auto'):
+frozen-timer argmin + persistence, stub-mode determinism, cache-key
+separation, spec-level wiring with per-group stats, and serialization of
+the choice/masked pack kinds."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.sparsity import prune_to_sparsity
+from repro.kernels import autotune
+from repro.kernels.autotune import (AutotuneCache, BackendChoice, MaskedPack,
+                                    choose_backend, dense_from_pack,
+                                    masked_pack_from, stub_costs)
+from repro.kernels.bsr_matmul import pack_bsr
+from repro.models import init_model
+from repro.serving import ServingSpec, load_servable, prepare_servable
+from repro.serving.serialize import (packs_from_arrays, packs_to_arrays,
+                                     pattern_key)
+
+RNG = np.random.RandomState(0)
+
+ATTN_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo")
+
+
+def _pack(n=64, k=48, tile=(16, 16), sparsity=0.5, seed=0):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(n, k).astype(np.float32))
+    pruned, _ = prune_to_sparsity(w, tile, sparsity)
+    return pack_bsr(np.asarray(pruned), tile)
+
+
+# --------------------------------------------------------------------------
+# chooser mechanics
+# --------------------------------------------------------------------------
+
+def test_frozen_timer_picks_argmin_and_persists(tmp_path):
+    """With an injected frozen clock, the chooser is exact argmin; the
+    winner is persisted and a FRESH cache instance over the same file
+    (a stand-in for a second process) answers from disk."""
+    pk = _pack()
+    frozen = {"dense": 5.0, "gather": 3.0, "rowpack": 4.0, "plan": 1.0}
+    cache = AutotuneCache(str(tmp_path / "at.json"))
+    c = choose_backend(pk, m=32, candidates=tuple(frozen), cache=cache,
+                       stub=False, timer=lambda name, fn, args: frozen[name])
+    assert c.backend == "plan" and not c.cache_hit
+    assert cache.stats.misses == 1
+
+    cache2 = AutotuneCache(str(tmp_path / "at.json"))    # "new process"
+    c2 = choose_backend(pk, m=32, candidates=tuple(frozen), cache=cache2,
+                        stub=False,
+                        timer=lambda name, fn, args: 1.0 / 0.0)  # never runs
+    assert c2.backend == "plan" and c2.cache_hit
+    assert cache2.stats.hits == 1
+
+
+def test_cache_key_separates_pattern_m_and_mode(tmp_path):
+    cache = AutotuneCache(str(tmp_path / "at.json"))
+    pk1, pk2 = _pack(seed=0), _pack(seed=1)
+    t = lambda name, fn, args: {"dense": 1.0, "plan": 2.0}[name]
+    a = choose_backend(pk1, m=32, candidates=("dense", "plan"), cache=cache,
+                       stub=False, timer=t)
+    b = choose_backend(pk2, m=32, candidates=("dense", "plan"), cache=cache,
+                       stub=False, timer=t)
+    c = choose_backend(pk1, m=64, candidates=("dense", "plan"), cache=cache,
+                       stub=False, timer=t)
+    d = choose_backend(pk1, m=32, candidates=("dense", "plan"), cache=cache,
+                       stub=True)
+    assert len({a.key, b.key, c.key, d.key}) == 4
+    assert cache.stats.hits == 0 and cache.stats.misses == 4
+
+
+def test_stub_mode_is_deterministic(tmp_path):
+    pk = _pack()
+    costs1 = stub_costs(pk, 128, autotune.CANDIDATES)
+    costs2 = stub_costs(pk, 128, autotune.CANDIDATES)
+    assert costs1 == costs2
+    assert set(costs1) == set(autotune.CANDIDATES)
+    c1 = choose_backend(pk, m=128, cache=AutotuneCache(
+        str(tmp_path / "a.json")), stub=True)
+    c2 = choose_backend(pk, m=128, cache=AutotuneCache(
+        str(tmp_path / "b.json")), stub=True)
+    assert c1.backend == c2.backend and c1.mode == "stub"
+    if jax.default_backend() != "tpu":
+        # interpret-mode arms must never win the proxy off-TPU
+        assert c1.backend not in autotune.INTERPRET_ONLY
+
+
+def test_wallclock_measure_small_pattern():
+    """Real (tiny) wall-clock path: positive times per candidate plus the
+    drift-robust paired-ratio ranking scores (anchor scores 1.0 exactly:
+    it is its own round-mate)."""
+    pk = _pack(n=32, k=32, tile=(16, 16))
+    times, scores = autotune.measure(
+        pk, 8, ("dense", "gather", "rowpack", "plan"), reps=2)
+    assert all(t > 0 for t in times.values()) and len(times) == 4
+    assert scores["dense"] == 1.0
+    assert all(s > 0 for s in scores.values()) and len(scores) == 4
+
+
+# --------------------------------------------------------------------------
+# spec-level wiring (stub mode: deterministic in CI)
+# --------------------------------------------------------------------------
+
+def _auto_spec():
+    return ServingSpec(tile=(16, 16), sparsity=0.5, prune="oneshot",
+                       targets=ATTN_TARGETS, backend="auto", autotune_m=64)
+
+
+def test_backend_auto_end_to_end(tmp_path, monkeypatch):
+    """backend='auto' serves with forward/decode parity vs the plan
+    backend, reports the chosen backend per layer group in stats(), and a
+    second prepare (same cache file) counts cache hits."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setenv("REPRO_AUTOTUNE_STUB", "1")
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    sv_auto = prepare_servable(params, cfg, _auto_spec())
+    sv_plan = prepare_servable(params, cfg, ServingSpec(
+        tile=(16, 16), sparsity=0.5, prune="oneshot", targets=ATTN_TARGETS,
+        backend="plan"))
+    toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (2, 8)))
+    np.testing.assert_allclose(np.asarray(sv_auto.forward(toks)),
+                               np.asarray(sv_plan.forward(toks)), atol=1e-5)
+    st = sv_auto.stats()
+    assert st["backend"] == "auto"
+    auto = st["autotune"]
+    assert auto["mode"] == "stub" and auto["backends"]
+    assert all(b in autotune.CANDIDATES for b in auto["backends"].values())
+    assert auto["cache_misses"] == len(auto["backends"])
+
+    sv2 = prepare_servable(params, cfg, _auto_spec())
+    auto2 = sv2.stats()["autotune"]
+    assert auto2["cache_hits"] == len(auto2["backends"])
+    assert auto2["backends"] == auto["backends"]
+
+
+def test_backend_auto_save_load(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setenv("REPRO_AUTOTUNE_STUB", "1")
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(2), cfg)
+    sv = prepare_servable(params, cfg, _auto_spec())
+    toks = jnp.asarray(RNG.randint(0, cfg.vocab_size, (1, 6)))
+    want = np.asarray(sv.forward(toks))
+    sv.save(str(tmp_path / "ckpt"))
+    sv2 = load_servable(str(tmp_path / "ckpt"))
+    np.testing.assert_allclose(np.asarray(sv2.forward(toks)), want,
+                               atol=1e-6)
+    assert sv2.stats()["autotune"]["backends"] == \
+        sv.stats()["autotune"]["backends"]
+
+
+# --------------------------------------------------------------------------
+# choice/masked pack kinds: serve parity + serialization round-trip
+# --------------------------------------------------------------------------
+
+def test_choice_and_masked_packs_roundtrip():
+    pk = _pack()
+    packs = {"a/wq": BackendChoice(pk, "gather"),
+             "b/wq": BackendChoice(pk, "rowpack"),
+             "c/wq": masked_pack_from(pk)}
+    # same pattern pinned to different backends must NOT dedupe together
+    assert len({pattern_key(p) for p in packs.values()}) == 3
+    arrays, meta = packs_to_arrays(packs)
+    restored = packs_from_arrays(meta, arrays)
+    assert restored["a/wq"].backend == "gather"
+    assert restored["b/wq"].backend == "rowpack"
+    np.testing.assert_array_equal(restored["c/wq"].tile_mask,
+                                  packs["c/wq"].tile_mask)
+    for key in packs:
+        assert pattern_key(restored[key]) == pattern_key(packs[key])
+
+
+def test_masked_and_choice_linear_parity():
+    from repro.models.common import linear
+    pk = _pack()
+    x = jnp.asarray(RNG.randn(4, 48).astype(np.float32))
+    ref = x @ jnp.asarray(dense_from_pack(pk)).T
+    for pack, w in [
+            (BackendChoice(pk, "gather"), pk.data),
+            (BackendChoice(pk, "rowpack"), pk.data),
+            (masked_pack_from(pk), jnp.asarray(dense_from_pack(pk)))]:
+        got = linear({"w": w}, x, pack)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-4)

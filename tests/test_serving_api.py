@@ -111,6 +111,32 @@ def test_bsr_backend_matches_plan_backend(bert):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_lm_ffn_export_packs_only_pruned_projections(lm):
+    """FFN export for lm families (the paper's FC targets): pruned wi/wg/wo
+    get packed and serve with parity; an attention-only prune recipe packs
+    NO ffn projections (packing an unpruned weight is pure loss)."""
+    cfg, params, toks = lm
+    ffn_spec = ServingSpec(tile=(16, 16), sparsity=0.7, prune="oneshot",
+                           targets=("attn/wq", "attn/wk", "attn/wv",
+                                    "attn/wo", "ffn/wi", "ffn/wg", "ffn/wo"))
+    servable = prepare_servable(params, cfg, ffn_spec)
+    ffn_packs = [k for k in servable.packs if "/ffn/" in k]
+    assert ffn_packs, "pruned FFN projections must be exported"
+    pruned, _ = oneshot_prune(params, ffn_spec.sparsity_config())
+    dense, _ = model_forward(pruned, cfg, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(servable.forward(toks)),
+                               np.asarray(dense), rtol=1e-4, atol=1e-4)
+    # decode path consumes the ffn packs too
+    cache = servable.init_cache(2, 16)
+    logits, _ = servable.decode_step(cache, toks[:, :1], 0)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+
+    attn_only = prepare_servable(params, cfg, ServingSpec(
+        tile=(16, 16), sparsity=0.7, prune="oneshot",
+        targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo")))
+    assert not [k for k in attn_only.packs if "/ffn/" in k]
+
+
 def test_lm_servable_decode_step(lm):
     cfg, params, toks = lm
     servable = prepare_servable(
