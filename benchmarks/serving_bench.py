@@ -20,6 +20,15 @@ Two sections are produced:
     busy for a fraction of it -- host dispatch, the overhead regime the
     CPU sparse-serving literature says to engineer away (arXiv:2306.16601).
 
+A third section, "sharded", sweeps the mesh path (``--mesh 1,2,8``): the
+same engine workload served tensor-parallel over a ``(1, S)`` device mesh
+(spec ``mesh_shape``), reporting tok/s plus per-device pack and cache
+bytes -- the partitioning evidence. Mesh sizes the process cannot host
+(fewer visible devices) are skipped with a note; on CPU run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Host-platform
+"devices" share one socket, so the sharded tok/s measure partitioning
+OVERHEAD, not interconnect speedups (docs/PERF.md).
+
 Results are persisted to BENCH_serving.json at the repo root via
 repro.runtime.bench_io, keeping the perf trajectory machine-readable
 across PRs; scripts/check.sh warns when a fresh smoke regresses >20%
@@ -27,6 +36,7 @@ against the committed numbers (scripts/bench_guard.py).
 
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py
           [--smoke] [--no-json] [--skip-baseline] [--sync-every 1,4,8,16]
+          [--mesh 1,2,8]
 """
 from __future__ import annotations
 
@@ -47,6 +57,7 @@ SPARSITY = 0.8
 TILE = (64, 64)
 SYNC_SWEEP = (1, 4, 8, 16)
 SYNC_SWEEP_SMOKE = (1, 4)
+MESH_SWEEP = (1, 2, 8)
 
 
 def bench_path() -> str:
@@ -100,7 +111,7 @@ def _run_cell(servable, slots, *, prompt_len, max_new, cache_len, rng,
     dt, eng, n_reqs = best
     toks = eng.stats.tokens_generated
     st = eng.stats
-    return {"slots": slots, "requests": n_reqs, "tokens": toks,
+    cell = {"slots": slots, "requests": n_reqs, "tokens": toks,
             "seconds": round(dt, 4), "tokens_per_s": round(toks / dt, 2),
             "sync_every": sync_every,
             "decode_steps": st.steps, "windows": st.windows,
@@ -118,6 +129,9 @@ def _run_cell(servable, slots, *, prompt_len, max_new, cache_len, rng,
                 "sync_ms_per_window": round(
                     1e3 * st.sync_s / max(st.windows, 1), 2),
             }}
+    # the timed engine rides along so callers can read post-run state
+    # (e.g. run_sharded's per-device cache bytes) without building another
+    return eng, cell
 
 
 def _bench_params(smoke: bool):
@@ -167,9 +181,9 @@ def run(emit=print, smoke=False, write_json=True, arms=None):
          f"{'tok/s':>8s} {'occupancy':>9s}")
     for slots in SLOT_COUNTS:
         for name, servable in arms.items():
-            cell = _run_cell(servable, slots, prompt_len=prompt_len,
-                             max_new=max_new, cache_len=cache_len, rng=rng,
-                             reps=1 if smoke else 2)
+            _, cell = _run_cell(servable, slots, prompt_len=prompt_len,
+                                max_new=max_new, cache_len=cache_len,
+                                rng=rng, reps=1 if smoke else 2)
             results[name].append(cell)
             emit(f"{name:8s} {cell['slots']:5d} {cell['tokens']:7d} "
                  f"{cell['seconds']:8.3f} {cell['tokens_per_s']:8.1f} "
@@ -214,11 +228,12 @@ def run_fused(emit=print, smoke=False, write_json=True, sync_sweep=None,
          f"{'tok/s':>8s} {'dec ms/step':>12s}")
     for sync_every in sweep:
         for name, servable in arms.items():
-            cell = _run_cell(servable, slots, rng=rng,
-                             prompt_len=bp["prompt_len"],
-                             max_new=bp["max_new"],
-                             cache_len=bp["cache_len"],
-                             reps=1 if smoke else 2, sync_every=sync_every)
+            _, cell = _run_cell(servable, slots, rng=rng,
+                                prompt_len=bp["prompt_len"],
+                                max_new=bp["max_new"],
+                                cache_len=bp["cache_len"],
+                                reps=1 if smoke else 2,
+                                sync_every=sync_every)
             results[name].append(cell)
             emit(f"{name:8s} {sync_every:5d} {cell['tokens']:7d} "
                  f"{cell['seconds']:8.3f} {cell['tokens_per_s']:8.1f} "
@@ -255,6 +270,90 @@ def run_fused(emit=print, smoke=False, write_json=True, sync_sweep=None,
     return results
 
 
+def _tp_lm(smoke: bool) -> ModelConfig:
+    """A decoder whose projections divide an 8-wide model axis at the
+    sharded tile (wqkv block rows, ffn rows/cols, kv heads all % 8 == 0)."""
+    if smoke:
+        return ModelConfig(
+            arch="serving-bench-tp-smoke", family="dense",
+            n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, head_dim=32,
+            d_ff=1024, vocab_size=4096,
+            pattern=(LayerKind("attn", "dense"),), dtype="float32")
+    return ModelConfig(
+        arch="serving-bench-tp", family="dense",
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+        d_ff=2048, vocab_size=30522,
+        pattern=(LayerKind("attn", "dense"),), dtype="float32")
+
+
+def _per_device_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(
+        np.prod(x.sharding.shard_shape(x.shape)) * x.dtype.itemsize
+        if hasattr(x, "sharding") else x.nbytes for x in leaves))
+
+
+def run_sharded(emit=print, smoke=False, write_json=True, mesh_sweep=None):
+    """The mesh sweep: the fused-engine workload served over (1, S) meshes.
+    Emits tok/s + per-device pack/cache bytes per mesh size -- the
+    evidence that TP export actually partitions state. Host-platform
+    meshes measure partitioning overhead, not interconnects."""
+    cfg = _tp_lm(smoke)
+    bp = _bench_params(smoke)
+    tile = (32, 32) if smoke else (64, 64)
+    slots = 4 if smoke else 8
+    sweep = tuple(mesh_sweep or MESH_SWEEP)
+    rng = np.random.RandomState(2)
+
+    emit(f"initializing {cfg.arch} ({cfg.n_layers}L x {cfg.d_model}d), "
+         f"mesh sweep {sweep} ({jax.device_count()} devices visible)...")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    results = {}
+    skipped = []
+    emit(f"{'mesh':>6s} {'tokens':>7s} {'sec':>8s} {'tok/s':>8s} "
+         f"{'pack/dev':>10s} {'cache/dev':>10s}")
+    for s in sweep:
+        if s > jax.device_count():
+            skipped.append(s)
+            continue
+        spec = ServingSpec(
+            tile=tile, sparsity=SPARSITY, prune="tied", targets=TARGETS,
+            backend="plan",
+            mesh_shape=(1, s) if s > 1 else None, partition="tp")
+        servable = prepare_servable(params, cfg, spec)
+        eng, cell = _run_cell(servable, slots, prompt_len=bp["prompt_len"],
+                              max_new=bp["max_new"],
+                              cache_len=bp["cache_len"],
+                              rng=rng, reps=1 if smoke else 2, sync_every=4)
+        _, cell["pack_bytes_per_device"] = servable.pack_bytes()
+        cell["cache_bytes_per_device"] = _per_device_bytes(eng.cache)
+        st = servable.stats()
+        if "sharding" in st:
+            cell["sharded_packs"] = st["sharding"]["sharded_packs"]
+        results[f"tp{s}"] = [cell]
+        emit(f"{'tp' + str(s):>6s} {cell['tokens']:7d} "
+             f"{cell['seconds']:8.3f} {cell['tokens_per_s']:8.1f} "
+             f"{cell['pack_bytes_per_device']:10d} "
+             f"{cell['cache_bytes_per_device']:10d}")
+    for s in skipped:
+        emit(f"(mesh tp{s} skipped: needs {s} devices, "
+             f"{jax.device_count()} visible -- set XLA_FLAGS="
+             f"--xla_force_host_platform_device_count={max(sweep)})")
+
+    if write_json and results:
+        section = "sharded_smoke" if smoke else "sharded"
+        path = update_bench_json(section, {
+            "model": cfg.arch, "layers": cfg.n_layers,
+            "d_model": cfg.d_model, "sparsity": SPARSITY,
+            "tile": list(tile), "slots": slots,
+            "mesh_sweep": list(sweep), "skipped": skipped,
+            "devices_visible": jax.device_count(),
+            "results": results,
+        }, path=bench_path())
+        emit(f"wrote {section} section to {path}")
+    return results
+
+
 def main(argv):
     smoke = "--smoke" in argv
     write_json = "--no-json" not in argv
@@ -262,12 +361,17 @@ def main(argv):
     if "--sync-every" in argv:
         sweep = tuple(int(v) for v in
                       argv[argv.index("--sync-every") + 1].split(","))
+    mesh_sweep = None
+    if "--mesh" in argv:
+        mesh_sweep = tuple(int(v) for v in
+                           argv[argv.index("--mesh") + 1].split(","))
     cfg = _bert_sized_lm(smoke)
     arms = _build_arms(cfg, print)
     if "--skip-baseline" not in argv:
         run(smoke=smoke, write_json=write_json, arms=arms)
     run_fused(smoke=smoke, write_json=write_json, sync_sweep=sweep,
               arms=arms)
+    run_sharded(smoke=smoke, write_json=write_json, mesh_sweep=mesh_sweep)
 
 
 if __name__ == "__main__":

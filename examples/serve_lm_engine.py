@@ -11,13 +11,22 @@ jitted decode *window* -- ``--sync-every`` fused steps between host syncs
 path replaced). ``--temperature``/``--top-k``/``--seed`` switch greedy
 decoding to on-device seeded sampling.
 
+``--tp N`` serves the same workload tensor-parallel over a ``(1, N)``
+device mesh (spec ``mesh_shape``): BSR plan packs shard by output block
+rows / input block cols, the slot cache shards its KV heads, and
+``stats()`` reports the per-shard pack bytes and registry accounting. On
+CPU, expose fake devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_lm_engine.py --tp 8
+
 Compare with examples/serve_bert_sparse.py (batched *encoder* serving):
 this demo is the decode-side counterpart the paper's runtime argument
 ultimately cares about -- concurrency without per-request graphs.
 
 Run:  PYTHONPATH=src python examples/serve_lm_engine.py
           [--arch deepseek_7b] [--slots 4] [--requests 10] [--max-new 12]
-          [--sync-every 8] [--temperature 0.8] [--top-k 40]
+          [--sync-every 8] [--temperature 0.8] [--top-k 40] [--tp N]
 """
 import argparse
 import time
@@ -44,6 +53,10 @@ def main():
                     help="0 = greedy; >0 samples on device")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards: serve over a (1, N) mesh "
+                         "(needs N visible devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -51,11 +64,22 @@ def main():
     params = init_model(jax.random.PRNGKey(0), cfg)
     servable = prepare_servable(params, cfg, ServingSpec(
         tile=(16, 16), sparsity=args.sparsity, prune="oneshot",
-        targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo")))
+        targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo"),
+        mesh_shape=(1, args.tp) if args.tp > 1 else None, partition="tp"))
     st = servable.stats()
     print(f"sparse export: {st['packed_projections']} packed projections, "
           f"density {st['density']:.2f}" if st["density"] is not None
           else "no packed projections (dense serving)")
+    if args.tp > 1:
+        sh = st["sharding"]
+        print(f"tensor-parallel: mesh (1, {args.tp}), "
+              f"{sh['sharded_packs']}/{st['packed_projections']} packs "
+              f"sharded, pack bytes/device "
+              f"{sh['pack_bytes_per_device']}/{sh['pack_bytes_total']} "
+              f"(total)")
+        hits = {s: f"{v['hits']}h/{v['misses']}m"
+                for s, v in sorted(sh["per_shard_registry"].items())}
+        print(f"per-shard registry (layout reuse across layers): {hits}")
 
     engine = servable.engine(max_slots=args.slots, cache_len=128,
                              sync_every=args.sync_every,

@@ -79,6 +79,13 @@ class PatternRegistry:
             self._cache[key] = value
             return value
 
+    def peek(self, key: Hashable) -> bool:
+        """True when ``key`` is already built (no counter update, no build)
+        -- lets callers attribute the upcoming ``cached`` call to their own
+        accounting scope (e.g. per-shard hit/miss in sharded export)."""
+        with self._lock:
+            return key in self._cache
+
     def specialize(self, fn: Callable, bsr: BSR) -> Callable:
         """Return ``lambda data, *args: fn(bsr_with(data), *args)`` compiled
         with the pattern held static. Cached by (fn identity, pattern)."""

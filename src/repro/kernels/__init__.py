@@ -3,11 +3,12 @@ from repro.kernels.autotune import (AutotuneCache, BackendChoice, MaskedPack,
                                     choose_backend, default_cache_path)
 from repro.kernels.bsr_matmul import (KernelBSR, dds, dds_t, masked_matmul,
                                       pack_bsr, sddmm)
-from repro.kernels.exec_plan import (RowPackPlan, build_plan,
+from repro.kernels.exec_plan import (RowPackPlan, ShardedPlan, build_plan,
+                                     build_sharded_plan,
                                      default_plan_registry,
                                      kernel_pattern_fingerprint,
                                      pack_plan_data, plan_for_pack,
                                      plan_linear, plan_matmul,
-                                     unpack_plan_data)
+                                     shard_divisible, unpack_plan_data)
 from repro.kernels.ops import (bsr_linear, bsr_matmul, default_backend,
                                sparsify_weight)

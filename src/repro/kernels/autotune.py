@@ -23,11 +23,20 @@ Cache location and invalidation
 -------------------------------
 Winners live in ONE json file: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``. Each entry is keyed by
-``sha1(pattern fingerprint) : m<batch rows> : <device kind> : <mode> :
-c<candidate-set digest>``, so a different sparsity pattern, measurement
-batch size, device, timing mode, or candidate set never reuses a stale
-winner -- there is nothing else to invalidate. Delete the file (or point
-the env var elsewhere) to force re-tuning.
+``sha1(pattern fingerprint) : m<batch rows> : <device kind> :
+d<device count> : [shard tag :] <mode> : c<candidate-set digest>``, so a
+different sparsity pattern, measurement batch size, device kind, *visible
+device count*, shard partitioning, timing mode, or candidate set never
+reuses a stale winner -- there is nothing else to invalidate. (The device
+count and shard tag matter under mesh serving: a winner measured on one
+device must not answer for an 8-way-sharded pack whose per-device shard
+is an 8x smaller problem.) Delete the file (or point the env var
+elsewhere) to force re-tuning.
+
+The file carries a format ``version``; loading an older version silently
+discards its entries (they were keyed without the device/shard fields) and
+the next ``put`` rewrites the file at the current version -- stale caches
+migrate by invalidation, never by crash.
 
 Stub mode (CI determinism)
 --------------------------
@@ -67,6 +76,11 @@ INTERPRET_ONLY = ("pallas", "masked")
 
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
 _ENV_STUB = "REPRO_AUTOTUNE_STUB"
+
+#: on-disk winner-cache format. v1 keys lacked the device-count and shard
+#: fields (a winner measured on 1 device would answer for 8); v1 files are
+#: read as empty and rewritten at the current version on the next put.
+CACHE_VERSION = 2
 
 
 def stub_mode() -> bool:
@@ -174,6 +188,27 @@ def dense_from_pack(pack: KernelBSR, data=None) -> np.ndarray:
     return w.reshape(n, k)
 
 
+def shard_subpack(pack: KernelBSR, n_shards: int, axis: str) -> KernelBSR:
+    """The measurement proxy for a tensor-parallel shard: the sub-pattern
+    of the MOST occupied shard (the per-device straggler that sets the
+    layer's critical path), as its own KernelBSR over the per-device
+    sub-shape. ``axis='out'`` slices output block rows, ``'in'`` input
+    block cols (serving/export.shard_axis_for conventions)."""
+    from repro.kernels.bsr_matmul import pack_bsr
+    rows = np.asarray(pack.row_id[: pack.real_nnzt], np.int64)
+    cols = np.asarray(pack.col_id[: pack.real_nnzt], np.int64)
+    per = (pack.n_brows if axis == "out" else pack.n_bcols) // n_shards
+    shard_of = (rows if axis == "out" else cols) // per
+    s = int(np.bincount(shard_of, minlength=n_shards).argmax())
+    w = dense_from_pack(pack)
+    bn, bk = pack.tile
+    if axis == "out":
+        sub = w[s * per * bn: (s + 1) * per * bn, :]
+    else:
+        sub = w[:, s * per * bk: (s + 1) * per * bk]
+    return pack_bsr(sub, pack.tile)
+
+
 # --------------------------------------------------------------------------
 # the on-disk winner cache
 # --------------------------------------------------------------------------
@@ -208,7 +243,12 @@ class AutotuneCache:
             try:
                 with open(self.path) as f:
                     doc = json.load(f)
-                if isinstance(doc, dict):
+                # migration-by-invalidation: entries written under an older
+                # key scheme (no device count / shard tag) are dropped, not
+                # crashed on; the file is rewritten at CACHE_VERSION by the
+                # next put()
+                if isinstance(doc, dict) \
+                        and doc.get("version") == CACHE_VERSION:
                     self._entries = dict(doc.get("entries", {}))
             except (OSError, json.JSONDecodeError):
                 pass
@@ -226,10 +266,13 @@ class AutotuneCache:
         entries = self._load()
         entries[key] = record
         # merge-on-write: pick up entries other processes added meanwhile
+        # (same-version files only: stale-format entries stay invalidated)
         on_disk: Dict[str, dict] = {}
         try:
             with open(self.path) as f:
-                on_disk = dict(json.load(f).get("entries", {}))
+                doc = json.load(f)
+            if doc.get("version") == CACHE_VERSION:
+                on_disk = dict(doc.get("entries", {}))
         except (OSError, json.JSONDecodeError, AttributeError):
             pass
         on_disk.update(entries)
@@ -237,8 +280,8 @@ class AutotuneCache:
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
         tmp = f"{self.path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump({"version": 1, "entries": on_disk}, f, indent=1,
-                      sort_keys=True)
+            json.dump({"version": CACHE_VERSION, "entries": on_disk}, f,
+                      indent=1, sort_keys=True)
         os.replace(tmp, self.path)
 
 
@@ -380,13 +423,21 @@ def choose_backend(pack: KernelBSR, m: int = 256, *,
                    candidates: Optional[Sequence[str]] = None,
                    cache: Optional[AutotuneCache] = None,
                    stub: Optional[bool] = None, reps: int = 5,
-                   timer: Optional[Callable] = None) -> Choice:
+                   timer: Optional[Callable] = None,
+                   shard: Optional[Tuple[int, str]] = None) -> Choice:
     """Pick the fastest execution path for ``pack`` on this device.
 
     Consults the on-disk winner cache first (one measurement per
-    (pattern, m, device, mode) EVER, across processes); on a miss it
-    measures (or, in stub mode, ranks by the deterministic proxy) and
-    persists the winner.
+    (pattern, shard, m, device kind, device count, mode) EVER, across
+    processes); on a miss it measures (or, in stub mode, ranks by the
+    deterministic proxy) and persists the winner.
+
+    ``shard = (n_shards, axis)`` tags the key with the tensor-parallel
+    partitioning AND the per-shard sub-problem shape, and the measurement
+    itself runs on the per-shard sub-problem (:func:`shard_subpack`, the
+    most occupied shard): an 8-way-sharded pack runs 8 per-device problems
+    an 8th the size, so a winner measured unsharded (or at a different
+    shard count) is neither keyed nor measured for it.
     """
     stub = stub_mode() if stub is None else bool(stub)
     cache = cache if cache is not None else default_cache()
@@ -400,19 +451,41 @@ def choose_backend(pack: KernelBSR, m: int = 256, *,
     # were never measured)
     cand_tag = hashlib.sha1(
         ",".join(sorted(candidates)).encode()).hexdigest()[:8]
-    key = (f"{pattern_digest(pack)}:m{int(m)}:{device_kind()}:{mode}"
-           f":c{cand_tag}")
+    shard_tag = ""
+    measure_pack = pack
+    if shard is not None and int(shard[0]) > 1:
+        from repro.kernels.exec_plan import shard_divisible
+        n_shards, axis = int(shard[0]), shard[1]
+        if not shard_divisible(pack, n_shards, axis):
+            # an indivisible pattern serves through the replicated
+            # fallback, i.e. unsharded -- key and measure it as such
+            # (serving/export guards this too; this covers direct callers)
+            n_shards = 0
+        else:
+            n, k = pack.shape
+            sn = n // n_shards if axis == "out" else n
+            sk = k // n_shards if axis == "in" else k
+            shard_tag = f":s{axis}{n_shards}x{sn}x{sk}"
+            # measure the per-device problem, not the full matrix: under
+            # TP each device runs a 1/n_shards-sized matmul, whose winner
+            # can differ (smaller problems lean dense)
+            measure_pack = shard_subpack(pack, n_shards, axis)
+    key = (f"{pattern_digest(pack)}:m{int(m)}:{device_kind()}"
+           f":d{jax.device_count()}{shard_tag}:{mode}:c{cand_tag}")
     rec = cache.get(key)
     if rec is not None and rec.get("backend") in candidates:
         return Choice(rec["backend"], dict(rec.get("costs", {})), True,
                       mode, key)
     if stub:
-        costs = stub_costs(pack, m, candidates)
+        costs = stub_costs(measure_pack, m, candidates)
         scores = costs
     else:
-        costs, scores = measure(pack, m, candidates, reps=reps, timer=timer)
+        costs, scores = measure(measure_pack, m, candidates, reps=reps,
+                                timer=timer)
     backend = min(scores, key=scores.get)
     cache.put(key, {"backend": backend, "costs": costs, "mode": mode,
                     "m": int(m), "device": device_kind(),
+                    "devices": jax.device_count(),
+                    "shard": shard_tag.lstrip(":") or None,
                     "created": time.strftime("%Y-%m-%dT%H:%M:%S")})
     return Choice(backend, costs, False, mode, key)

@@ -132,6 +132,64 @@ class RowPackPlan:
                 and self.fingerprint == other.fingerprint)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedPlan(RowPackPlan):
+    """A RowPackPlan whose virtual-row axis is partitioned into ``n_shards``
+    contiguous, equal-size groups -- one per device of a tensor-parallel
+    "model" mesh axis (launch/sharding.py conventions).
+
+    ``shard_axis`` selects the TP layout:
+
+      * ``'out'`` (column-parallel: wq/wk/wv/wqkv/wi/wg): shard ``s`` owns
+        output block rows ``[s*R/S, (s+1)*R/S)``; its vrows reference only
+        those rows, so the row-grouped values ``(V, P, bn, bk)`` sharded
+        over vrows place each shard's tiles on exactly one device and the
+        output feature dim comes out model-sharded;
+      * ``'in'`` (row-parallel: wo): shard ``s`` owns input block columns
+        ``[s*C/S, (s+1)*C/S)``; every shard's vrows map to *global* output
+        rows, so the plan's segment-sum doubles as the per-layer psum that
+        folds the partial products back together.
+
+    Either way the per-call math is exactly :func:`plan_linear` -- the
+    shard structure lives entirely in how vrows/values are laid out, which
+    is why a sharded plan is *also* a valid single-device plan (exact
+    fallback when no mesh is active). ``spilled`` is forced True: the
+    segment-sum is what reassembles (or psums) the per-shard partials.
+
+    ``shard_fingerprints`` identify each shard's sub-pattern -- the
+    per-shard registry / autotune cache keys (a winner measured for one
+    shard's pattern never answers for a different shard or device count).
+    ``mesh`` is attached by ``prepare_servable`` (never serialized, never
+    part of the fingerprint): when set, ``models/common.linear`` pins the
+    output sharding (column-parallel) or the psum point (row-parallel).
+    """
+
+    n_shards: int = 1
+    shard_axis: str = "out"            # 'out' = column-parallel, 'in' = row
+    shard_fingerprints: Tuple[bytes, ...] = ()
+    mesh: Optional[object] = None      # jax.sharding.Mesh, attached late
+
+    @property
+    def spilled(self) -> bool:
+        # per-shard partials always fold through the segment-sum (for
+        # 'in'-sharding it IS the psum), even if vrow/row counts collide
+        return True
+
+    @property
+    def vrows_per_shard(self) -> int:
+        return self.n_vrows // max(1, self.n_shards)
+
+    def with_mesh(self, mesh) -> "ShardedPlan":
+        return dataclasses.replace(self, mesh=mesh)
+
+    def __hash__(self):
+        return hash(self.fingerprint)
+
+    def __eq__(self, other):
+        return (isinstance(other, ShardedPlan)
+                and self.fingerprint == other.fingerprint)
+
+
 # a spill schedule reassociates row sums and adds segment-sum + batch-count
 # overhead, so it must buy a decisive FLOP reduction to be worth it; below
 # this saving the no-spill layout (strictly cheaper than rowpack: same
@@ -200,6 +258,174 @@ def build_plan(pack: KernelBSR) -> RowPackPlan:
                        shape=pack.shape, tile=pack.tile, nnzt=pack.nnzt,
                        real_nnzt=pack.real_nnzt,
                        fingerprint=kernel_pattern_fingerprint(pack))
+
+
+# --------------------------------------------------------------------------
+# sharded plans (tensor-parallel serving: launch/sharding.py conventions)
+# --------------------------------------------------------------------------
+
+def shard_divisible(pack: KernelBSR, n_shards: int, shard_axis: str) -> bool:
+    """True when this pack can be partitioned into ``n_shards`` equal groups
+    along ``shard_axis`` ('out' = output block rows, 'in' = input block
+    cols) -- the same divisibility rule launch/sharding.spec_for_param
+    applies to dense weights (indivisible dims replicate)."""
+    dim = pack.n_brows if shard_axis == "out" else pack.n_bcols
+    return n_shards >= 1 and dim % n_shards == 0 and dim >= n_shards
+
+def _shard_layout(rows: np.ndarray, cols: np.ndarray, p: int):
+    """Compressed row-grouped layout for ONE shard's tiles (pack order).
+
+    ``rows`` are the *global* output block rows of this shard's tiles.
+    Unlike :func:`build_plan` (one vrow per block row, empty rows padded),
+    only rows actually present get vrows: at serving densities a shard owns
+    a small fraction of each row's tiles, and empty-row slots would multiply
+    the padding waste by ``n_shards``. Returns
+    ``(col_idx (v, p), slot_mask, row_of_vrow (v,) global, vrow, slot)``.
+    """
+    if rows.size == 0:
+        return (np.zeros((0, p), np.int32), np.zeros((0, p), bool),
+                np.zeros((0,), np.int64), np.zeros((0,), np.int64),
+                np.zeros((0,), np.int64))
+    uniq, inv = np.unique(rows, return_inverse=True)
+    counts = np.bincount(inv, minlength=len(uniq))
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    order = np.argsort(inv, kind="stable")
+    rank = np.empty(rows.shape[0], np.int64)
+    rank[order] = np.arange(rows.shape[0]) - starts[inv[order]]
+    n_spill = np.ceil(np.maximum(counts - p, 0) / p).astype(np.int64)
+    spill_base = len(uniq) + np.concatenate([[0], np.cumsum(n_spill)[:-1]])
+    v = int(len(uniq) + n_spill.sum())
+    chunk = rank // p
+    vrow = np.where(chunk == 0, inv, spill_base[inv] + chunk - 1)
+    slot = rank % p
+    col_idx = np.zeros((v, p), np.int32)
+    col_idx[vrow, slot] = cols
+    slot_mask = np.zeros((v, p), bool)
+    slot_mask[vrow, slot] = True
+    row_of_vrow = np.empty((v,), np.int64)
+    row_of_vrow[: len(uniq)] = uniq
+    for rr in np.nonzero(n_spill)[0]:
+        row_of_vrow[spill_base[rr]: spill_base[rr] + n_spill[rr]] = uniq[rr]
+    return col_idx, slot_mask, row_of_vrow, vrow, slot
+
+
+def shard_pattern_fingerprint(pack: KernelBSR, n_shards: int,
+                              shard_axis: str, shard: int) -> bytes:
+    """Fingerprint of ONE shard's sub-pattern -- the per-shard registry and
+    autotune key (kernels/autotune.py keys winners on (digest, shard, m,
+    device); two shards with identical sub-patterns share one key)."""
+    rows = np.asarray(pack.row_id[: pack.real_nnzt], np.int64)
+    cols = np.asarray(pack.col_id[: pack.real_nnzt], np.int64)
+    if shard_axis == "out":
+        per = pack.n_brows // n_shards
+        sel = (rows // per) == shard
+        lrows, lcols = rows[sel] % per, cols[sel]
+        shape = (pack.shape[0] // n_shards, pack.shape[1])
+    else:
+        per = pack.n_bcols // n_shards
+        sel = (cols // per) == shard
+        lrows, lcols = rows[sel], cols[sel] % per
+        shape = (pack.shape[0], pack.shape[1] // n_shards)
+    header = np.array([*shape, *pack.tile, int(shard_axis == "in")], np.int64)
+    return (b"shard:" + header.tobytes()
+            + lrows.astype(np.int32).tobytes()
+            + lcols.astype(np.int32).tobytes())
+
+
+def build_sharded_plan(pack: KernelBSR, n_shards: int,
+                       shard_axis: str = "out", *,
+                       registry: Optional[PatternRegistry] = None,
+                       shard_stats: Optional[dict] = None) -> ShardedPlan:
+    """Partition ``pack`` into ``n_shards`` equal vrow groups (see
+    :class:`ShardedPlan`). All shards share one slot capacity P and are
+    padded to the max per-shard vrow count, so the combined vrow axis is
+    exactly ``n_shards``-divisible -- the property that lets the values
+    array shard over the mesh "model" axis with zero cross-device tiles.
+
+    ``registry`` (optional) caches each shard's layout under its sub-pattern
+    fingerprint -- identical layers (cross-layer union, scan-stacked groups)
+    then reuse per-shard layouts, and ``shard_stats`` (dict, optional) is
+    filled with per-shard hit/miss counts for ``Servable.stats()``.
+    """
+    if not shard_divisible(pack, n_shards, shard_axis):
+        raise ValueError(
+            f"pattern {pack.shape} @ tile {pack.tile} not divisible into "
+            f"{n_shards} shards along {shard_axis!r}")
+    rows = np.asarray(pack.row_id[: pack.real_nnzt], np.int64)
+    cols = np.asarray(pack.col_id[: pack.real_nnzt], np.int64)
+    bn, bk = pack.tile
+    if shard_axis == "out":
+        per = pack.n_brows // n_shards
+        shard_of = rows // per
+    else:
+        per = pack.n_bcols // n_shards
+        shard_of = cols // per
+    # one capacity for every shard (uniform P = uniform padded layout)
+    p = 1
+    for s in range(n_shards):
+        srows = rows[shard_of == s]
+        if srows.size:
+            counts = np.bincount(np.unique(srows, return_inverse=True)[1])
+            p = max(p, _choose_capacity(counts, bk))
+
+    layouts, fps = [], []
+    for s in range(n_shards):
+        idx = np.nonzero(shard_of == s)[0]
+        fp = shard_pattern_fingerprint(pack, n_shards, shard_axis, s)
+        fps.append(fp)
+        # layouts are built (and registry-cached) in SHARD-LOCAL
+        # coordinates -- the fingerprint describes the local sub-pattern,
+        # so two shards with identical local structure must share a
+        # position-independent layout; global offsets are re-applied at
+        # assembly below
+        lrows = rows[idx] - s * per if shard_axis == "out" else rows[idx]
+        lcols = cols[idx] - s * per if shard_axis == "in" else cols[idx]
+
+        def build(lrows=lrows, lcols=lcols):
+            return _shard_layout(lrows, lcols, p)
+        if registry is not None:
+            key = ("plan_shard", shard_axis, p, fp)
+            if shard_stats is not None:
+                st = shard_stats.setdefault(s, {"hits": 0, "misses": 0})
+                st["hits" if registry.peek(key) else "misses"] += 1
+            layouts.append((idx, registry.cached(key, build)))
+        else:
+            layouts.append((idx, build()))
+
+    v_max = max(1, max(lay[1][0].shape[0] for lay in layouts))
+    col_idx = np.zeros((n_shards * v_max, p), np.int32)
+    slot_mask = np.zeros((n_shards * v_max, p), bool)
+    row_of_vrow = np.zeros((n_shards * v_max,), np.int64)
+    vrow = np.zeros((pack.real_nnzt,), np.int64)
+    slot = np.zeros((pack.real_nnzt,), np.int64)
+    for s, (idx, (ci, sm, rov, vr, sl)) in enumerate(layouts):
+        v = ci.shape[0]
+        lo = s * v_max
+        # globalize: 'out' shards own rows [s*per, (s+1)*per); 'in' shards
+        # gather x block-cols [s*per, (s+1)*per). Padding vrows (>= v) keep
+        # the shard's base row/col: they multiply zero data either way.
+        if shard_axis == "out":
+            col_idx[lo: lo + v] = ci
+            row_of_vrow[lo: lo + v_max] = s * per
+            row_of_vrow[lo: lo + v] = rov + s * per
+        else:
+            col_idx[lo: lo + v_max] = s * per
+            col_idx[lo: lo + v] = ci + s * per
+            row_of_vrow[lo: lo + v] = rov
+        slot_mask[lo: lo + v] = sm
+        vrow[idx] = lo + vr
+        slot[idx] = sl
+    header = np.array([n_shards, int(shard_axis == "in")], np.int64)
+    fingerprint = (b"sharded:" + header.tobytes()
+                   + kernel_pattern_fingerprint(pack))
+    return ShardedPlan(
+        col_idx=col_idx, slot_mask=slot_mask,
+        row_of_vrow=row_of_vrow.astype(np.int32),
+        vrow=vrow.astype(np.int32), slot=slot.astype(np.int32),
+        shape=pack.shape, tile=pack.tile, nnzt=pack.nnzt,
+        real_nnzt=pack.real_nnzt, fingerprint=fingerprint,
+        n_shards=n_shards, shard_axis=shard_axis,
+        shard_fingerprints=tuple(fps))
 
 
 # --------------------------------------------------------------------------

@@ -26,7 +26,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.mesh import dp_axes
 
 _ROW_PARALLEL = ("wo", "out", "out_proj")
-_REPLICATE = ("router",)   # small; replicated keeps top-k local
+# router: small, replicated keeps top-k local. MLA latent down/up
+# projections (w_dkv/w_uk/w_uv/w_krope): rank-sized, consumed via per-head
+# reshapes in the absorbed decode path -- sharding them buys little and the
+# reshard churn compounds float noise through the softmax chain.
+_REPLICATE = ("router", "w_dkv", "w_uk", "w_uv", "w_krope")
 
 
 def _sizes(mesh):
@@ -120,7 +124,7 @@ def spec_for_cache(name: str, shape, mesh) -> P:
     ndim = len(shape)
     toks = name.split("/")
     short = toks[-1]
-    if short == "pos_map" or ndim <= 1:
+    if ndim <= 1:
         return P(*([None] * ndim))
     # caches carry a leading stack dim when scanned: detect 'blocks'
     lead = 1 if ("blocks" in toks or short.startswith("cross")

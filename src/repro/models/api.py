@@ -48,6 +48,24 @@ def init_cache(params, cfg: ModelConfig, batch_size, cache_len, frames=None):
     return lm_mod.init_cache(cfg, batch_size, cache_len)
 
 
+def cache_shardings(cache, mesh):
+    """NamedSharding tree for a decode cache on ``mesh``: request slots
+    (the batch dim) shard over "data", KV heads / recurrent state over
+    "model" -- the divisibility-aware rules of
+    ``launch/sharding.spec_for_cache``. ``cache`` may be real arrays or
+    ShapeDtypeStructs."""
+    from repro.launch.sharding import cache_shardings as _cache_shardings
+    return _cache_shardings(cache, mesh)
+
+
+def shard_cache(cache, cfg: ModelConfig, mesh):
+    """Place a decode cache on ``mesh`` (see :func:`cache_shardings`).
+    Slot lifecycle ops (:func:`write_slot` / :func:`free_slot` /
+    :func:`reset_slot`) are sharding-preserving device scatters, so a
+    placed cache never gathers back to host across its lifetime."""
+    return jax.device_put(cache, cache_shardings(cache, mesh))
+
+
 def decode_step(params, cache, cfg: ModelConfig, token, pos, packs=None):
     """``pos``: scalar (single-request convention, broadcast) or int32 (B,)
     ragged per-slot positions; rows with pos < 0 are inactive slots whose

@@ -81,13 +81,43 @@ def init_linear(key, d_in, d_out, dtype=jnp.float32, scale=0.02):
     return {"w": normal_init(key, (d_out, d_in), scale, dtype)}
 
 
+def tp_constrain(y, pack):
+    """The tensor-parallel sharding hook for plan-backed projections
+    (kernels/exec_plan.ShardedPlan with a mesh attached by
+    ``prepare_servable``):
+
+      * column-parallel (``shard_axis='out'``): pin the output feature dim
+        to the mesh "model" axis -- activations stay sharded into the next
+        (row-parallel) projection, no gather between them;
+      * row-parallel (``shard_axis='in'``): pin the feature dim replicated
+        -- THE single psum per layer that folds the per-device partial
+        products (the plan's segment-sum) back together.
+
+    The leading (batch/slot) dim keeps its "data" sharding when the mesh
+    has one -- a None there would constrain it REPLICATED and force a
+    per-layer all-gather of activations under partition='tp+dp'.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = [None] * y.ndim
+    dp = dict(pack.mesh.shape).get("data", 1)
+    if y.ndim >= 2 and dp > 1 and y.shape[0] % dp == 0:
+        spec[0] = "data"    # batch-1 prefill sub-caches stay replicated
+    if pack.shard_axis == "out":
+        spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(
+        y, NamedSharding(pack.mesh, P(*spec)))
+
+
 def linear(p, x, pack=None, backend=None):
     """Dense or block-sparse projection.
 
     ``pack`` is static pattern metadata (from repro.serving.export), one of:
       * a ``RowPackPlan`` -- ``p['w']`` holds row-grouped values
         (R, P, bn, bk) and the precomputed-plan fast path executes
-        (kernels/exec_plan.py; no per-call pattern work at all);
+        (kernels/exec_plan.py; no per-call pattern work at all); its
+        ``ShardedPlan`` subclass additionally carries the tensor-parallel
+        vrow partitioning and (when a mesh is attached) pins the output
+        sharding via :func:`tp_constrain`;
       * a ``KernelBSR`` -- ``p['w']`` holds packed tile values (nnzt, bn, bk)
         and the matmul dispatches through ``bsr_linear``'s backends;
       * an ``autotune.BackendChoice`` -- a KernelBSR pattern pinned to the
@@ -96,9 +126,13 @@ def linear(p, x, pack=None, backend=None):
         weight and the tile-skipping ``masked`` kernel executes.
     """
     if pack is not None:
-        from repro.kernels.exec_plan import RowPackPlan, plan_matmul
+        from repro.kernels.exec_plan import (RowPackPlan, ShardedPlan,
+                                             plan_matmul)
         if isinstance(pack, RowPackPlan):
-            return plan_matmul(x, p["w"], pack)
+            y = plan_matmul(x, p["w"], pack)
+            if isinstance(pack, ShardedPlan) and pack.mesh is not None:
+                y = tp_constrain(y, pack)
+            return y
         from repro.kernels.autotune import BackendChoice, MaskedPack
         if isinstance(pack, BackendChoice):
             backend, pack = pack.backend, pack.pack

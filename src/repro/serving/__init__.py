@@ -13,9 +13,10 @@
 """
 from repro.serving.engine import EngineRequest, EngineStats, ServingEngine
 from repro.serving.export import (export_bert_sparse, export_lm_sparse,
-                                  export_params, pack_single, pack_stacked)
+                                  export_params, pack_single, pack_stacked,
+                                  shard_axis_for)
 from repro.serving.servable import (SERVABLE_STEP, Servable, load_servable,
-                                    prepare_servable)
+                                    make_serving_mesh, prepare_servable)
 from repro.serving.spec import DEFAULT_TARGETS, ServingSpec
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -156,6 +156,7 @@ class ServingEngine:
         self.top_k = int(top_k)
         self._key = jax.random.PRNGKey(int(seed))
         self.stats = EngineStats()
+        self.mesh = servable.mesh               # None = single-device path
 
         self._sub_template = None
         if self.cfg.family == "audio":
@@ -177,6 +178,18 @@ class ServingEngine:
             self._sub_template = model_api.init_cache(
                 servable.params, self.cfg, 1, self.cache_len)
 
+        if self.mesh is not None:
+            # mesh-first cache: slots over "data", heads/state over "model".
+            # Lifecycle ops below are pinned to these shardings, so alloc/
+            # free/reset/write never regather the cache (tested:
+            # tests/test_sharded_serving.py)
+            self.cache = model_api.shard_cache(self.cache, self.cfg,
+                                               self.mesh)
+            if self._sub_template is not None:
+                from repro.launch.sharding import replicated
+                self._sub_template = jax.device_put(
+                    self._sub_template, replicated(self.mesh))
+
         self._tokens = np.zeros((self.max_slots, 1), np.int32)
         self._pos = np.full((self.max_slots,), -1, np.int32)
         self._remaining = np.zeros((self.max_slots,), np.int32)
@@ -197,10 +210,18 @@ class ServingEngine:
         # the engine's whole lifetime (and the next engine's). The decode
         # cache argument is donated, so the hot loop never copies the slot
         # caches.
-        self._decode = servable._engine_decode_fn()
-        self._decode_many = servable._engine_decode_many_fn()
+        # under a mesh, every jit the cache flows through pins its output
+        # to the engine cache's placement: decode windows, insertion and
+        # retirement then keep ONE canonical sharded layout end to end --
+        # donation stays usable (no per-step copies) and the cache never
+        # gathers to one device (let alone host) across a request's
+        # lifetime. engine_fns shares executables across engines in both
+        # modes (per cache-sharding tree under a mesh).
+        out_sh = None if self.mesh is None else \
+            jax.tree_util.tree_map(lambda x: x.sharding, self.cache)
+        (self._decode, self._decode_many, self._write_slot,
+         self._free_slot) = servable.engine_fns(out_sh)
         self._prefill = servable._engine_prefill_fn()
-        self._write_slot, self._free_slot = servable._engine_slot_fns()
 
     # -- submission -------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,

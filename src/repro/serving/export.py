@@ -40,12 +40,22 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.pattern_reuse import PatternRegistry
 from repro.kernels.bsr_matmul import KernelBSR, pack_bsr
-from repro.kernels.exec_plan import pack_plan_data, plan_for_pack
+from repro.kernels.exec_plan import (build_sharded_plan, pack_plan_data,
+                                     plan_for_pack, shard_divisible)
 
 # projection names exported per mixer/ffn kind
 _ATTN_PROJS = ("wq", "wk", "wv", "wo")
 _QKV = ("wq", "wk", "wv")
 _FFN_PROJS = ("wi", "wg", "wo")
+
+
+def shard_axis_for(proj: str) -> str:
+    """Tensor-parallel axis per projection, mirroring the dense rules of
+    ``launch/sharding.spec_for_param``: ``wo`` (attention out-proj AND MLP
+    down-proj) is row-parallel -- sharded by input block cols, partials
+    psum'd -- everything else (wq/wk/wv/wqkv/wi/wg) is column-parallel,
+    sharded by output block rows."""
+    return "in" if proj == "wo" else "out"
 
 # families whose param tree follows the lm.py prefix/blocks/suffix layout
 LM_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm")
@@ -89,12 +99,17 @@ def pack_single(w: np.ndarray, tile) -> Tuple[KernelBSR, jax.Array]:
 # --------------------------------------------------------------------------
 
 def _realize_backend(pack, data, backend: str,
-                     registry: Optional[PatternRegistry]):
+                     registry: Optional[PatternRegistry],
+                     shard=None, shard_stats=None):
     """(pattern, packed values, chosen backend) -> (static pack stored in
     ``packs``, values stored in the params tree). ``data`` is
     ``(nnzt, bn, bk)`` or layer-stacked ``(L, nnzt, bn, bk)``.
 
       * ``plan``    -> RowPackPlan + row-grouped values (the default path);
+        with ``shard = (n_shards, axis)`` and a divisible pattern, a
+        :class:`~repro.kernels.exec_plan.ShardedPlan` whose vrow axis is
+        mesh-"model"-shardable (indivisible patterns fall back to the
+        replicated plan, the ``spec_for_param`` divisibility rule);
       * ``bsr``     -> bare KernelBSR (runtime ``default_backend()``);
       * ``gather``/``rowpack``/``pallas`` -> the pattern pinned to that
         ``bsr_linear`` backend (``autotune.BackendChoice``);
@@ -105,7 +120,16 @@ def _realize_backend(pack, data, backend: str,
         does not pay here).
     """
     if backend == "plan":
-        plan = plan_for_pack(pack, registry)
+        if shard is not None and shard[0] > 1 \
+                and shard_divisible(pack, shard[0], shard[1]):
+            # built (not combined-cached) per call so identical layers
+            # still count per-shard registry hits; plans stay shared
+            # downstream via fingerprint hash/eq
+            plan = build_sharded_plan(pack, shard[0], shard[1],
+                                      registry=registry,
+                                      shard_stats=shard_stats)
+        else:
+            plan = plan_for_pack(pack, registry)
         return plan, pack_plan_data(plan, data)
     if backend == "bsr":
         return pack, data
@@ -125,32 +149,56 @@ def _realize_backend(pack, data, backend: str,
     raise ValueError(f"unknown serving backend {backend!r}")
 
 
+def _effective_shard(pack, shard):
+    """The shard config this pack will ACTUALLY serve under: None unless a
+    mesh is active and the pattern divides -- keeps the autotune cache key
+    (and candidate restriction) honest for replicated-fallback packs, and
+    keeps single-argument ``backend_chooser`` callbacks working unsharded."""
+    if shard is not None and shard[0] > 1 and shard_divisible(pack, *shard):
+        return shard
+    return None
+
+
+def _choose(chooser, pack, shard):
+    """Invoke a backend chooser, passing ``shard=`` only when this pack
+    really shards (pre-mesh choosers take a single argument)."""
+    return chooser(pack) if shard is None else chooser(pack, shard=shard)
+
+
 def _serving_pack(w: np.ndarray, tile, use_plans: bool,
-                  registry: Optional[PatternRegistry], chooser=None):
+                  registry: Optional[PatternRegistry], chooser=None,
+                  shard=None, shard_stats=None):
     """(N, K) weight -> (static pattern, values, autotune meta). With plans,
     the values are row-grouped once here -- the scatter the seed backend
     paid per call. A ``chooser`` (kernels/autotune.py) overrides the
     plan/bsr default with the measured winner for this pattern."""
     pack = pack_bsr(w, tile)
+    shard = _effective_shard(pack, shard)
     if chooser is None:
         pk, vals = _realize_backend(pack, pack.data,
-                                    "plan" if use_plans else "bsr", registry)
+                                    "plan" if use_plans else "bsr", registry,
+                                    shard, shard_stats)
         return pk, vals, None
-    choice = chooser(pack)
-    pk, vals = _realize_backend(pack, pack.data, choice.backend, registry)
+    choice = _choose(chooser, pack, shard)
+    pk, vals = _realize_backend(pack, pack.data, choice.backend, registry,
+                                shard, shard_stats)
     return pk, vals, {"backend": choice.backend,
                       "cache_hit": choice.cache_hit, "mode": choice.mode}
 
 
 def _serving_pack_stacked(w_stacked: np.ndarray, tile, use_plans: bool,
-                          registry: Optional[PatternRegistry], chooser=None):
+                          registry: Optional[PatternRegistry], chooser=None,
+                          shard=None, shard_stats=None):
     pack, data, stats = pack_stacked(w_stacked, tile)
+    shard = _effective_shard(pack, shard)
     if chooser is None:
         pk, vals = _realize_backend(pack, data,
-                                    "plan" if use_plans else "bsr", registry)
+                                    "plan" if use_plans else "bsr", registry,
+                                    shard, shard_stats)
         return pk, vals, stats
-    choice = chooser(pack)
-    pk, vals = _realize_backend(pack, data, choice.backend, registry)
+    choice = _choose(chooser, pack, shard)
+    pk, vals = _realize_backend(pack, data, choice.backend, registry,
+                                shard, shard_stats)
     stats = dict(stats)
     stats["autotune"] = {"backend": choice.backend,
                          "cache_hit": choice.cache_hit, "mode": choice.mode}
@@ -198,7 +246,7 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
                      fuse_qkv: bool = True, use_plans: bool = True,
                      include_ffn: bool = True,
                      registry: Optional[PatternRegistry] = None,
-                     backend_chooser=None):
+                     backend_chooser=None, n_shards: int = 1):
     """Replace attention (and pruned FFN) projections of an LM param tree
     with packed values.
 
@@ -220,22 +268,31 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
     overrides the representation per pattern with the measured winner; a
     ``dense`` verdict keeps the original weight (no pack) and is recorded
     in ``stats`` like every other choice.
+
+    ``n_shards > 1`` (spec ``mesh_shape``) exports every plan pack in
+    tensor-parallel sharded form (:func:`shard_axis_for` per projection;
+    indivisible patterns fall back to replicated) and records per-shard
+    registry accounting under ``stats['__sharding__']``.
     """
     packs: Dict[str, object] = {}
     stats: Dict[str, Dict] = {}
+    shard_stats: Dict[int, Dict] = {}
     new = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy-ish
 
-    def _export_one(w, scope, stacked):
+    def _export_one(w, scope, stacked, proj):
         """Pack one weight (single or layer-stacked), record its stats
         under ``scope``, and register the pack. Returns the serving values,
         or None when the pattern serves dense (autotune verdict) -- the
         caller then keeps the original weight."""
+        shard = (n_shards, shard_axis_for(proj)) if n_shards > 1 else None
         if stacked:
             pk, data, st = _serving_pack_stacked(
-                w, tile, use_plans, registry, backend_chooser)
+                w, tile, use_plans, registry, backend_chooser,
+                shard, shard_stats)
         else:
             pk, data, meta = _serving_pack(
-                w, tile, use_plans, registry, backend_chooser)
+                w, tile, use_plans, registry, backend_chooser,
+                shard, shard_stats)
             st = {"union_nnzt": _pack_nnzt(pk)}
             if meta:
                 st["autotune"] = meta
@@ -254,7 +311,7 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
             w_qkv = _fused_qkv_weight(ap, tile, stacked)
             if w_qkv is not None:
                 dtype = ap["wq"]["w"].dtype
-                data = _export_one(w_qkv, f"{scope}/wqkv", stacked)
+                data = _export_one(w_qkv, f"{scope}/wqkv", stacked, "wqkv")
                 if data is not None:
                     ap["wqkv"] = {"w": data.astype(dtype)}
                     for proj in _QKV:
@@ -267,7 +324,7 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
             w = _get_w(ap[proj])
             if not _divisible(w.shape, tile):
                 continue
-            data = _export_one(w, f"{scope}/{proj}", stacked)
+            data = _export_one(w, f"{scope}/{proj}", stacked, proj)
             if data is not None:
                 ap[proj] = {"w": data.astype(
                     layer_params["attn"][proj]["w"].dtype)}
@@ -299,7 +356,7 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
             w = _get_w(fp[proj])
             if not _divisible(w.shape, tile) or not _is_sparse(w, stacked):
                 continue
-            data = _export_one(w, f"{scope}/{proj}", stacked)
+            data = _export_one(w, f"{scope}/{proj}", stacked, proj)
             if data is not None:
                 fp[proj] = {"w": data.astype(
                     layer_params["ffn"][proj]["w"].dtype)}
@@ -319,6 +376,9 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
                           for i, lp in enumerate(params["blocks"]))
     new["suffix"] = tuple(export_layer(lp, f"suffix/{i}", False)
                           for i, lp in enumerate(params["suffix"]))
+    if n_shards > 1:
+        stats["__sharding__"] = {"n_shards": n_shards,
+                                 "per_shard": shard_stats}
     return new, packs, stats
 
 
@@ -328,7 +388,7 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
                        use_plans: bool = True,
                        registry: Optional[PatternRegistry] = None,
                        stats_out: Optional[Dict] = None,
-                       backend_chooser=None):
+                       backend_chooser=None, n_shards: int = 1):
     """BSR export for the (unrolled) BERT encoder.
 
     Default: one pattern per layer and projection group (fused QKV). With
@@ -346,6 +406,7 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
     layers = params["layers"]
     n_layers = len(layers)
     packs: Dict[str, object] = {}
+    shard_stats: Dict[int, Dict] = {}
     attn_new = [dict(lp["attn"]) for lp in layers]
     ffn_new = [dict(lp["ffn"]) for lp in layers]
 
@@ -368,23 +429,32 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
     for group, name, getw, src in specs:
         tgt = attn_new if group == "attn" else ffn_new
         dtypes = [lp[group][src]["w"].dtype for lp in layers]
+        shard = (n_shards, shard_axis_for(name)) if n_shards > 1 else None
         if cross_layer_union:
             stacked = np.stack([getw(lp) for lp in layers])
             pack, data, union_st = pack_stacked(stacked, tile)
+            shard_eff = _effective_shard(pack, shard)
             if backend_chooser is not None:
-                choice = backend_chooser(pack)
+                choice = _choose(backend_chooser, pack, shard_eff)
                 union_st = dict(union_st)
                 union_st["autotune"] = {"backend": choice.backend,
                                         "cache_hit": choice.cache_hit,
                                         "mode": choice.mode}
                 pk, vals = _realize_backend(pack, data, choice.backend,
-                                            registry)
+                                            registry, shard_eff, shard_stats)
                 shared = [pk] * n_layers
             elif use_plans:
-                # one lookup per layer: the registry's hit counter then shows
-                # the (L-1)-fold reuse of the single unioned specialization
-                shared = [plan_for_pack(pack, registry)
-                          for _ in range(n_layers)]
+                # one lookup per layer: the registry's hit counters (global
+                # AND per-shard) then show the (L-1)-fold reuse of the
+                # single unioned specialization
+                if shard_eff is not None:
+                    shared = [build_sharded_plan(pack, *shard_eff,
+                                                 registry=registry,
+                                                 shard_stats=shard_stats)
+                              for _ in range(n_layers)]
+                else:
+                    shared = [plan_for_pack(pack, registry)
+                              for _ in range(n_layers)]
                 vals = pack_plan_data(shared[0], data)
             else:
                 shared = [pack] * n_layers
@@ -399,7 +469,8 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
         else:
             for i, lp in enumerate(layers):
                 pk, vals, meta = _serving_pack(getw(lp), tile, use_plans,
-                                               registry, backend_chooser)
+                                               registry, backend_chooser,
+                                               shard, shard_stats)
                 if stats_out is not None and meta:
                     stats_out[f"layers/{i}/{group}/{name}"] = {
                         "union_nnzt": _pack_nnzt(pk), "autotune": meta}
@@ -423,6 +494,9 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
         if include_ffn:
             nlp["ffn"] = ffn_new[i]
         new_layers.append(nlp)
+    if n_shards > 1 and stats_out is not None:
+        stats_out["__sharding__"] = {"n_shards": n_shards,
+                                     "per_shard": shard_stats}
     new = dict(params)
     new["layers"] = tuple(new_layers)
     return new, packs
@@ -436,7 +510,7 @@ def export_params(params, cfg: ModelConfig, tile=(128, 128), *,
                   fuse_qkv: bool = True, cross_layer_union: bool = True,
                   include_ffn: bool = True, use_plans: bool = True,
                   registry: Optional[PatternRegistry] = None,
-                  backend_chooser=None):
+                  backend_chooser=None, n_shards: int = 1):
     """Export any model family's param tree to serving form.
 
     Returns ``(sparse_params, packs, stats)``. Dispatch mirrors
@@ -449,6 +523,9 @@ def export_params(params, cfg: ModelConfig, tile=(128, 128), *,
         union-packed; ``cross_layer_union`` is implicit);
       * ``audio``          -> no export (the enc-dec forward takes no
         ``packs``); the model serves dense and ``stats`` records the gap.
+
+    ``n_shards`` (the mesh "model" axis size) selects tensor-parallel
+    sharded export; see :func:`export_lm_sparse`.
     """
     if cfg.family == "bert":
         stats: Dict[str, Dict] = {}
@@ -456,13 +533,14 @@ def export_params(params, cfg: ModelConfig, tile=(128, 128), *,
             params, cfg, tile=tile, include_ffn=include_ffn,
             fuse_qkv=fuse_qkv, cross_layer_union=cross_layer_union,
             use_plans=use_plans, registry=registry, stats_out=stats,
-            backend_chooser=backend_chooser)
+            backend_chooser=backend_chooser, n_shards=n_shards)
         return sparse_params, packs, stats
     if cfg.family in LM_FAMILIES:
         return export_lm_sparse(params, cfg, tile=tile, fuse_qkv=fuse_qkv,
                                 use_plans=use_plans, include_ffn=include_ffn,
                                 registry=registry,
-                                backend_chooser=backend_chooser)
+                                backend_chooser=backend_chooser,
+                                n_shards=n_shards)
     if cfg.family == "audio":
         return params, {}, {"__unsupported__": {
             "family": cfg.family,

@@ -27,7 +27,8 @@ from repro.core.pattern_reuse import PatternRegistry
 from repro.core.sparsity import SparsityConfig
 from repro.kernels.autotune import BackendChoice, MaskedPack
 from repro.kernels.bsr_matmul import KernelBSR
-from repro.kernels.exec_plan import (RowPackPlan, kernel_pattern_fingerprint)
+from repro.kernels.exec_plan import (RowPackPlan, ShardedPlan,
+                                     kernel_pattern_fingerprint)
 
 _PLAN_FIELDS = ("col_idx", "slot_mask", "row_of_vrow", "vrow", "slot")
 _BSR_FIELDS = ("row_id", "col_id", "t_perm")
@@ -95,7 +96,25 @@ def packs_to_arrays(packs: Dict[str, object]) -> Tuple[dict, dict]:
             idx = len(metas)
             index_of[fp] = idx
             arrays[f"p{idx}_fingerprint"] = np.frombuffer(fp, np.uint8)
-            if isinstance(pk, RowPackPlan):
+            if isinstance(pk, ShardedPlan):
+                # shard-partitioned plan: plan fields + shard layout meta +
+                # per-shard sub-pattern fingerprints (the registry/autotune
+                # keys survive the round-trip; the mesh itself does NOT --
+                # load_servable rebuilds it from the spec)
+                metas.append({"kind": "sharded_plan",
+                              "shape": list(pk.shape),
+                              "tile": list(pk.tile), "nnzt": pk.nnzt,
+                              "real_nnzt": pk.real_nnzt,
+                              "n_shards": pk.n_shards,
+                              "shard_axis": pk.shard_axis})
+                for f in _PLAN_FIELDS:
+                    arrays[f"p{idx}_{f}"] = np.asarray(getattr(pk, f))
+                sfps = list(pk.shard_fingerprints)
+                arrays[f"p{idx}_shard_fp_lens"] = np.array(
+                    [len(s) for s in sfps], np.int64)
+                arrays[f"p{idx}_shard_fps"] = np.frombuffer(
+                    b"".join(sfps), np.uint8)
+            elif isinstance(pk, RowPackPlan):
                 metas.append({"kind": "plan", "shape": list(pk.shape),
                               "tile": list(pk.tile), "nnzt": pk.nnzt,
                               "real_nnzt": pk.real_nnzt})
@@ -135,7 +154,31 @@ def packs_from_arrays(meta: dict, arrays, registry: PatternRegistry = None
     built = []
     for idx, m in enumerate(meta["patterns"]):
         fp = bytes(np.asarray(arrays[f"p{idx}_fingerprint"], np.uint8))
-        if m["kind"] == "plan":
+        if m["kind"] == "sharded_plan":
+            def build_sharded(idx=idx, m=m, fp=fp):
+                lens = np.asarray(arrays[f"p{idx}_shard_fp_lens"], np.int64)
+                blob = bytes(np.asarray(arrays[f"p{idx}_shard_fps"],
+                                        np.uint8))
+                offs = np.concatenate([[0], np.cumsum(lens)])
+                sfps = tuple(blob[offs[i]: offs[i + 1]]
+                             for i in range(len(lens)))
+                return ShardedPlan(
+                    col_idx=np.asarray(arrays[f"p{idx}_col_idx"], np.int32),
+                    slot_mask=np.asarray(arrays[f"p{idx}_slot_mask"], bool),
+                    row_of_vrow=np.asarray(arrays[f"p{idx}_row_of_vrow"],
+                                           np.int32),
+                    vrow=np.asarray(arrays[f"p{idx}_vrow"], np.int32),
+                    slot=np.asarray(arrays[f"p{idx}_slot"], np.int32),
+                    shape=tuple(m["shape"]), tile=tuple(m["tile"]),
+                    nnzt=int(m["nnzt"]), real_nnzt=int(m["real_nnzt"]),
+                    fingerprint=fp, n_shards=int(m["n_shards"]),
+                    shard_axis=m["shard_axis"], shard_fingerprints=sfps)
+            if registry is not None:
+                built.append(registry.cached(("sharded_plan_codec", fp),
+                                             build_sharded))
+            else:
+                built.append(build_sharded())
+        elif m["kind"] == "plan":
             def build(idx=idx, m=m, fp=fp):
                 return RowPackPlan(
                     col_idx=np.asarray(arrays[f"p{idx}_col_idx"], np.int32),

@@ -19,7 +19,7 @@ process.
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.models.sampling import sample_tokens
 from repro.core.pattern_reuse import PatternRegistry
 from repro.core.pruner import _path_name, oneshot_prune, tied_prune
-from repro.kernels.exec_plan import RowPackPlan
+from repro.kernels.exec_plan import RowPackPlan, ShardedPlan
 from repro.models import api as model_api
 from repro.serving.export import export_params
 from repro.serving.serialize import (build_like, config_from_dict,
@@ -60,6 +60,69 @@ def _cast_packed(params, packs, jdtype):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+# --------------------------------------------------------------------------
+# mesh placement (spec.mesh_shape: the tensor/data-parallel serving path)
+# --------------------------------------------------------------------------
+
+def make_serving_mesh(spec) -> "jax.sharding.Mesh":
+    """Build the ``("data", "model")`` mesh a spec asks for, with an
+    actionable error when the process doesn't expose enough devices
+    (host-platform runs need ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` set before jax initializes)."""
+    from repro.launch.mesh import make_mesh
+    need = spec.data_shards * spec.model_shards
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"spec.mesh_shape={tuple(spec.mesh_shape)} needs {need} devices "
+            f"but only {have} are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before importing"
+            f" jax")
+    return make_mesh(tuple(spec.mesh_shape), ("data", "model"))
+
+
+def attach_mesh(packs, mesh):
+    """Attach ``mesh`` to every ShardedPlan pack (static metadata consumed
+    by the models/common.linear sharding hook). Identical patterns keep
+    sharing one underlying layout -- with_mesh is a shallow replace."""
+    out, seen = {}, {}
+    for key, pk in packs.items():
+        if isinstance(pk, ShardedPlan) and pk.mesh is not mesh:
+            if id(pk) not in seen:
+                seen[id(pk)] = pk.with_mesh(mesh)
+            pk = seen[id(pk)]
+        out[key] = pk
+    return out
+
+
+def serving_param_shardings(params, packs, mesh):
+    """NamedSharding tree for a serving param tree:
+
+      * ShardedPlan-packed values ``(..., V, P, bn, bk)`` shard their vrow
+        axis over "model" -- shard ``s`` of the plan lands on device column
+        ``s``, per-device pack bytes drop ~n_shards-fold;
+      * unsharded pack values replicate (their pattern did not divide);
+      * every dense leaf follows ``launch/sharding.spec_for_param`` in
+        inference mode (TP-only: no per-layer weight all-gathers).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.sharding import spec_for_param
+    packed = {key + "/w": pk for key, pk in packs.items()}
+
+    def one(path, leaf):
+        name = _norm_path(_path_name(path))
+        pk = packed.get(name)
+        if isinstance(pk, ShardedPlan):
+            spec = [None] * leaf.ndim
+            spec[leaf.ndim - 4] = "model"      # the vrow axis
+            return NamedSharding(mesh, P(*spec))
+        if pk is not None:                      # packed but not shardable
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, spec_for_param(name, leaf.shape, mesh, mode="inference"))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
 class Servable:
     """Handle over (packed params, static patterns, config, spec).
 
@@ -70,12 +133,13 @@ class Servable:
     def __init__(self, params, cfg: ModelConfig, spec: ServingSpec,
                  packs: Dict[str, object], registry: PatternRegistry,
                  export_stats: Optional[Dict] = None,
-                 stats_at_save: Optional[Dict] = None):
+                 stats_at_save: Optional[Dict] = None, mesh=None):
         self.params = params
         self.cfg = cfg
         self.spec = spec
         self.packs = packs
         self.registry = registry
+        self.mesh = mesh                 # jax.sharding.Mesh | None
         self.export_stats = export_stats or {}
         self.stats_at_save = stats_at_save
         self._fwd_fn = None
@@ -86,6 +150,10 @@ class Servable:
         self._engine_prefill = None
         self._engine_write = None
         self._engine_free = None
+        # mesh engines: (decode, decode_many, write, free) jits cached per
+        # cache-sharding tree, so engines over the same placement share
+        # executables exactly like the unsharded path
+        self._mesh_engine_fns: Dict[Any, tuple] = {}
 
     # -- serving ----------------------------------------------------------
     def _as_batch(self, batch) -> Dict[str, Any]:
@@ -107,8 +175,13 @@ class Servable:
         return logits
 
     def init_cache(self, batch_size: int, cache_len: int, frames=None):
-        return model_api.init_cache(self.params, self.cfg, batch_size,
-                                    cache_len, frames=frames)
+        cache = model_api.init_cache(self.params, self.cfg, batch_size,
+                                     cache_len, frames=frames)
+        if self.mesh is not None:
+            # slots over "data", heads/state over "model"; lifecycle ops
+            # stay sharding-preserving device scatters from here on
+            cache = model_api.shard_cache(cache, self.cfg, self.mesh)
+        return cache
 
     def decode_step(self, cache, token, pos):
         """(cache, token (B,1), pos) -> (logits, new_cache); encoder-only
@@ -164,7 +237,7 @@ class Servable:
         return ServingEngine(self, max_slots=max_slots, cache_len=cache_len,
                              **kw)
 
-    def _engine_decode_fn(self):
+    def _engine_decode_fn(self, cache_shardings=None):
         """Jitted batched decode shared by every engine of this servable
         (jit retraces per (max_slots, cache) shape and per static
         (temperature, top_k); executables persist across engine
@@ -174,8 +247,13 @@ class Servable:
         the hot loop only moves B int32s to host; the full logits land on
         host only when an engine collects them. The cache argument is
         DONATED -- engine hot-loop use only; :meth:`decode_step` is the
-        non-donating API."""
-        if self._engine_decode is None:
+        non-donating API.
+
+        ``cache_shardings`` (mesh engines) pins the output cache to the
+        engine cache's placement, so the donated buffers stay reusable
+        step over step instead of XLA re-deciding (and copying) per
+        leaf; cached per sharding tree by :meth:`engine_fns`."""
+        if self._engine_decode is None or cache_shardings is not None:
             cfg, packs = self.cfg, self.packs
 
             def decode(p, c, t, s, key, temperature, top_k):
@@ -185,18 +263,24 @@ class Servable:
                                     temperature=temperature, top_k=top_k)
                 return nxt, logits, c
 
-            self._engine_decode = jax.jit(decode, donate_argnums=(1,),
-                                          static_argnums=(5, 6))
+            kw = {} if cache_shardings is None else \
+                {"out_shardings": (None, None, cache_shardings)}
+            fn = jax.jit(decode, donate_argnums=(1,),
+                         static_argnums=(5, 6), **kw)
+            if cache_shardings is not None:
+                return fn
+            self._engine_decode = fn
         return self._engine_decode
 
-    def _engine_decode_many_fn(self):
+    def _engine_decode_many_fn(self, cache_shardings=None):
         """Jitted fused K-step decode for the engine hot loop: K decode
         steps + sampling + per-slot EOS/budget masking inside one
         ``lax.scan`` (``models.api.decode_many``), cache DONATED. One
         executable per static (K, temperature, top_k) -- the engine bounds
         K by ``sync_every``, so the trace count stays small and every
-        window after the first reuses a warm executable."""
-        if self._engine_decode_many is None:
+        window after the first reuses a warm executable.
+        ``cache_shardings`` as in :meth:`_engine_decode_fn`."""
+        if self._engine_decode_many is None or cache_shardings is not None:
             cfg, packs = self.cfg, self.packs
 
             def fused(p, c, t, s, rem, eos, key, n_steps, temperature,
@@ -206,8 +290,17 @@ class Servable:
                     eos_id=eos, key=key, temperature=temperature,
                     top_k=top_k)
 
-            self._engine_decode_many = jax.jit(
-                fused, donate_argnums=(1,), static_argnums=(7, 8, 9))
+            kw = {}
+            if cache_shardings is not None:
+                kw["out_shardings"] = (
+                    None, None, {"token": None, "pos": None,
+                                 "remaining": None,
+                                 "cache": cache_shardings})
+            fn = jax.jit(fused, donate_argnums=(1,),
+                         static_argnums=(7, 8, 9), **kw)
+            if cache_shardings is not None:
+                return fn
+            self._engine_decode_many = fn
         return self._engine_decode_many
 
     def _engine_prefill_fn(self):
@@ -241,19 +334,50 @@ class Servable:
             self._engine_prefill = jax.jit(prefill)
         return self._engine_prefill
 
-    def _engine_slot_fns(self):
+    def engine_fns(self, cache_shardings=None):
+        """The engine's four cache-carrying jits ``(decode, decode_many,
+        write_slot, free_slot)``. Unsharded engines share the
+        Servable-cached executables; mesh engines share them per
+        cache-sharding tree (NamedSharding is hashable), so constructing
+        a second engine over the same placement retraces nothing."""
+        if cache_shardings is None:
+            return (self._engine_decode_fn(), self._engine_decode_many_fn(),
+                    *self._engine_slot_fns())
+        leaves, treedef = jax.tree_util.tree_flatten(cache_shardings)
+        key = (treedef, tuple(leaves))
+        if key not in self._mesh_engine_fns:
+            self._mesh_engine_fns[key] = (
+                self._engine_decode_fn(cache_shardings),
+                self._engine_decode_many_fn(cache_shardings),
+                *self._engine_slot_fns(cache_shardings))
+        return self._mesh_engine_fns[key]
+
+    def _engine_slot_fns(self, out_shardings=None):
         """Jitted ``(write_slot, free_slot)`` with the batched cache DONATED:
         slot insertion and retirement become in-place scatters instead of
         whole-cache copies (the slot index is traced, so one executable per
-        cache shape serves every slot)."""
+        cache shape serves every slot).
+
+        ``out_shardings`` (a NamedSharding tree matching the cache, mesh
+        engines only) pins the outputs to the engine cache's placement so
+        lifecycle ops never regather it; sharded pairs are cached per
+        sharding tree by :meth:`engine_fns`, the unsharded pair directly
+        on the Servable."""
+        cfg = self.cfg
+        kw = {} if out_shardings is None else \
+            {"out_shardings": out_shardings}
+
+        def build():
+            return (jax.jit(
+                        lambda c, i, sub: model_api.write_slot(c, cfg, i,
+                                                               sub),
+                        donate_argnums=(0,), **kw),
+                    jax.jit(lambda c, i: model_api.free_slot(c, cfg, i),
+                            donate_argnums=(0,), **kw))
+        if out_shardings is not None:
+            return build()
         if self._engine_write is None:
-            cfg = self.cfg
-            self._engine_write = jax.jit(
-                lambda c, i, sub: model_api.write_slot(c, cfg, i, sub),
-                donate_argnums=(0,))
-            self._engine_free = jax.jit(
-                lambda c, i: model_api.free_slot(c, cfg, i),
-                donate_argnums=(0,))
+            self._engine_write, self._engine_free = build()
         return self._engine_write, self._engine_free
 
     # -- instrumentation --------------------------------------------------
@@ -294,8 +418,58 @@ class Servable:
                                     if not a.get("cache_hit")),
                 "mode": next(iter(auto.values())).get("mode"),
             }
+        if self.mesh is not None or self.spec.mesh_shape is not None:
+            out["sharding"] = self._sharding_stats()
         if self.stats_at_save is not None:
             out["registry_at_save"] = self.stats_at_save.get("registry")
+        return out
+
+    def pack_bytes(self) -> Tuple[int, int]:
+        """(total, per-device) bytes of the packed projection values in the
+        params tree. Per-device accounting follows each leaf's placement
+        (``sharding.shard_shape``); unplaced trees count fully on one
+        device. Shared by ``stats()`` and benchmarks/serving_bench.py."""
+        targets = {key + "/w" for key in self.packs}
+        total = per_dev = 0
+
+        def visit(path, leaf):
+            nonlocal total, per_dev
+            if _norm_path(_path_name(path)) not in targets:
+                return leaf
+            nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            total += nbytes
+            shard_shape = (leaf.sharding.shard_shape(leaf.shape)
+                           if hasattr(leaf, "sharding") else leaf.shape)
+            per_dev += int(np.prod(shard_shape)) * leaf.dtype.itemsize
+            return leaf
+        jax.tree_util.tree_map_with_path(visit, self.params)
+        return total, per_dev
+
+    def _sharding_stats(self) -> Dict[str, Any]:
+        """Per-shard accounting of the mesh path: how the pack bytes split
+        across devices, which packs actually sharded, and the per-shard
+        registry hit/miss counts collected at export."""
+        total, per_dev = self.pack_bytes()
+        sharded = {k: p for k, p in self.packs.items()
+                   if isinstance(p, ShardedPlan)}
+        shard_meta = self.export_stats.get("__sharding__") or {}
+        out = {
+            "mesh_shape": (list(self.spec.mesh_shape)
+                           if self.spec.mesh_shape else None),
+            "partition": self.spec.partition,
+            "n_shards": self.spec.model_shards,
+            "sharded_packs": len(sharded),
+            "replicated_packs": len(self.packs) - len(sharded),
+            "pack_bytes_total": total,
+            "pack_bytes_per_device": per_dev,
+            "per_shard_registry": {
+                str(s): dict(v)
+                for s, v in (shard_meta.get("per_shard") or {}).items()},
+            "axes": {k: p.shard_axis for k, p in sharded.items()},
+        }
+        if sharded:
+            uniq = {p.fingerprint for p in sharded.values()}
+            out["unique_sharded_patterns"] = len(uniq)
         return out
 
     # -- persistence ------------------------------------------------------
@@ -329,6 +503,7 @@ def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
     """
     spec = spec or ServingSpec()
     registry = registry if registry is not None else PatternRegistry()
+    mesh = make_serving_mesh(spec) if spec.mesh_shape is not None else None
 
     if spec.prune == "oneshot":
         pruned, _ = oneshot_prune(params, spec.sparsity_config())
@@ -338,25 +513,40 @@ def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
         pruned = params
 
     if spec.backend == "dense":     # negative control: no BSR support
-        return Servable(pruned, cfg, spec, {}, registry, export_stats={})
+        if mesh is not None:
+            pruned = jax.device_put(
+                pruned, serving_param_shardings(pruned, {}, mesh))
+        return Servable(pruned, cfg, spec, {}, registry, export_stats={},
+                        mesh=mesh)
 
     chooser = None
     if spec.backend == "auto":
         from repro.kernels.autotune import choose_backend
 
-        def chooser(pack):
-            return choose_backend(pack, m=spec.autotune_m)
+        def chooser(pack, shard=None):
+            # sharded serving has exactly two layouts with a mesh story
+            # (ShardedPlan and dense-via-GSPMD); the winner is still keyed
+            # per (pattern, shard, device count) on disk
+            cands = ("dense", "plan") if shard and shard[0] > 1 else None
+            return choose_backend(pack, m=spec.autotune_m,
+                                  candidates=cands, shard=shard)
 
     sparse_params, packs, stats = export_params(
         pruned, cfg, tile=spec.tile, fuse_qkv=spec.fuse_qkv,
         cross_layer_union=spec.cross_layer_union,
         include_ffn=spec.include_ffn, use_plans=spec.use_plans,
-        registry=registry, backend_chooser=chooser)
+        registry=registry, backend_chooser=chooser,
+        n_shards=spec.model_shards)
     if spec.dtype is not None and packs:
         jdtype = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
         sparse_params = _cast_packed(sparse_params, packs, jdtype)
+    if mesh is not None:
+        packs = attach_mesh(packs, mesh)
+        sparse_params = jax.device_put(
+            sparse_params, serving_param_shardings(sparse_params, packs,
+                                                   mesh))
     return Servable(sparse_params, cfg, spec, packs, registry,
-                    export_stats=stats)
+                    export_stats=stats, mesh=mesh)
 
 
 def load_servable(path: str, *,
@@ -375,6 +565,15 @@ def load_servable(path: str, *,
     registry = registry if registry is not None else PatternRegistry()
     with np.load(os.path.join(step_dir, _PACKS_FILE)) as npz:
         packs = packs_from_arrays(meta["packs"], npz, registry)
+    mesh = None
+    if spec.mesh_shape is not None:
+        # the artifact stores shard-partitioned packs; re-placement (and
+        # the mesh the linear hook pins shardings to) is rebuilt per
+        # process from the spec
+        mesh = make_serving_mesh(spec)
+        packs = attach_mesh(packs, mesh)
+        params = jax.device_put(
+            params, serving_param_shardings(params, packs, mesh))
     return Servable(params, cfg, spec, packs, registry,
                     export_stats=meta.get("export_stats"),
-                    stats_at_save=meta.get("stats"))
+                    stats_at_save=meta.get("stats"), mesh=mesh)

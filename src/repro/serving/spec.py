@@ -21,6 +21,11 @@ DEFAULT_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
 
 PRUNE_RECIPES = ("none", "oneshot", "tied")
 BACKENDS = ("plan", "bsr", "dense", "auto")
+PARTITIONS = ("tp", "dp", "tp+dp")
+#: pack-sharding mesh support: the plan path shards by construction
+#: (ShardedPlan), dense serves through GSPMD param sharding, and 'auto'
+#: chooses between exactly those two; 'bsr' has no sharded layout.
+SHARDED_BACKENDS = ("plan", "dense", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +71,19 @@ class ServingSpec:
         when it is actually block-sparse at the kernel tile (packing an
         unpruned projection is pure loss), so attention-only prune recipes
         keep serving their FFN dense.
+      mesh_shape: optional ``(data, model)`` device-mesh shape. When set,
+        the whole serving path becomes mesh-first: export shards every
+        plan pack by output block rows (column-parallel) / input block
+        cols (row-parallel wo) over the "model" axis, params and packs are
+        placed with NamedSharding at load, engine caches shard batch over
+        "data" and heads over "model", and ``stats()`` reports per-shard
+        accounting (docs/API.md §Sharded serving). The product must not
+        exceed ``jax.device_count()``.
+      partition: which parallelism the mesh expresses -- ``'tp'`` (model
+        axis only: tensor-parallel packs + caches), ``'dp'`` (data axis
+        only: request slots sharded over devices), ``'tp+dp'`` (both).
+        Must be consistent with ``mesh_shape`` (a 'tp' mesh needs
+        data == 1, etc.). Ignored when ``mesh_shape`` is None.
     """
 
     tile: Tuple[int, int] = (128, 128)
@@ -78,6 +96,8 @@ class ServingSpec:
     dtype: Optional[str] = None
     include_ffn: bool = True
     autotune_m: int = 256
+    mesh_shape: Optional[Tuple[int, int]] = None
+    partition: str = "tp"
 
     def __post_init__(self):
         if self.prune not in PRUNE_RECIPES:
@@ -86,10 +106,37 @@ class ServingSpec:
             raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
         if self.dtype not in (None, "float32", "bfloat16"):
             raise ValueError(f"unsupported dtype {self.dtype!r}")
+        if self.partition not in PARTITIONS:
+            raise ValueError(
+                f"partition={self.partition!r} not in {PARTITIONS}")
+        if self.mesh_shape is not None:
+            d, m = (int(v) for v in self.mesh_shape)
+            if d < 1 or m < 1:
+                raise ValueError(f"bad mesh_shape {self.mesh_shape}")
+            want = {"tp": m > 1 and d == 1, "dp": d > 1 and m == 1,
+                    "tp+dp": d > 1 and m > 1}[self.partition]
+            if (d * m > 1) and not want:
+                raise ValueError(
+                    f"partition={self.partition!r} inconsistent with "
+                    f"mesh_shape={self.mesh_shape} (data={d}, model={m})")
+            if m > 1 and self.backend not in SHARDED_BACKENDS:
+                raise ValueError(
+                    f"backend={self.backend!r} has no sharded pack layout; "
+                    f"tensor-parallel serving needs one of "
+                    f"{SHARDED_BACKENDS}")
 
     @property
     def use_plans(self) -> bool:
         return self.backend == "plan"
+
+    @property
+    def model_shards(self) -> int:
+        """Size of the mesh "model" axis (1 = unsharded packs)."""
+        return int(self.mesh_shape[1]) if self.mesh_shape is not None else 1
+
+    @property
+    def data_shards(self) -> int:
+        return int(self.mesh_shape[0]) if self.mesh_shape is not None else 1
 
     def sparsity_config(self) -> SparsityConfig:
         """The prune step's config (kernel tile == pruning block here; a
@@ -103,6 +150,8 @@ class ServingSpec:
         d = dataclasses.asdict(self)
         d["tile"] = list(self.tile)
         d["targets"] = list(self.targets)
+        if self.mesh_shape is not None:
+            d["mesh_shape"] = list(self.mesh_shape)
         return d
 
     @classmethod
@@ -110,4 +159,6 @@ class ServingSpec:
         d = dict(d)
         d["tile"] = tuple(d["tile"])
         d["targets"] = tuple(d["targets"])
+        if d.get("mesh_shape") is not None:
+            d["mesh_shape"] = tuple(d["mesh_shape"])
         return cls(**d)

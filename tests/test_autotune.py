@@ -71,6 +71,70 @@ def test_cache_key_separates_pattern_m_and_mode(tmp_path):
     assert cache.stats.hits == 0 and cache.stats.misses == 4
 
 
+def test_cache_key_includes_device_count_and_shard(tmp_path):
+    """The mesh-serving key fix: device count is always in the key, and a
+    sharded measurement (n_shards, axis) never answers for a different
+    shard config -- or for the unsharded pattern."""
+    cache = AutotuneCache(str(tmp_path / "at.json"))
+    pk = _pack(n=128, k=128)
+    base = choose_backend(pk, m=32, candidates=("dense", "plan"),
+                          cache=cache, stub=True)
+    assert f":d{jax.device_count()}" in base.key
+    variants = [choose_backend(pk, m=32, candidates=("dense", "plan"),
+                               cache=cache, stub=True, shard=s)
+                for s in [(4, "out"), (8, "out"), (4, "in")]]
+    keys = {base.key} | {v.key for v in variants}
+    assert len(keys) == 4
+    assert cache.stats.hits == 0 and cache.stats.misses == 4
+    # an indivisible shard config serves replicated -> keyed unsharded
+    odd = choose_backend(pk, m=32, candidates=("dense", "plan"),
+                         cache=cache, stub=True, shard=(3, "out"))
+    assert odd.key == base.key and odd.cache_hit
+
+
+def test_single_argument_chooser_still_works_unsharded(monkeypatch):
+    """Pre-mesh contract: a backend_chooser taking only (pack) keeps
+    working for unsharded exports -- shard= is passed only to choosers of
+    packs that actually shard."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_STUB", "1")
+    from repro.serving.export import export_params
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    calls = []
+
+    def chooser(pack):                      # no shard kwarg
+        calls.append(pack.shape)
+        return choose_backend(pack, m=32, candidates=("dense", "plan"),
+                              stub=True)
+    _, packs, _ = export_params(params, cfg, tile=(16, 16),
+                                backend_chooser=chooser)
+    assert calls                            # chooser actually consulted
+
+
+def test_cache_v1_file_invalidates_without_crash(tmp_path):
+    """Migration contract: an old-format cache file is read as empty (its
+    winners were keyed without device/shard fields), the chooser re-tunes,
+    and the file is rewritten at the current version."""
+    import json
+    path = tmp_path / "at.json"
+    path.write_text(json.dumps(
+        {"version": 1, "entries": {"stalekey": {"backend": "gather"}}}))
+    cache = AutotuneCache(str(path))
+    pk = _pack()
+    c = choose_backend(pk, m=32, candidates=("dense", "plan"), cache=cache,
+                       stub=True)
+    assert not c.cache_hit                 # nothing answered from v1
+    doc = json.loads(path.read_text())
+    assert doc["version"] == autotune.CACHE_VERSION
+    assert c.key in doc["entries"] and "stalekey" not in doc["entries"]
+    # corrupt file: same contract, no crash
+    path.write_text("{not json")
+    cache2 = AutotuneCache(str(path))
+    c2 = choose_backend(pk, m=32, candidates=("dense", "plan"), cache=cache2,
+                        stub=True)
+    assert not c2.cache_hit
+
+
 def test_stub_mode_is_deterministic(tmp_path):
     pk = _pack()
     costs1 = stub_costs(pk, 128, autotune.CANDIDATES)
