@@ -20,7 +20,13 @@ Two sections are produced:
     busy for a fraction of it -- host dispatch, the overhead regime the
     CPU sparse-serving literature says to engineer away (arXiv:2306.16601).
 
-A third section, "sharded", sweeps the mesh path (``--mesh 1,2,8``): the
+An "engine_chaos" section measures the request-lifecycle robustness
+layer's overhead: the same fused workload through a bare engine vs one
+with deadlines, a bounded queue, a watchdog and a chaos registry armed --
+lifecycle enforcement happens at window-sync points only, so the two arms
+should match to noise (docs/PERF.md §Engine robustness overhead).
+
+A "sharded" section sweeps the mesh path (``--mesh 1,2,8``): the
 same engine workload served tensor-parallel over a ``(1, S)`` device mesh
 (spec ``mesh_shape``), reporting tok/s plus per-device pack and cache
 bytes -- the partitioning evidence. Mesh sizes the process cannot host
@@ -79,32 +85,39 @@ def _bert_sized_lm(smoke: bool) -> ModelConfig:
 
 
 def _run_cell(servable, slots, *, prompt_len, max_new, cache_len, rng,
-              reps=2, sync_every=1):
+              reps=2, sync_every=1, engine_kw=None, submit_kw=None):
     """One (backend, concurrency, sync_every) cell: warm the jit caches
     with a single-request run at the same window length (so every fused-K
     executable the timed run needs is already traced), then time a
     2x-slots request burst ``reps`` times and keep the fastest (scheduler
     noise on the shared box is one-sided -- it only slows a run down -- so
     min-of-reps approximates the quiet-machine time, same discipline as
-    kernel_bench)."""
+    kernel_bench). ``engine_kw`` / ``submit_kw`` forward robustness knobs
+    (deadlines, bounded queue, watchdog, chaos) for the engine_chaos
+    section."""
+    engine_kw = engine_kw or {}
+    submit_kw = submit_kw or {}
     warm = servable.engine(max_slots=slots, cache_len=cache_len,
-                           sync_every=sync_every)
+                           sync_every=sync_every, **engine_kw)
     warm.submit(rng.randint(0, servable.cfg.vocab_size, (prompt_len,)),
-                max_new_tokens=max_new)
+                max_new_tokens=max_new, **submit_kw)
     warm.run()
+    warm.close()
 
     best = None
     for _ in range(reps):
         eng = servable.engine(max_slots=slots, cache_len=cache_len,
-                              sync_every=sync_every)
+                              sync_every=sync_every, **engine_kw)
         # same bucket as the warmup (prompt lengths vary under one power of
         # two) so the timed runs pay zero compilation
         lens = [max(2, prompt_len - (i % 4)) for i in range(2 * slots)]
         reqs = [eng.submit(rng.randint(0, servable.cfg.vocab_size, (L,)),
-                           max_new_tokens=max_new) for L in lens]
+                           max_new_tokens=max_new, **submit_kw)
+                for L in lens]
         t0 = time.perf_counter()
         eng.run()
         dt = time.perf_counter() - t0
+        eng.close()
         assert all(r.done for r in reqs)
         if best is None or dt < best[0]:
             best = (dt, eng, len(reqs))
@@ -354,6 +367,64 @@ def run_sharded(emit=print, smoke=False, write_json=True, mesh_sweep=None):
     return results
 
 
+def run_chaos(emit=print, smoke=False, write_json=True, arms=None):
+    """The lifecycle-overhead cell: the fused-engine workload served twice
+    over the SAME sparse servable -- once through a bare engine
+    ("baseline") and once with the whole robustness layer armed
+    ("lifecycle": bounded queue, per-request deadlines + priorities, a
+    watchdog thread, and an attached-but-unarmed chaos registry). The
+    deadline/cancel sweep and queue accounting run at window-sync points
+    only, so the two arms should measure the same tok/s to noise
+    (docs/PERF.md); bench_guard tracks the cell warn-only so a future PR
+    that accidentally puts lifecycle checks on the per-token path shows up
+    in the trajectory."""
+    from repro.runtime.chaos import ChaosInjector
+    cfg = _bert_sized_lm(smoke)
+    bp = _bench_params(smoke)
+    slots = 4 if smoke else SLOT_COUNTS[-1]
+    sync_every = 4
+    rng = np.random.RandomState(3)
+    arms = arms or _build_arms(cfg, emit)
+    servable = arms["sparse"]
+
+    cells = {
+        "baseline": ({}, {}),
+        "lifecycle": ({"max_queue": 4 * slots, "overflow": "reject",
+                       "watchdog_timeout_s": 60.0,
+                       "chaos": ChaosInjector()},
+                      {"deadline_s": 600.0, "priority": 1}),
+    }
+    results = {}
+    emit(f"{'arm':10s} {'tokens':>7s} {'sec':>8s} {'tok/s':>8s}")
+    for name, (engine_kw, submit_kw) in cells.items():
+        _, cell = _run_cell(servable, slots, prompt_len=bp["prompt_len"],
+                            max_new=bp["max_new"],
+                            cache_len=bp["cache_len"], rng=rng,
+                            reps=1 if smoke else 2, sync_every=sync_every,
+                            engine_kw=engine_kw, submit_kw=submit_kw)
+        results[name] = [cell]
+        emit(f"{name:10s} {cell['tokens']:7d} {cell['seconds']:8.3f} "
+             f"{cell['tokens_per_s']:8.1f}")
+    overhead = round(
+        results["baseline"][0]["tokens_per_s"] /
+        results["lifecycle"][0]["tokens_per_s"] - 1.0, 4)
+    emit(f"lifecycle overhead vs baseline: {overhead:+.2%} "
+         f"(sync-point enforcement: expected ~0)")
+
+    if write_json:
+        section = "engine_chaos_smoke" if smoke else "engine_chaos"
+        path = update_bench_json(section, {
+            "model": cfg.arch, "layers": cfg.n_layers,
+            "d_model": cfg.d_model, "sparsity": SPARSITY,
+            "tile": list(TILE), "slots": slots, "sync_every": sync_every,
+            "prompt_len": bp["prompt_len"], "max_new_tokens": bp["max_new"],
+            "results": results,
+            "lifecycle_overhead": overhead,
+        }, path=bench_path())
+        emit(f"wrote {section} section to {path}")
+    return results
+
+
 def main(argv):
     smoke = "--smoke" in argv
     write_json = "--no-json" not in argv
@@ -371,6 +442,7 @@ def main(argv):
         run(smoke=smoke, write_json=write_json, arms=arms)
     run_fused(smoke=smoke, write_json=write_json, sync_sweep=sweep,
               arms=arms)
+    run_chaos(smoke=smoke, write_json=write_json, arms=arms)
     run_sharded(smoke=smoke, write_json=write_json, mesh_sweep=mesh_sweep)
 
 

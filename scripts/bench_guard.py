@@ -20,7 +20,11 @@ import sys
 #: the sharded cells are new this PR and host-platform meshes are extra
 #: noisy (one socket pretending to be 8 devices) -- they stay warn-only
 #: like everything else here
+#: engine_chaos tracks the lifecycle-overhead cell (baseline vs
+#: robustness-armed engine over the same servable) -- warn-only, so a PR
+#: that moves lifecycle checks onto the per-token path surfaces here
 SECTIONS = ("engine_smoke", "engine", "engine_fused_smoke", "engine_fused",
+            "engine_chaos_smoke", "engine_chaos",
             "sharded_smoke", "sharded")
 
 

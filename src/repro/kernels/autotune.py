@@ -227,10 +227,22 @@ class CacheStats:
     misses: int = 0
 
 
+def _valid_entries(entries) -> Dict[str, dict]:
+    """Keep only well-formed (str key -> dict record) winner entries; a
+    hand-edited or bit-rotted file degrades to fewer cached winners, never
+    to a crash in ``get``'s consumers."""
+    if not isinstance(entries, dict):
+        return {}
+    return {k: v for k, v in entries.items()
+            if isinstance(k, str) and isinstance(v, dict)}
+
+
 class AutotuneCache:
     """Winner cache persisted as one JSON file (see module docstring for
     the key scheme / invalidation rules). Reads merge-on-write, so
-    concurrent processes at worst re-measure -- they never corrupt."""
+    concurrent processes at worst re-measure -- they never corrupt; an
+    unreadable/corrupt file reads as empty and is rewritten by the next
+    ``put`` (tests/test_autotune.py)."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -239,6 +251,11 @@ class AutotuneCache:
 
     def _load(self) -> Dict[str, dict]:
         if self._entries is None:
+            # any unreadable file -- missing, truncated mid-write, binary
+            # garbage, wrong JSON shape -- reads as an EMPTY cache (worst
+            # case: re-measure) and is replaced wholesale by the next
+            # put(); a corrupt winner cache must never crash serving.
+            # ValueError covers JSONDecodeError and UnicodeDecodeError.
             self._entries = {}
             try:
                 with open(self.path) as f:
@@ -249,8 +266,8 @@ class AutotuneCache:
                 # next put()
                 if isinstance(doc, dict) \
                         and doc.get("version") == CACHE_VERSION:
-                    self._entries = dict(doc.get("entries", {}))
-            except (OSError, json.JSONDecodeError):
+                    self._entries = _valid_entries(doc.get("entries"))
+            except (OSError, ValueError):
                 pass
         return self._entries
 
@@ -271,9 +288,9 @@ class AutotuneCache:
         try:
             with open(self.path) as f:
                 doc = json.load(f)
-            if doc.get("version") == CACHE_VERSION:
-                on_disk = dict(doc.get("entries", {}))
-        except (OSError, json.JSONDecodeError, AttributeError):
+            if isinstance(doc, dict) and doc.get("version") == CACHE_VERSION:
+                on_disk = _valid_entries(doc.get("entries"))
+        except (OSError, ValueError):
             pass
         on_disk.update(entries)
         self._entries = on_disk

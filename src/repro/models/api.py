@@ -99,10 +99,18 @@ def decode_many(params, cache, cfg: ModelConfig, token, pos, n_steps, *,
         temperature 0 = greedy, and the PRNG key is folded by (slot,
         position) so fused and per-step decoding sample identically.
 
+    Non-finite guard: a slot whose logits go non-finite (NaN/inf anywhere
+    in its row) is quarantined ON DEVICE mid-window -- the poisoned token
+    is never emitted (``valid`` False), the slot deactivates (pos -> -1)
+    and rides the rest of the window as a no-op, and ``state['failed']``
+    flags it at the sync point. Other slots are untouched: per-slot
+    compute is batch-row independent, so they finish bit-identically to a
+    window with no poisoned co-resident (tests/test_chaos.py).
+
     Returns ``(tokens (K, B) int32, valid (K, B) bool, state)`` where
     ``valid[k, b]`` marks tokens actually emitted by live slots and
     ``state`` is the carry to continue from:
-    ``{'token', 'pos', 'remaining', 'cache'}``.
+    ``{'token', 'pos', 'remaining', 'failed', 'cache'}``.
     """
     b = token.shape[0]
     pos = as_slot_positions(pos, b)
@@ -117,23 +125,30 @@ def decode_many(params, cache, cfg: ModelConfig, token, pos, n_steps, *,
     if key is None:
         key = jax.random.PRNGKey(0)
 
-    def body(carry, _):
-        tok, p, rem, c = carry
-        logits, c = decode_step(params, c, cfg, tok, p, packs=packs)
-        nxt = sample_tokens(logits[:, 0, :], key, p,
-                            temperature=temperature, top_k=top_k)
-        active = p >= 0
-        nxt = jnp.where(active, nxt, 0)
-        rem = jnp.where(active, rem - 1, rem)
-        done = active & ((rem <= 0) | ((eos >= 0) & (nxt == eos)))
-        new_pos = jnp.where(done, -1, jnp.where(active, p + 1, p))
-        new_tok = jnp.where(active, nxt, tok[:, 0])[:, None]
-        return (new_tok, new_pos, rem, c), (nxt, active)
+    failed0 = jnp.zeros((b,), bool)
 
-    (token, pos, remaining, cache), (toks, valid) = jax.lax.scan(
-        body, (token, pos, remaining, cache), None, length=n_steps)
+    def body(carry, _):
+        tok, p, rem, bad, c = carry
+        logits, c = decode_step(params, c, cfg, tok, p, packs=packs)
+        rows = logits[:, 0, :]
+        finite = jnp.isfinite(rows).all(axis=-1)
+        nxt = sample_tokens(rows, key, p, temperature=temperature,
+                            top_k=top_k)
+        active = p >= 0
+        poisoned = active & ~finite
+        emit = active & finite
+        nxt = jnp.where(emit, nxt, 0)
+        rem = jnp.where(emit, rem - 1, rem)
+        done = emit & ((rem <= 0) | ((eos >= 0) & (nxt == eos)))
+        new_pos = jnp.where(done | poisoned, -1,
+                            jnp.where(active, p + 1, p))
+        new_tok = jnp.where(emit, nxt, tok[:, 0])[:, None]
+        return (new_tok, new_pos, rem, bad | poisoned, c), (nxt, emit)
+
+    (token, pos, remaining, failed, cache), (toks, valid) = jax.lax.scan(
+        body, (token, pos, remaining, failed0, cache), None, length=n_steps)
     state = {"token": token, "pos": pos, "remaining": remaining,
-             "cache": cache}
+             "failed": failed, "cache": cache}
     return toks, valid, state
 
 

@@ -1,2 +1,4 @@
+from repro.runtime.chaos import (ChaosEvent, ChaosInjector, Watchdog,
+                                 poison_slot, straggle)
 from repro.runtime.fault_tolerance import (FaultInjector, FaultToleranceConfig,
                                            StragglerMonitor, Supervisor)

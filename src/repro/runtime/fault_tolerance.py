@@ -113,14 +113,7 @@ class Supervisor:
         return state, step
 
 
-class FaultInjector:
-    """Deterministic failure injection for tests/examples."""
-
-    def __init__(self, fail_at_steps=()):
-        self.fail_at = set(fail_at_steps)
-        self.fired = set()
-
-    def maybe_fail(self, step: int):
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise RuntimeError(f"injected device failure at step {step}")
+# Deterministic failure injection now lives in the shared chaos registry
+# (repro/runtime/chaos.py) alongside the serving-engine hook points and the
+# watchdog; re-exported here for the train driver and existing importers.
+from repro.runtime.chaos import FaultInjector  # noqa: E402,F401

@@ -11,12 +11,15 @@
     h = engine.submit(prompt_tokens, max_new_tokens=32)     # batching
     engine.run(); print(h.tokens)
 """
-from repro.serving.engine import EngineRequest, EngineStats, ServingEngine
+from repro.serving.engine import (EngineRequest, EngineStats, FailureReason,
+                                  ServingEngine, TERMINAL_STATES)
 from repro.serving.export import (export_bert_sparse, export_lm_sparse,
                                   export_params, pack_single, pack_stacked,
                                   shard_axis_for)
+from repro.serving.serialize import ServableLoadError
 from repro.serving.servable import (SERVABLE_STEP, Servable, load_servable,
                                     make_serving_mesh, prepare_servable)
-from repro.serving.spec import DEFAULT_TARGETS, ServingSpec
+from repro.serving.spec import (DEFAULT_TARGETS, OVERFLOW_POLICIES,
+                                ServingSpec)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -6,41 +6,62 @@ the batch dimension into *request slots*. This module adds the request-level
 machinery on top:
 
   * an **admission queue** -- ``submit()`` enqueues requests; each ``step()``
-    admits as many as there are free slots;
+    admits as many as there are free slots (highest ``priority`` first, FIFO
+    within a priority class). The queue is optionally bounded
+    (``max_queue``) with a pluggable backpressure policy (``overflow`` =
+    ``'reject'`` / ``'shed-oldest'`` / ``'block'``, spec.OVERFLOW_POLICIES);
   * **prefill-into-cache** -- an admitted prompt runs ONE forward pass on a
-    batch-1 cache (``models.api.prefill_cache``: the full prompt streams the
-    weights once, with bulk KV/recurrent-state writes; audio scans the
-    decode path instead, its prompts being BOS-sized). Prompt lengths are
-    padded to power-of-two *buckets* so the per-bucket jit executables stay
-    warm -- padding tokens leave no trace in the cache -- and the result is
-    inserted into the engine cache with ``write_slot``;
+    batch-1 cache (``models.api.prefill_cache``; audio scans the decode
+    path instead). Prompt lengths are padded to power-of-two *buckets* so
+    the per-bucket jit executables stay warm, and the result is inserted
+    into the engine cache with ``write_slot``;
   * **fused decode windows** -- with ``sync_every = K > 1`` each ``step()``
     runs up to K decode steps inside ONE jitted ``lax.scan``
-    (``models.api.decode_many``): sampling (greedy or temperature/top-k,
-    PRNG keys threaded on device), per-slot EOS/stop handling and position
-    bookkeeping all stay on device, and the host syncs once per window to
-    drain emitted tokens, fire callbacks, recycle finished slots and admit
-    queued requests. This removes the per-token host dispatch that
-    dominated the per-step loop (docs/PERF.md); ``sync_every=1`` (or
-    ``collect_logits=True``, which needs per-step logits on host) keeps
+    (``models.api.decode_many``); the host syncs once per window to drain
+    emitted tokens, fire callbacks, recycle finished slots and admit
+    queued requests. ``sync_every=1`` (or ``collect_logits=True``) keeps
     the one-decode-per-step loop;
-  * **one jitted batched decode (window) per step** over all ``max_slots``
-    rows -- mixed-progress requests share the call via per-slot
-    causal/window masks; the engine cache is donated, so decode is
-    copy-free;
-  * **slot lifecycle** -- completion fires the request's callbacks and
-    ``free_slot``-zeroes the slot (attention KV *and* SSM/RgLRU recurrent
-    state), so a recycled slot cannot leak its previous request. Slots
-    that finish mid-window become device-side no-ops until the sync point
-    recycles them.
+  * **request lifecycle robustness** (docs/API.md §Engine robustness) --
+    every submitted request ends in EXACTLY ONE terminal status (``done``
+    / ``failed`` / ``cancelled`` / ``shed``), with a structured
+    :class:`FailureReason` on the non-success paths:
+      - **deadlines** (``submit(deadline_s=...)``) and **cancellation**
+        (:meth:`ServingEngine.cancel`) are enforced at window-sync points,
+        so the fused decode stays one jitted scan between checks;
+      - **preemption**: under slot pressure a queued request of strictly
+        higher priority evicts the lowest-priority in-flight request --
+        the victim's slot is freed with the usual recycle hygiene and the
+        victim requeued; on re-admission it resumes via ``prefill_cache``
+        over prompt + already-generated tokens (greedy streams continue
+        exactly; sampled streams may re-key if the slot changed);
+      - **non-finite quarantine**: decode logits are finite-checked on
+        device (per-step and inside the fused scan,
+        ``models.api.decode_many``); a poisoned slot fails with a
+        structured reason while co-resident slots finish bit-identically
+        to an uninjected run;
+      - **failure isolation**: admission errors fail only their request
+        (slot restored -- the try/except hygiene paths); a decode-window
+        error fails the active requests, rebuilds the (donated, possibly
+        invalidated) cache, and leaves the engine serving;
+      - an optional **watchdog** (``watchdog_timeout_s``) detects stuck
+        windows/syncs from a background thread (detection-only: a hung
+        XLA dispatch cannot be cancelled, but it can be seen);
+      - **chaos hooks** (``chaos=repro.runtime.chaos.ChaosInjector()``)
+        fire at alloc/prefill/window/sync so the fault paths above are
+        testable deterministically (tests/test_chaos.py).
+  * **slot lifecycle** -- any retirement (completion, failure, cancel,
+    preemption) ``free_slot``-zeroes the slot (attention KV *and*
+    SSM/RgLRU recurrent state), so a recycled slot cannot leak its
+    previous request.
 
 Construct via :meth:`repro.serving.Servable.engine`::
 
-    engine = servable.engine(max_slots=16, cache_len=512, sync_every=8)
-    h = engine.submit([1, 2, 3], max_new_tokens=32,
-                      on_token=lambda rid, tok: print(rid, tok))
+    engine = servable.engine(max_slots=16, cache_len=512, sync_every=8,
+                             max_queue=64, overflow="reject")
+    h = engine.submit([1, 2, 3], max_new_tokens=32, priority=1,
+                      deadline_s=30.0)
     engine.run()                      # drain queue + active slots
-    print(h.tokens)                   # greedy continuation
+    print(h.status, h.tokens)         # 'done' + greedy continuation
 
 Sampling is configured per engine (``temperature`` / ``top_k`` / ``seed``);
 the PRNG key is folded by (slot, position), so fused and per-step decoding
@@ -55,6 +76,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -64,8 +86,40 @@ import numpy as np
 
 from repro.models import api as model_api
 from repro.models.sampling import sample_token_row
+from repro.runtime import chaos as chaos_mod
+from repro.serving.spec import OVERFLOW_POLICIES
 
-__all__ = ["EngineRequest", "EngineStats", "ServingEngine"]
+__all__ = ["EngineRequest", "EngineStats", "FailureReason", "ServingEngine",
+           "TERMINAL_STATES"]
+
+log = logging.getLogger("repro.serving")
+
+#: the exactly-once terminal accounting: every submit() ends in ONE of these
+TERMINAL_STATES = frozenset({"done", "failed", "cancelled", "shed"})
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureReason:
+    """Structured reason attached to every non-success terminal request.
+
+    ``code`` is one of the class constants below (the machine-readable
+    taxonomy, stable across releases); ``message`` carries the
+    human-readable detail (offending sizes, exception text, ...).
+    """
+
+    code: str
+    message: str = ""
+
+    REJECTED = "rejected"                # invalid at submission
+    QUEUE_FULL = "queue_full"            # shed by backpressure policy
+    DEADLINE = "deadline"                # deadline_s expired (sync point)
+    CANCELLED = "cancelled"              # engine.cancel(handle)
+    PREFILL_ERROR = "prefill_error"      # admission/prefill raised
+    NONFINITE_LOGITS = "nonfinite_logits"  # NaN/inf quarantine
+    ENGINE_ERROR = "engine_error"        # decode window raised
+
+    def __str__(self):
+        return f"{self.code}: {self.message}" if self.message else self.code
 
 
 @dataclasses.dataclass
@@ -79,17 +133,30 @@ class EngineRequest:
     frames: Optional[np.ndarray] = None     # audio family: encoder input
     on_token: Optional[Callable[[int, int], None]] = None
     on_done: Optional[Callable[[int, List[int]], None]] = None
+    priority: int = 0                       # higher preempts lower
+    deadline_at: Optional[float] = None     # absolute time.monotonic()
 
     # engine-owned state
+    status: str = "queued"          # queued|active|done|failed|cancelled|shed
+    failure: Optional[FailureReason] = None
     slot: int = -1
     pos: int = -1                           # next decode position
     tokens: List[int] = dataclasses.field(default_factory=list)
     step_logits: List[np.ndarray] = dataclasses.field(default_factory=list)
-    done: bool = False
+    done: bool = False                      # status == 'done' (back-compat)
+    cancel_requested: bool = False
+    n_preempted: int = 0
+    admit_seq: int = -1                     # monotonic admission counter
 
     @property
     def n_generated(self) -> int:
         return len(self.tokens)
+
+    @property
+    def finished(self) -> bool:
+        """True once the request reached ANY terminal state (``done`` stays
+        success-only)."""
+        return self.status in TERMINAL_STATES
 
 
 @dataclasses.dataclass
@@ -100,6 +167,15 @@ class EngineStats:
     tokens_generated: int = 0
     occupancy_sum: int = 0          # sum over steps of active slots
     completed: int = 0
+    # lifecycle accounting (completed + failed + cancelled + shed covers
+    # every request that ever reached a terminal state)
+    failed: int = 0
+    cancelled: int = 0
+    shed: int = 0
+    rejected: int = 0               # failed at submission (subset of failed)
+    preemptions: int = 0
+    deadline_misses: int = 0        # subset of failed/cancelled-by-deadline
+    watchdog_stalls: int = 0
     bucket_hits: Dict[int, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
     # wall-clock breakdown of the serving loop (seconds): prompt prefill
@@ -119,6 +195,11 @@ class EngineStats:
                 "prefills": self.prefills,
                 "tokens_generated": self.tokens_generated,
                 "completed": self.completed,
+                "failed": self.failed, "cancelled": self.cancelled,
+                "shed": self.shed, "rejected": self.rejected,
+                "preemptions": self.preemptions,
+                "deadline_misses": self.deadline_misses,
+                "watchdog_stalls": self.watchdog_stalls,
                 "mean_occupancy": round(self.mean_occupancy, 3),
                 "prefill_buckets": dict(self.bucket_hits),
                 "prefill_s": round(self.prefill_s, 4),
@@ -131,18 +212,32 @@ class ServingEngine:
 
     ``max_slots`` bounds request concurrency (the static batch of the one
     jitted decode executable); ``cache_len`` bounds prompt + generation
-    length per slot (windowed/recurrent layers keep their own tighter
-    state bounds). ``sync_every = K`` fuses up to K decode steps into one
-    on-device window between host syncs (``collect_logits`` forces K = 1:
-    per-step logits only exist on host in the unfused loop).
+    length per slot. ``sync_every = K`` fuses up to K decode steps into one
+    on-device window between host syncs (``collect_logits`` forces K = 1).
+
+    Robustness knobs (docs/API.md §Engine robustness): ``max_queue`` +
+    ``overflow`` bound the admission queue (policies in
+    ``spec.OVERFLOW_POLICIES``); ``watchdog_timeout_s`` arms a stuck-window
+    detector (``on_stall(label, elapsed)`` optional callback); ``chaos``
+    attaches a :class:`repro.runtime.chaos.ChaosInjector` whose
+    alloc/prefill/window/sync sites this engine fires.
     """
 
     def __init__(self, servable, max_slots: int = 8, cache_len: int = 256,
                  *, min_bucket: int = 8, collect_logits: bool = False,
                  sync_every: int = 8, temperature: float = 0.0,
-                 top_k: int = 0, seed: int = 0):
+                 top_k: int = 0, seed: int = 0,
+                 max_queue: Optional[int] = None, overflow: str = "reject",
+                 watchdog_timeout_s: Optional[float] = None,
+                 on_stall: Optional[Callable[[str, float], None]] = None,
+                 chaos: Optional["chaos_mod.ChaosInjector"] = None):
         if servable.cfg.family == "bert":
             raise ValueError("encoder-only arch has no decode step")
+        if overflow not in OVERFLOW_POLICIES:
+            raise ValueError(
+                f"overflow={overflow!r} not in {OVERFLOW_POLICIES}")
+        if max_queue is not None and int(max_queue) < 1:
+            raise ValueError("max_queue must be >= 1 (or None = unbounded)")
         self.servable = servable
         self.cfg = servable.cfg
         self.max_slots = int(max_slots)
@@ -157,38 +252,25 @@ class ServingEngine:
         self._key = jax.random.PRNGKey(int(seed))
         self.stats = EngineStats()
         self.mesh = servable.mesh               # None = single-device path
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.overflow = overflow
+        self._chaos = chaos
+        self._watchdog = None
+        if watchdog_timeout_s is not None:
+            self._watchdog = chaos_mod.Watchdog(watchdog_timeout_s,
+                                                on_stall=on_stall)
 
         self._sub_template = None
-        if self.cfg.family == "audio":
-            # structure-only cache: encode batch-1 zero frames and broadcast
-            # the slot axis (axis 1; every leaf is layer-stacked) -- the real
-            # cross K/V arrives per request via write_slot at admission
-            one = model_api.init_cache(
-                servable.params, self.cfg, 1, self.cache_len,
-                frames=jnp.zeros((1, self.cfg.n_audio_ctx, self.cfg.d_model),
-                                 self.cfg.jdtype))
-            self.cache = jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(
-                    x, x.shape[:1] + (self.max_slots,) + x.shape[2:]), one)
-        else:
-            self.cache = model_api.init_cache(servable.params, self.cfg,
-                                              self.max_slots, self.cache_len)
+        if self.cfg.family != "audio":
             # single-request cache template reused by every prefill (the
             # prefill is functional; audio rebuilds per request from frames)
             self._sub_template = model_api.init_cache(
                 servable.params, self.cfg, 1, self.cache_len)
-
-        if self.mesh is not None:
-            # mesh-first cache: slots over "data", heads/state over "model".
-            # Lifecycle ops below are pinned to these shardings, so alloc/
-            # free/reset/write never regather the cache (tested:
-            # tests/test_sharded_serving.py)
-            self.cache = model_api.shard_cache(self.cache, self.cfg,
-                                               self.mesh)
-            if self._sub_template is not None:
+            if self.mesh is not None:
                 from repro.launch.sharding import replicated
                 self._sub_template = jax.device_put(
                     self._sub_template, replicated(self.mesh))
+        self.cache = self._build_cache()
 
         self._tokens = np.zeros((self.max_slots, 1), np.int32)
         self._pos = np.full((self.max_slots,), -1, np.int32)
@@ -203,6 +285,7 @@ class ServingEngine:
         # keep their own handles
         self._done: List[EngineRequest] = []
         self._next_id = 0
+        self._admit_counter = 0
 
         # jitted functions are owned by the Servable and shared across its
         # engines: one decode executable per max_slots shape (and per fused
@@ -223,32 +306,111 @@ class ServingEngine:
          self._free_slot) = servable.engine_fns(out_sh)
         self._prefill = servable._engine_prefill_fn()
 
+    def _build_cache(self):
+        """A fresh all-slots-free engine cache (constructor AND the
+        recovery path after a decode-window failure invalidated the donated
+        buffers)."""
+        if self.cfg.family == "audio":
+            # structure-only cache: encode batch-1 zero frames and broadcast
+            # the slot axis (axis 1; every leaf is layer-stacked) -- the real
+            # cross K/V arrives per request via write_slot at admission
+            one = model_api.init_cache(
+                self.servable.params, self.cfg, 1, self.cache_len,
+                frames=jnp.zeros((1, self.cfg.n_audio_ctx, self.cfg.d_model),
+                                 self.cfg.jdtype))
+            cache = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    x, x.shape[:1] + (self.max_slots,) + x.shape[2:]), one)
+        else:
+            cache = model_api.init_cache(self.servable.params, self.cfg,
+                                         self.max_slots, self.cache_len)
+        if self.mesh is not None:
+            # mesh-first cache: slots over "data", heads/state over "model".
+            # Lifecycle ops below are pinned to these shardings, so alloc/
+            # free/reset/write never regather the cache (tested:
+            # tests/test_sharded_serving.py)
+            cache = model_api.shard_cache(cache, self.cfg, self.mesh)
+        return cache
+
     # -- submission -------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16, *,
-               eos_id: Optional[int] = None, frames=None,
+               eos_id: Optional[int] = None, frames=None, priority: int = 0,
+               deadline_s: Optional[float] = None,
                on_token: Optional[Callable[[int, int], None]] = None,
                on_done: Optional[Callable[[int, List[int]], None]] = None
                ) -> EngineRequest:
         """Enqueue a request; returns its handle (``.tokens`` fills as the
-        engine runs, ``.done`` flips on completion)."""
+        engine runs, ``.status`` reaches exactly one terminal state).
+
+        Invalid requests are REJECTED AT SUBMISSION with a structured
+        reason (``status == 'failed'``, ``failure.code == 'rejected'``)
+        instead of failing late inside prefill/decode -- submit() never
+        raises for request-level problems. ``deadline_s`` is a relative
+        wall-clock budget enforced at window-sync points; ``priority``
+        orders admission and arms preemption (higher wins)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size == 0:
-            raise ValueError("empty prompt")
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1 (the prefill "
-                             "already samples the first token)")
-        if prompt.size + max_new_tokens > self.cache_len:
-            raise ValueError(
-                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
-                f"exceeds cache_len ({self.cache_len})")
-        if self.cfg.family == "audio" and frames is None:
-            raise ValueError("audio requests need encoder frames")
         req = EngineRequest(req_id=self._next_id, prompt=prompt,
                             max_new_tokens=int(max_new_tokens), eos_id=eos_id,
-                            frames=frames, on_token=on_token, on_done=on_done)
+                            frames=frames, on_token=on_token, on_done=on_done,
+                            priority=int(priority))
         self._next_id += 1
+        if deadline_s is not None:
+            req.deadline_at = time.monotonic() + float(deadline_s)
+
+        reject = None
+        if prompt.size == 0:
+            reject = "empty prompt"
+        elif max_new_tokens < 1:
+            reject = ("max_new_tokens must be >= 1 (the prefill already "
+                      "samples the first token)")
+        elif prompt.size + max_new_tokens > self.cache_len:
+            reject = (f"prompt ({prompt.size}) + max_new_tokens "
+                      f"({max_new_tokens}) exceeds cache_len "
+                      f"({self.cache_len})")
+        elif self.cfg.family == "audio" and frames is None:
+            reject = "audio requests need encoder frames"
+        if reject is not None:
+            self.stats.rejected += 1
+            self._finalize(req, "failed",
+                           FailureReason(FailureReason.REJECTED, reject))
+            return req
+
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            if self.overflow == "block":
+                # drive the engine until the queue drains below the bound
+                while len(self._queue) >= self.max_queue and self.step():
+                    pass
+            if len(self._queue) >= self.max_queue:
+                if self.overflow == "shed-oldest":
+                    victim = self._queue.popleft()
+                    self._finalize(victim, "shed", FailureReason(
+                        FailureReason.QUEUE_FULL,
+                        "shed by newer submission (shed-oldest)"))
+                else:                   # 'reject' (or a block that stalled)
+                    self._finalize(req, "shed", FailureReason(
+                        FailureReason.QUEUE_FULL,
+                        f"queue full ({self.max_queue}), policy "
+                        f"{self.overflow!r}"))
+                    return req
         self._queue.append(req)
         return req
+
+    def cancel(self, req: EngineRequest) -> bool:
+        """Request cancellation of ``req``. Queued requests cancel
+        immediately; active ones at the next window-sync point (already
+        generated tokens stay on the handle). Returns False when the
+        request is already terminal."""
+        if req.status in TERMINAL_STATES:
+            return False
+        req.cancel_requested = True
+        if req.status == "queued":
+            try:
+                self._queue.remove(req)
+            except ValueError:      # pragma: no cover - defensive
+                return False
+            self._finalize(req, "cancelled", FailureReason(
+                FailureReason.CANCELLED, "cancelled while queued"))
+        return True
 
     # -- prefill ----------------------------------------------------------
     def _bucket(self, length: int) -> int:
@@ -256,40 +418,82 @@ class ServingEngine:
         return min(b, self.cache_len)
 
     def _admit(self, req: EngineRequest) -> None:
+        """Prefill ``req`` into a free slot. A resumed (preempted) request
+        prefills over prompt + already-generated tokens, continuing exactly
+        where it stopped. Any failure here fails ONLY this request: the
+        slot is restored and the engine keeps serving."""
         t0 = time.perf_counter()
-        slot = self._free.pop(0)
-        length = int(req.prompt.size)
-        bucket = self._bucket(length)
+        slot = None
+        try:
+            if self._chaos is not None:
+                self._chaos.fire(chaos_mod.SITE_ALLOC, engine=self,
+                                 request=req)
+            slot = self._free.pop(0)
+            seq = req.prompt if not req.tokens else np.concatenate(
+                [req.prompt, np.asarray(req.tokens, np.int32)])
+            length = int(seq.size)
+            bucket = self._bucket(length)
+
+            if self._chaos is not None:
+                self._chaos.fire(chaos_mod.SITE_PREFILL, engine=self,
+                                 request=req)
+            if self.cfg.family == "audio":
+                sub = model_api.init_cache(
+                    self.servable.params, self.cfg, 1, self.cache_len,
+                    frames=jnp.asarray(req.frames)[None]
+                    if np.ndim(req.frames) == 2 else jnp.asarray(req.frames))
+            else:
+                sub = self._sub_template
+            toks = np.zeros((bucket,), np.int32)
+            toks[:length] = seq
+            pos_seq = np.full((bucket,), -1, np.int32)
+            pos_seq[:length] = np.arange(length)
+            sub, logits = self._prefill(self.servable.params, sub,
+                                        jnp.asarray(toks),
+                                        jnp.asarray(pos_seq),
+                                        jnp.int32(length))
+            self.cache = self._write_slot(self.cache, jnp.int32(slot), sub)
+            row = np.asarray(logits[length - 1])    # once per admission
+        except Exception as e:  # noqa: BLE001 -- isolate to this request
+            self._restore_slot(slot)
+            self.stats.prefill_s += time.perf_counter() - t0
+            log.warning("admission of request %d failed (%s: %s)",
+                        req.req_id, type(e).__name__, e)
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.PREFILL_ERROR, f"{type(e).__name__}: {e}"))
+            return
+
         self.stats.prefills += 1
         self.stats.bucket_hits[bucket] += 1
-
-        if self.cfg.family == "audio":
-            sub = model_api.init_cache(
-                self.servable.params, self.cfg, 1, self.cache_len,
-                frames=jnp.asarray(req.frames)[None]
-                if np.ndim(req.frames) == 2 else jnp.asarray(req.frames))
-        else:
-            sub = self._sub_template
-        toks = np.zeros((bucket,), np.int32)
-        toks[:length] = req.prompt
-        pos_seq = np.full((bucket,), -1, np.int32)
-        pos_seq[:length] = np.arange(length)
-        sub, logits = self._prefill(self.servable.params, sub,
-                                    jnp.asarray(toks), jnp.asarray(pos_seq),
-                                    jnp.int32(length))
-        self.cache = self._write_slot(self.cache, jnp.int32(slot), sub)
+        if not np.all(np.isfinite(row)):
+            # poisoned before the first decode: quarantine at admission
+            self.cache = self._free_slot(self.cache, jnp.int32(slot))
+            self._restore_slot(slot)
+            self.stats.prefill_s += time.perf_counter() - t0
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.NONFINITE_LOGITS,
+                f"non-finite prefill logits at position {length - 1}"))
+            return
 
         req.slot, req.pos = slot, length
+        req.status = "active"
+        req.admit_seq = self._admit_counter
+        self._admit_counter += 1
         self._active[slot] = req
         self._eos[slot] = -1 if req.eos_id is None else int(req.eos_id)
-        row = np.asarray(logits[length - 1])    # once per admission: fine
         tok = sample_token_row(row, self._key, slot, length - 1,
                                temperature=self.temperature,
                                top_k=self.top_k)
         self.stats.prefill_s += time.perf_counter() - t0
         self._emit(req, int(tok), row)
 
-    # -- stepping ---------------------------------------------------------
+    def _restore_slot(self, slot: Optional[int]) -> None:
+        """Return a popped-but-unoccupied slot to the free list."""
+        if slot is not None and slot not in self._free:
+            self._free.append(slot)
+            self._free.sort()
+
+    # -- lifecycle --------------------------------------------------------
     def _emit(self, req: EngineRequest, tok: int, logits_row=None) -> None:
         """Record one sampled token and retire the request if it just
         completed. ``logits_row`` (V,) is only materialized on host when
@@ -302,17 +506,17 @@ class ServingEngine:
             req.on_token(req.req_id, tok)
         if (req.n_generated >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)):
-            self._finish(req)
+            self._finalize(req, "done")
         else:
             self._tokens[req.slot, 0] = tok
             self._pos[req.slot] = req.pos
             self._remaining[req.slot] = req.max_new_tokens - req.n_generated
 
-    def _finish(self, req: EngineRequest) -> None:
+    def _release_slot(self, req: EngineRequest) -> None:
+        """Free ``req``'s slot with full recycle hygiene: zero attention KV
+        and recurrent state on device, reset the host mirrors, return the
+        slot to the free list."""
         slot = req.slot
-        req.done = True
-        self.stats.completed += 1
-        # zero attention KV and recurrent state: recycled slots start fresh
         self.cache = self._free_slot(self.cache, jnp.int32(slot))
         self._pos[slot] = -1
         self._tokens[slot, 0] = 0
@@ -322,25 +526,151 @@ class ServingEngine:
         self._free.append(slot)
         self._free.sort()
         req.slot = -1
+
+    def _finalize(self, req: EngineRequest, status: str,
+                  reason: Optional[FailureReason] = None) -> None:
+        """Move ``req`` to its (single) terminal state, releasing its slot
+        if it holds one."""
+        if req.slot >= 0:
+            self._release_slot(req)
+        req.status = status
+        req.failure = reason
+        req.done = status == "done"
+        if status == "done":
+            self.stats.completed += 1
+        elif status == "failed":
+            self.stats.failed += 1
+        elif status == "cancelled":
+            self.stats.cancelled += 1
+        elif status == "shed":
+            self.stats.shed += 1
+        if reason is not None and reason.code == FailureReason.DEADLINE:
+            self.stats.deadline_misses += 1
         self._done.append(req)
-        if req.on_done is not None:
+        if status == "done" and req.on_done is not None:
             req.on_done(req.req_id, list(req.tokens))
 
+    def _preempt(self, req: EngineRequest) -> None:
+        """Evict an in-flight request: free its slot (recycle hygiene) and
+        requeue it at the FRONT of its priority class; re-admission resumes
+        it via prefill over prompt + generated tokens."""
+        self._release_slot(req)
+        req.status = "queued"
+        req.n_preempted += 1
+        self.stats.preemptions += 1
+        self._queue.appendleft(req)
+
+    def _sweep_control(self) -> None:
+        """The window-sync control sweep: apply pending cancellations and
+        expire deadlines for queued AND active requests. Runs at the top of
+        every step(), so lifecycle enforcement costs nothing between sync
+        points (the fused window stays one jitted scan)."""
+        now = time.monotonic()
+
+        def expired(r):
+            return r.deadline_at is not None and now > r.deadline_at
+
+        for req in [r for r in self._queue
+                    if r.cancel_requested or expired(r)]:
+            self._queue.remove(req)
+            if req.cancel_requested:
+                self._finalize(req, "cancelled", FailureReason(
+                    FailureReason.CANCELLED, "cancelled while queued"))
+            else:
+                self._finalize(req, "failed", FailureReason(
+                    FailureReason.DEADLINE,
+                    "deadline expired before admission"))
+        for req in [r for r in self._active.values()
+                    if r.cancel_requested or expired(r)]:
+            if req.cancel_requested:
+                self._finalize(req, "cancelled", FailureReason(
+                    FailureReason.CANCELLED,
+                    f"cancelled after {req.n_generated} tokens"))
+            else:
+                self._finalize(req, "failed", FailureReason(
+                    FailureReason.DEADLINE,
+                    f"deadline expired after {req.n_generated}/"
+                    f"{req.max_new_tokens} tokens"))
+
+    def _pop_next(self) -> EngineRequest:
+        """Highest-priority queued request, FIFO within a priority class."""
+        best_i, best = 0, self._queue[0]
+        for i, req in enumerate(self._queue):
+            if req.priority > best.priority:
+                best_i, best = i, req
+        del self._queue[best_i]
+        return best
+
+    def _schedule(self) -> None:
+        """Admissions + priority preemption (a window-sync point action)."""
+        while self._free and self._queue:
+            self._admit(self._pop_next())
+        # under slot pressure: strictly-higher-priority queued traffic
+        # evicts the lowest-priority (latest-admitted on ties) active
+        # request; the victim resumes later via prefill over its
+        # prompt + generated tokens
+        while self._queue and not self._free and self._active:
+            best_p = max(r.priority for r in self._queue)
+            victim = min(self._active.values(),
+                         key=lambda r: (r.priority, -r.admit_seq))
+            if best_p <= victim.priority:
+                break
+            self._preempt(victim)
+            self._admit(self._pop_next())
+
+    # -- stepping ---------------------------------------------------------
     def step(self) -> bool:
-        """Admit what fits, then run ONE batched decode window (up to
+        """One window-sync cycle: control sweep (cancel/deadline), schedule
+        (admit + preempt), then ONE batched decode window (up to
         ``sync_every`` fused steps) over all active slots. Returns True
         while there is (or may be) work left."""
-        while self._free and self._queue:
-            self._admit(self._queue.popleft())
+        self._sweep_control()
+        self._schedule()
         if not self._active:
             return bool(self._queue)
-        k = min(self.sync_every,
-                max(int(self._remaining[s]) for s in self._active))
-        if k <= 1:
-            self._step_single()
-        else:
-            self._step_fused(k)
+        if self._watchdog is not None:
+            self._watchdog.arm("decode-window")
+        try:
+            if self._chaos is not None:
+                self._chaos.fire(chaos_mod.SITE_WINDOW, engine=self)
+            k = min(self.sync_every,
+                    max(int(self._remaining[s]) for s in self._active))
+            if k <= 1:
+                self._step_single()
+            else:
+                self._step_fused(k)
+            if self._chaos is not None:
+                self._chaos.fire(chaos_mod.SITE_SYNC, engine=self)
+        except Exception as e:  # noqa: BLE001 -- keep the engine serving
+            self._recover_window_failure(e)
+        finally:
+            if self._watchdog is not None:
+                self._watchdog.disarm()
+                self.stats.watchdog_stalls = len(self._watchdog.stalls)
         return bool(self._active or self._queue)
+
+    def _recover_window_failure(self, err: Exception) -> None:
+        """A decode window raised: the donated engine cache may be
+        invalidated, so fail every active request with a structured reason,
+        rebuild a fresh cache, and leave the engine usable (queued
+        requests are admitted on the next step)."""
+        log.warning("decode window failed (%s: %s); failing %d active "
+                    "request(s) and rebuilding the engine cache",
+                    type(err).__name__, err, len(self._active))
+        reason = FailureReason(
+            FailureReason.ENGINE_ERROR,
+            f"decode window failed: {type(err).__name__}: {err}")
+        reqs = list(self._active.values())
+        self._active.clear()
+        self._free = list(range(self.max_slots))
+        self._pos[:] = -1
+        self._tokens[:] = 0
+        self._remaining[:] = 0
+        self._eos[:] = -1
+        self.cache = self._build_cache()
+        for req in reqs:
+            req.slot = -1
+            self._finalize(req, "failed", reason)
 
     def _step_single(self) -> None:
         """The unfused loop: one decode, one host sync per token. Kept for
@@ -350,15 +680,22 @@ class ServingEngine:
         self.stats.steps += 1
         self.stats.windows += 1
         self.stats.occupancy_sum += len(self._active)
-        next_tok, logits, self.cache = self._decode(
+        next_tok, ok, logits, self.cache = self._decode(
             self.servable.params, self.cache, jnp.asarray(self._tokens),
             jnp.asarray(self._pos), self._key, self.temperature, self.top_k)
         toks = np.asarray(next_tok)             # (max_slots,) int32 only
+        ok_h = np.asarray(ok)                   # (max_slots,) bool
         rows = np.asarray(logits[:, 0, :]) if self.collect_logits else None
         self.stats.decode_s += time.perf_counter() - t0
         t0 = time.perf_counter()
         for slot in sorted(self._active):
             req = self._active[slot]
+            if not ok_h[slot]:
+                # non-finite logits: quarantine only this slot
+                self._finalize(req, "failed", FailureReason(
+                    FailureReason.NONFINITE_LOGITS,
+                    f"non-finite decode logits at position {req.pos}"))
+                continue
             req.pos += 1
             self._emit(req, int(toks[slot]),
                        rows[slot] if rows is not None else None)
@@ -366,12 +703,13 @@ class ServingEngine:
 
     def _step_fused(self, k: int) -> None:
         """The fused hot loop: K decode steps inside one jitted scan
-        (sampling, EOS and position bookkeeping on device), then ONE host
-        sync that drains the emitted tokens, fires callbacks in step order
-        and recycles finished slots. ``k`` never exceeds the largest
-        remaining budget, so a window cannot overshoot ``max_new_tokens``;
-        slots that hit EOS (or their budget) mid-window deactivate
-        themselves on device and ride along as no-ops until the sync."""
+        (sampling, EOS, non-finite guard and position bookkeeping on
+        device), then ONE host sync that drains the emitted tokens, fires
+        callbacks in step order and recycles finished slots. ``k`` never
+        exceeds the largest remaining budget, so a window cannot overshoot
+        ``max_new_tokens``; slots that hit EOS (or their budget, or
+        non-finite logits) mid-window deactivate themselves on device and
+        ride along as no-ops until the sync."""
         t0 = time.perf_counter()
         self.stats.steps += k
         self.stats.windows += 1
@@ -383,6 +721,7 @@ class ServingEngine:
         self.cache = state["cache"]
         toks_h = np.asarray(toks)               # (K, B) int32
         valid_h = np.asarray(valid)             # (K, B) bool
+        failed_h = np.asarray(state["failed"])  # (B,) bool
         # writable host mirrors (np.asarray of a jax array is read-only)
         self._tokens = np.array(state["token"], np.int32)
         self._pos = np.array(state["pos"], np.int32)
@@ -405,18 +744,24 @@ class ServingEngine:
                     req.on_token(req.req_id, tok)
         for slot in window:
             req = self._active[slot]
-            if self._pos[slot] < 0:             # device marked it finished
-                # _finish re-zeroes the host mirrors; cache hygiene via
+            if failed_h[slot]:                  # device quarantined it
+                self._finalize(req, "failed", FailureReason(
+                    FailureReason.NONFINITE_LOGITS,
+                    f"non-finite decode logits in fused window at "
+                    f"position {req.pos}"))
+            elif self._pos[slot] < 0:           # device marked it finished
+                # _finalize re-zeroes the host mirrors; cache hygiene via
                 # free_slot as in the per-step path
-                self._finish(req)
+                self._finalize(req, "done")
         self.stats.sync_s += time.perf_counter() - t0
 
     def run(self, max_steps: Optional[int] = None) -> List[EngineRequest]:
-        """Drain the queue and all active slots; returns the requests that
-        completed since the last drain, in submission order, and releases
-        them from engine tracking (callers keep their handles -- the
-        engine itself retains no request history, so a long-lived engine's
-        memory is bounded by its live requests)."""
+        """Drain the queue and all active slots; returns every request that
+        reached a terminal state since the last drain (done / failed /
+        cancelled / shed), in submission order, and releases them from
+        engine tracking (callers keep their handles -- the engine itself
+        retains no request history, so a long-lived engine's memory is
+        bounded by its live requests)."""
         steps = 0
         while self.step():
             steps += 1
@@ -424,6 +769,51 @@ class ServingEngine:
                 break
         done, self._done = self._done, []
         return sorted(done, key=lambda r: r.req_id)
+
+    def close(self) -> None:
+        """Stop the watchdog thread (idempotent; engines without one are
+        no-ops)."""
+        if self._watchdog is not None:
+            self._watchdog.close()
+
+    # -- chaos / test hooks ----------------------------------------------
+    def corrupt_slot(self, slot: int) -> None:
+        """Chaos hook: NaN-fill every float leaf of one slot's cache state
+        (``repro.runtime.chaos.poison_slot``). The slot's next decode
+        logits go non-finite and the engine's quarantine path must contain
+        the damage to exactly this slot."""
+        sub = model_api.read_slot(self.cache, self.cfg, int(slot))
+        sub = jax.tree_util.tree_map(
+            lambda x: jnp.full_like(x, jnp.nan)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, sub)
+        self.cache = self._write_slot(self.cache, jnp.int32(int(slot)), sub)
+
+    def verify_invariants(self) -> None:
+        """Assert the engine's internal bookkeeping is consistent (chaos
+        suite: called after every injected fault). Raises AssertionError
+        on violation; cheap enough for tests, not run on the hot path."""
+        slots = sorted(self._free) + sorted(self._active)
+        assert sorted(slots) == list(range(self.max_slots)), (
+            f"slot leak: free={sorted(self._free)} "
+            f"active={sorted(self._active)} of {self.max_slots}")
+        assert len(set(self._free)) == len(self._free), (
+            f"duplicate free slots: {self._free}")
+        for slot, req in self._active.items():
+            assert req.slot == slot and req.status == "active", (
+                f"slot {slot} holds request {req.req_id} with "
+                f"slot={req.slot} status={req.status}")
+            assert self._pos[slot] >= 0 or req.n_generated > 0, (
+                f"active slot {slot} has no progress")
+        for slot in self._free:
+            assert self._pos[slot] == -1, (
+                f"free slot {slot} has live pos {self._pos[slot]}")
+        for req in self._queue:
+            assert req.status == "queued" and req.slot == -1, (
+                f"queued request {req.req_id} has slot={req.slot} "
+                f"status={req.status}")
+        for req in self._done:
+            assert req.status in TERMINAL_STATES and req.slot == -1, (
+                f"drained request {req.req_id} non-terminal: {req.status}")
 
     # -- introspection ----------------------------------------------------
     @property
@@ -433,3 +823,7 @@ class ServingEngine:
     @property
     def n_queued(self) -> int:
         return len(self._queue)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)

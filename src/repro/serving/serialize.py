@@ -34,6 +34,42 @@ _PLAN_FIELDS = ("col_idx", "slot_mask", "row_of_vrow", "vrow", "slot")
 _BSR_FIELDS = ("row_id", "col_id", "t_perm")
 
 
+class ServableLoadError(RuntimeError):
+    """A Servable artifact failed to load: missing, truncated or corrupt
+    metadata / pack archive. The message names the offending piece (the
+    archive member = "leaf" when one is identifiable), so a bad artifact
+    reads as "leaf 'p0_col_idx' is unreadable", not a zlib traceback."""
+
+
+class LeafReader:
+    """Mapping shim over an ``np.load`` NpzFile that converts per-member
+    failures into :class:`ServableLoadError` naming the offending leaf.
+
+    npz members decompress lazily, so a truncated or bit-flipped
+    ``packs.npz`` loads fine and only fails when a specific member is
+    read -- deep inside the pack codec. Routing every read through this
+    shim pins the error to the artifact and leaf instead."""
+
+    def __init__(self, npz, path: str):
+        self._npz = npz
+        self._path = path
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        try:
+            return self._npz[name]
+        except KeyError:
+            raise ServableLoadError(
+                f"pack archive {self._path} is missing leaf {name!r} "
+                f"(truncated or incompatible artifact)") from None
+        except Exception as e:  # zlib.error / BadZipFile / ValueError ...
+            raise ServableLoadError(
+                f"pack archive {self._path}: leaf {name!r} is unreadable "
+                f"({type(e).__name__}: {e})") from e
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._npz
+
+
 def pattern_key(pack) -> bytes:
     """Fingerprint of a static pattern, uniform across the pack kinds
     (plan / bsr / autotuned choice / masked) -- the dedupe key here and the

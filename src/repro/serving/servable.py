@@ -33,7 +33,8 @@ from repro.core.pruner import _path_name, oneshot_prune, tied_prune
 from repro.kernels.exec_plan import RowPackPlan, ShardedPlan
 from repro.models import api as model_api
 from repro.serving.export import export_params
-from repro.serving.serialize import (build_like, config_from_dict,
+from repro.serving.serialize import (LeafReader, ServableLoadError,
+                                     build_like, config_from_dict,
                                      config_to_dict, packs_from_arrays,
                                      packs_to_arrays, pattern_key, tree_spec)
 from repro.serving.spec import ServingSpec
@@ -241,12 +242,14 @@ class Servable:
         """Jitted batched decode shared by every engine of this servable
         (jit retraces per (max_slots, cache) shape and per static
         (temperature, top_k); executables persist across engine
-        instances). Returns ``(sampled_tokens (B,), logits, cache)`` --
-        sampling (greedy argmax, or temperature/top-k with the
+        instances). Returns ``(sampled_tokens (B,), ok (B,) bool, logits,
+        cache)`` -- sampling (greedy argmax, or temperature/top-k with the
         slot+position-keyed PRNG of models/sampling.py) runs on device so
-        the hot loop only moves B int32s to host; the full logits land on
-        host only when an engine collects them. The cache argument is
-        DONATED -- engine hot-loop use only; :meth:`decode_step` is the
+        the hot loop only moves B int32s + B bools to host; ``ok`` is the
+        per-slot non-finite guard (False = that slot's logits row went
+        NaN/inf and the engine must quarantine it), and the full logits
+        land on host only when an engine collects them. The cache argument
+        is DONATED -- engine hot-loop use only; :meth:`decode_step` is the
         non-donating API.
 
         ``cache_shardings`` (mesh engines) pins the output cache to the
@@ -259,12 +262,14 @@ class Servable:
             def decode(p, c, t, s, key, temperature, top_k):
                 logits, c = model_api.decode_step(p, c, cfg, t, s,
                                                   packs=packs)
-                nxt = sample_tokens(logits[:, 0, :], key, s,
+                rows = logits[:, 0, :]
+                ok = jnp.isfinite(rows).all(axis=-1)
+                nxt = sample_tokens(rows, key, s,
                                     temperature=temperature, top_k=top_k)
-                return nxt, logits, c
+                return nxt, ok, logits, c
 
             kw = {} if cache_shardings is None else \
-                {"out_shardings": (None, None, cache_shardings)}
+                {"out_shardings": (None, None, None, cache_shardings)}
             fn = jax.jit(decode, donate_argnums=(1,),
                          static_argnums=(5, 6), **kw)
             if cache_shardings is not None:
@@ -294,7 +299,7 @@ class Servable:
             if cache_shardings is not None:
                 kw["out_shardings"] = (
                     None, None, {"token": None, "pos": None,
-                                 "remaining": None,
+                                 "remaining": None, "failed": None,
                                  "cache": cache_shardings})
             fn = jax.jit(fused, donate_argnums=(1,),
                          static_argnums=(7, 8, 9), **kw)
@@ -549,22 +554,45 @@ def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
                     export_stats=stats, mesh=mesh)
 
 
-def load_servable(path: str, *,
-                  registry: Optional[PatternRegistry] = None) -> Servable:
+def load_servable(path: str, *, registry: Optional[PatternRegistry] = None,
+                  chaos=None) -> Servable:
     """Restore a saved Servable: params via ``CheckpointStore.restore``,
     patterns via the fingerprint-keyed pack codec. No pruning, packing, or
     plan construction re-runs; the load-time registry only pays one build
     per unique pattern (the saved reuse counters stay readable under
-    ``stats()['registry_at_save']``)."""
+    ``stats()['registry_at_save']``).
+
+    A truncated / corrupt / incomplete artifact raises
+    :class:`~repro.serving.serialize.ServableLoadError` naming the
+    offending piece (the npz leaf when one is identifiable) instead of
+    surfacing a zlib/zip/KeyError traceback from deep inside the codec.
+    ``chaos`` (a ``repro.runtime.chaos.ChaosInjector``) fires the
+    ``servable.load_packs`` site just before the archive is read."""
     store = CheckpointStore(path)
-    meta = store.meta(SERVABLE_STEP)["servable"]
+    try:
+        meta = store.meta(SERVABLE_STEP)["servable"]
+    except Exception as e:
+        raise ServableLoadError(
+            f"servable meta unreadable under {path} "
+            f"({type(e).__name__}: {e})") from e
     cfg = config_from_dict(meta["cfg"])
     spec = ServingSpec.from_dict(meta["spec"])
     params = store.restore(build_like(meta["tree"]), step=SERVABLE_STEP)
     step_dir = os.path.join(path, f"step_{SERVABLE_STEP:09d}")
     registry = registry if registry is not None else PatternRegistry()
-    with np.load(os.path.join(step_dir, _PACKS_FILE)) as npz:
-        packs = packs_from_arrays(meta["packs"], npz, registry)
+    packs_path = os.path.join(step_dir, _PACKS_FILE)
+    if chaos is not None:
+        from repro.runtime.chaos import SITE_LOAD_PACKS
+        chaos.fire(SITE_LOAD_PACKS, path=packs_path)
+    try:
+        npz = np.load(packs_path)
+    except Exception as e:
+        raise ServableLoadError(
+            f"pack archive {packs_path} unreadable "
+            f"({type(e).__name__}: {e})") from e
+    with npz:
+        packs = packs_from_arrays(meta["packs"], LeafReader(npz, packs_path),
+                                  registry)
     mesh = None
     if spec.mesh_shape is not None:
         # the artifact stores shard-partitioned packs; re-placement (and

@@ -22,6 +22,16 @@ DEFAULT_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
 PRUNE_RECIPES = ("none", "oneshot", "tied")
 BACKENDS = ("plan", "bsr", "dense", "auto")
 PARTITIONS = ("tp", "dp", "tp+dp")
+#: admission-queue backpressure policies (ServingEngine(overflow=...),
+#: docs/API.md §Engine robustness). With a bounded queue (max_queue):
+#:   'reject'     -- the NEW submission is shed (structured FailureReason,
+#:                   never enqueued) -- the load-balancer-friendly default;
+#:   'shed-oldest'-- the oldest queued request is shed to make room (fresh
+#:                   traffic beats stale traffic whose client likely gave
+#:                   up);
+#:   'block'      -- submit() drives engine steps until the queue drains
+#:                   below the bound (single-process ingest throttling).
+OVERFLOW_POLICIES = ("reject", "shed-oldest", "block")
 #: pack-sharding mesh support: the plan path shards by construction
 #: (ShardedPlan), dense serves through GSPMD param sharding, and 'auto'
 #: chooses between exactly those two; 'bsr' has no sharded layout.

@@ -135,6 +135,49 @@ def test_cache_v1_file_invalidates_without_crash(tmp_path):
     assert not c2.cache_hit
 
 
+@pytest.mark.parametrize("payload", [
+    b"",                                              # empty file
+    b"\x00\x9c\xffgarbage\x81",                       # binary garbage
+    b"[1, 2, 3]",                                     # JSON, wrong shape
+    b'"just a string"',
+    b'{"version": 2, "entries": [1, 2]}',             # entries not a dict
+    b'{"version": 2, "entries": {"k": "notadict"}}',  # record not a dict
+    b'{"version": 2, "entries": {"k": {"backend": "dense"}',  # truncated
+])
+def test_cache_corrupt_file_reads_empty_and_is_rewritten(tmp_path, payload):
+    """Robustness contract: ANY unparseable/malformed winner cache reads as
+    empty (worst case: re-measure), and the next put() rewrites the file as
+    valid current-version JSON -- never a crash, never a poisoned read."""
+    import json
+    path = tmp_path / "at.json"
+    path.write_bytes(payload)
+    cache = AutotuneCache(str(path))
+    assert cache.get("anything") is None            # no crash, a miss
+    cache.put("k2", {"backend": "plan"})            # rewrite heals the file
+    doc = json.loads(path.read_text())
+    assert doc["version"] == autotune.CACHE_VERSION
+    assert doc["entries"]["k2"] == {"backend": "plan"}
+    # well-formed sibling entries survive a merge; malformed ones are
+    # dropped rather than re-persisted
+    assert all(isinstance(v, dict) for v in doc["entries"].values())
+    fresh = AutotuneCache(str(path))
+    assert fresh.get("k2") == {"backend": "plan"}
+
+
+def test_cache_corrupt_file_end_to_end_choose(tmp_path):
+    """choose_backend over a corrupt cache file: tunes from scratch,
+    persists, and a second chooser over the healed file gets a hit."""
+    path = tmp_path / "at.json"
+    path.write_bytes(b"\x89PNG not a json file at all")
+    pk = _pack()
+    c1 = choose_backend(pk, m=32, candidates=("dense", "plan"),
+                        cache=AutotuneCache(str(path)), stub=True)
+    assert not c1.cache_hit
+    c2 = choose_backend(pk, m=32, candidates=("dense", "plan"),
+                        cache=AutotuneCache(str(path)), stub=True)
+    assert c2.cache_hit and c2.backend == c1.backend
+
+
 def test_stub_mode_is_deterministic(tmp_path):
     pk = _pack()
     costs1 = stub_costs(pk, 128, autotune.CANDIDATES)

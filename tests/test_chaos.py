@@ -1,0 +1,368 @@
+"""Chaos suite: deterministic fault injection across the serving stack
+(repro/runtime/chaos.py) and the invariants that must survive every fault
+class:
+
+  * no leaked or cross-contaminated slots (free + active always partition
+    the slot space; a recycled slot behaves like a fresh cache);
+  * queue conservation -- every submit() ends in EXACTLY ONE of
+    done / failed / cancelled / shed;
+  * blast-radius containment -- requests not targeted by a fault finish
+    with BIT-IDENTICAL token streams to an uninjected reference run
+    (per-slot compute is batch-row independent);
+  * the engine stays serving after every fault (a fresh request completes
+    with reference tokens).
+
+Plus the loader robustness satellite: a truncated/corrupt ``packs.npz``
+raises :class:`ServableLoadError` naming the offending leaf, and the
+``servable.load_packs`` chaos site can corrupt the artifact a load is
+about to trust.
+"""
+import zipfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerKind, ModelConfig
+from repro.models import init_model
+from repro.runtime.chaos import (SITE_ALLOC, SITE_LOAD_PACKS, SITE_PREFILL,
+                                 SITE_SYNC, SITE_TRAIN_STEP, SITE_WINDOW,
+                                 ChaosInjector, FaultInjector, Watchdog,
+                                 poison_slot, straggle)
+from repro.serving import (FailureReason, ServableLoadError, ServingSpec,
+                           TERMINAL_STATES, load_servable, prepare_servable)
+
+ATTN_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo")
+
+
+def _cfg():
+    return ModelConfig(
+        arch="chaos-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        pattern=(LayerKind("attn", "dense"),), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def servable():
+    cfg = _cfg()
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    return prepare_servable(params, cfg, ServingSpec(
+        tile=(16, 16), sparsity=0.5, prune="oneshot", targets=ATTN_TARGETS))
+
+
+def _prompts(n):
+    rng = np.random.RandomState(3)
+    return [rng.randint(0, 256, (rng.randint(4, 9),)).tolist()
+            for _ in range(n)]
+
+
+def _reference_tokens(servable, prompts, max_new=6, sync_every=3):
+    eng = servable.engine(max_slots=2, cache_len=64, sync_every=sync_every)
+    hs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run()
+    assert all(h.done for h in hs)
+    return [list(h.tokens) for h in hs]
+
+
+# --------------------------------------------------------------------------
+# injector + watchdog mechanics
+# --------------------------------------------------------------------------
+
+def test_injector_fires_deterministically_on_nth_hit():
+    chaos = ChaosInjector()
+    chaos.inject("site.a", at=2, exc=RuntimeError("boom"))
+    chaos.fire("site.a")                    # hit 1: armed but not at N
+    with pytest.raises(RuntimeError, match="boom"):
+        chaos.fire("site.a")                # hit 2: fires
+    chaos.fire("site.a")                    # hit 3: spent
+    assert chaos.count("site.a") == 3
+    assert chaos.fired("site.a") == 1
+    assert [e.occurrence for e in chaos.log] == [2]
+
+
+def test_injector_action_sees_ctx_and_times_window():
+    chaos = ChaosInjector()
+    seen = []
+    chaos.inject("site.b", at=2, times=2, action=lambda ctx: seen.append(
+        ctx["payload"]))
+    for i in range(5):
+        chaos.fire("site.b", payload=i)
+    assert seen == [1, 2]                   # hits 2 and 3 (0-indexed payload)
+    assert chaos.fired("site.b") == 2
+
+
+def test_fault_injector_shim_raises_once_per_step():
+    inj = FaultInjector(fail_at_steps=[3])
+    for step in (1, 2):
+        inj.maybe_fail(step)
+    with pytest.raises(RuntimeError, match="step 3"):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)                       # replayed step: fires once only
+    assert inj.chaos.count(SITE_TRAIN_STEP) == 4
+
+
+def test_watchdog_detects_and_fires_once_per_section():
+    import time
+    events = []
+    dog = Watchdog(0.03, on_stall=lambda label, s: events.append(label),
+                   poll_s=0.005)
+    try:
+        dog.arm("slow")
+        time.sleep(0.12)
+        assert dog.disarm() > 0.03
+        dog.arm("fast")
+        elapsed = dog.disarm()
+        assert elapsed < 0.03
+        time.sleep(0.03)                    # disarmed: nothing fires
+        assert events == ["slow"]
+        assert len(dog.stalls) == 1 and dog.stalls[0][0] == "slow"
+    finally:
+        dog.close()
+
+
+# --------------------------------------------------------------------------
+# engine fault classes (parametrized against an uninjected reference)
+# --------------------------------------------------------------------------
+
+def _arm(chaos, fault):
+    """Arm one named fault class; returns the FailureReason code the
+    TARGETED request must fail with (None = no request should fail)."""
+    if fault == "alloc":
+        chaos.inject(SITE_ALLOC, at=2, exc=MemoryError("no slot memory"))
+        return FailureReason.PREFILL_ERROR
+    if fault == "prefill":
+        chaos.inject(SITE_PREFILL, at=2, exc=RuntimeError("bad prefill"))
+        return FailureReason.PREFILL_ERROR
+    if fault == "nan-window":
+        chaos.inject(SITE_WINDOW, at=2, action=poison_slot())
+        return FailureReason.NONFINITE_LOGITS
+    if fault == "window-error":
+        chaos.inject(SITE_WINDOW, at=2, exc=RuntimeError("device lost"))
+        return FailureReason.ENGINE_ERROR
+    if fault == "straggler":
+        chaos.inject(SITE_SYNC, at=1, action=straggle(0.05))
+        return None
+    raise AssertionError(fault)
+
+
+@pytest.mark.parametrize(
+    "fault", ["alloc", "prefill", "nan-window", "window-error", "straggler"])
+def test_engine_survives_fault_class(servable, fault):
+    """Every fault class: structured failures for targeted requests only,
+    bit-identical tokens for everyone else, no slot leaks, queue conserved,
+    engine reusable."""
+    prompts = _prompts(4)
+    ref = _reference_tokens(servable, prompts)
+    chaos = ChaosInjector()
+    code = _arm(chaos, fault)
+    eng = servable.engine(max_slots=2, cache_len=64, sync_every=3,
+                          chaos=chaos)
+    hs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    eng.run()
+
+    # queue conservation: every submit reached exactly one terminal state
+    for h in hs:
+        assert h.status in TERMINAL_STATES
+    failed = [h for h in hs if h.status == "failed"]
+    if code is None:
+        assert not failed
+    else:
+        assert failed, f"fault {fault!r} never failed a request"
+        for h in failed:
+            assert h.failure is not None and h.failure.code == code
+        assert chaos.fired() >= 1
+    # blast radius: untargeted requests match the uninjected run exactly
+    for h, want in zip(hs, ref):
+        if h.status == "done":
+            assert h.tokens == want, (fault, h.req_id)
+    # window-error fails only the requests in flight at that window;
+    # later admissions (the queue at the time) must still complete
+    if fault == "window-error":
+        assert len(failed) <= 2 and sum(h.done for h in hs) >= 2
+    # no leaked / duplicated slots
+    eng.verify_invariants()
+    assert eng.n_free == eng.max_slots and eng.n_active == 0
+    assert (eng.stats.completed + eng.stats.failed + eng.stats.cancelled
+            + eng.stats.shed == len(hs))
+
+    # the engine keeps serving after the fault: fresh submissions (one of
+    # them over a previously-faulted slot) reproduce the reference
+    again = [eng.submit(p, max_new_tokens=6) for p in prompts[:2]]
+    eng.run()
+    for h, want in zip(again, ref[:2]):
+        assert h.done and h.tokens == want
+
+
+def test_slot_hygiene_under_mid_step_exception(servable):
+    """A failure mid-step() leaks nothing: freed == fresh, and the SAME
+    engine serves the failed request's prompt to reference tokens."""
+    prompts = _prompts(2)
+    ref = _reference_tokens(servable, prompts)
+    chaos = ChaosInjector()
+    chaos.inject(SITE_PREFILL, at=1, exc=RuntimeError("first admission"))
+    eng = servable.engine(max_slots=2, cache_len=64, sync_every=3,
+                          chaos=chaos)
+    hs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    eng.run()
+    assert hs[0].status == "failed"
+    assert hs[0].failure.code == FailureReason.PREFILL_ERROR
+    assert hs[1].done and hs[1].tokens == ref[1]
+    eng.verify_invariants()
+    assert eng.n_free == eng.max_slots
+    retry = eng.submit(prompts[0], max_new_tokens=6)
+    eng.run()
+    assert retry.done and retry.tokens == ref[0]
+    assert eng.stats.prefills == 2          # failed admission never counted
+
+
+# --------------------------------------------------------------------------
+# loader robustness (ServableLoadError satellite)
+# --------------------------------------------------------------------------
+
+def _saved(servable, tmp_path):
+    path = str(tmp_path / "sv")
+    servable.save(path)
+    return path
+
+
+def test_load_servable_truncated_packs(servable, tmp_path):
+    path = _saved(servable, tmp_path)
+    npz = tmp_path / "sv" / "step_000000000" / "packs.npz"
+    raw = npz.read_bytes()
+    npz.write_bytes(raw[: len(raw) // 3])
+    with pytest.raises(ServableLoadError, match="packs.npz"):
+        load_servable(path)
+
+
+def test_load_servable_missing_leaf_is_named(servable, tmp_path):
+    path = _saved(servable, tmp_path)
+    npz = tmp_path / "sv" / "step_000000000" / "packs.npz"
+    with np.load(npz) as f:
+        arrays = {k: f[k] for k in f.files}
+    victim = sorted(k for k in arrays if k.endswith("_col_idx"))[0]
+    del arrays[victim]
+    np.savez(npz, **arrays)
+    with pytest.raises(ServableLoadError, match=victim):
+        load_servable(path)
+
+
+def test_load_servable_corrupt_leaf_is_named(servable, tmp_path):
+    """Bit-flip one member's compressed payload in place: np.load opens
+    fine (lazy decompression), but reading that leaf must surface a
+    ServableLoadError naming it -- not a zlib traceback."""
+    path = _saved(servable, tmp_path)
+    npz = tmp_path / "sv" / "step_000000000" / "packs.npz"
+    with zipfile.ZipFile(npz) as z:
+        victim = sorted(n for n in z.namelist() if "col_idx" in n)[0]
+        info = z.getinfo(victim)
+    raw = bytearray(npz.read_bytes())
+    # corrupt bytes inside the member's data area (past its local header)
+    start = info.header_offset + 80
+    for i in range(start, min(start + 64, len(raw))):
+        raw[i] ^= 0xFF
+    npz.write_bytes(bytes(raw))
+    with pytest.raises(ServableLoadError,
+                       match=victim.removesuffix(".npy")):
+        load_servable(path)
+
+
+def test_load_servable_chaos_site_corrupts_bytes(servable, tmp_path):
+    """The servable.load_packs site fires with the archive path BEFORE the
+    bytes are trusted; a chaos action that corrupts them there must yield
+    a structured load error, not a crash deeper in the codec."""
+    path = _saved(servable, tmp_path)
+    chaos = ChaosInjector()
+
+    def corrupt(ctx):
+        with open(ctx["path"], "r+b") as f:
+            f.truncate(16)
+    chaos.inject(SITE_LOAD_PACKS, at=1, action=corrupt)
+    with pytest.raises(ServableLoadError):
+        load_servable(path, chaos=chaos)
+    assert chaos.fired(SITE_LOAD_PACKS) == 1
+
+
+def test_load_servable_missing_meta(tmp_path):
+    with pytest.raises(ServableLoadError, match="meta"):
+        load_servable(str(tmp_path / "nothing-here"))
+
+
+# --------------------------------------------------------------------------
+# sharded (TP) lifecycle: the robustness layer over a mesh engine
+# --------------------------------------------------------------------------
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+ALL_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
+               "ffn/wi", "ffn/wg", "ffn/wo")
+
+
+def _tp_cfg():
+    return ModelConfig(
+        arch="tp-chaos-smoke", family="dense", n_layers=2, d_model=256,
+        n_heads=8, n_kv_heads=8, head_dim=32, d_ff=1024, vocab_size=1024,
+        pattern=(LayerKind("attn", "dense"),), dtype="float32")
+
+
+@needs8
+def test_tp_engine_lifecycle_and_quarantine():
+    """Deadline / cancel / preemption / backpressure / NaN-quarantine all
+    hold on the tensor-parallel sharded path (mesh_shape=(1, 8)), with the
+    unaffected slots bit-identical to an uninjected sharded run."""
+    import time
+    cfg = _tp_cfg()
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    sv = prepare_servable(params, cfg, ServingSpec(
+        tile=(32, 32), sparsity=0.7, prune="tied", targets=ALL_TARGETS,
+        mesh_shape=(1, 8), partition="tp"))
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, 1024, (rng.randint(4, 8),)).tolist()
+               for _ in range(3)]
+
+    ref_eng = sv.engine(max_slots=3, cache_len=64, sync_every=2)
+    refs = [ref_eng.submit(p, max_new_tokens=6) for p in prompts]
+    ref_eng.run()
+    assert all(h.done for h in refs)
+    ref = [list(h.tokens) for h in refs]
+
+    # NaN quarantine on the sharded cache
+    eng = sv.engine(max_slots=3, cache_len=64, sync_every=2)
+    hs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    eng.step()
+    eng.corrupt_slot(hs[1].slot)
+    eng.run()
+    assert hs[1].status == "failed"
+    assert hs[1].failure.code == FailureReason.NONFINITE_LOGITS
+    assert hs[0].done and hs[0].tokens == ref[0]
+    assert hs[2].done and hs[2].tokens == ref[2]
+    eng.verify_invariants()
+    retry = eng.submit(prompts[1], max_new_tokens=6)
+    eng.run()
+    assert retry.done and retry.tokens == ref[1]
+
+    # deadline + cancel + preemption + backpressure on one sharded engine
+    eng2 = sv.engine(max_slots=1, cache_len=64, sync_every=2,
+                     max_queue=2, overflow="reject")
+    victim = eng2.submit(prompts[0], max_new_tokens=6, priority=0)
+    eng2.step()
+    assert victim.status == "active"
+    vip = eng2.submit(prompts[1], max_new_tokens=6, priority=5)
+    late = eng2.submit(prompts[2], max_new_tokens=6, deadline_s=0.0)
+    shed = eng2.submit(prompts[2], max_new_tokens=6)
+    assert shed.status == "shed"
+    time.sleep(0.005)
+    eng2.step()                             # preempt victim, admit vip
+    assert victim.n_preempted == 1
+    cancelled = eng2.submit(prompts[2], max_new_tokens=6)
+    assert eng2.cancel(cancelled)
+    eng2.run()
+    assert vip.done and vip.tokens == ref[1]
+    assert victim.done and victim.tokens == ref[0]   # resume == unpreempted
+    assert late.status == "failed"
+    assert late.failure.code == FailureReason.DEADLINE
+    assert cancelled.status == "cancelled"
+    eng2.verify_invariants()
+    assert (eng2.stats.completed + eng2.stats.failed + eng2.stats.cancelled
+            + eng2.stats.shed == 5)

@@ -315,13 +315,28 @@ def test_engine_callbacks_and_eos():
 
 
 def test_engine_rejects_bad_requests():
+    """Invalid requests are rejected AT SUBMISSION with a structured
+    FailureReason (never a late prefill/decode crash); submit() does not
+    raise for request-level problems."""
     cfg = get_config("deepseek_7b", smoke=True)
     servable = _servable(cfg)
     eng = servable.engine(max_slots=1, cache_len=16)
-    with pytest.raises(ValueError):
-        eng.submit([], max_new_tokens=4)
-    with pytest.raises(ValueError):
-        eng.submit([1, 2, 3], max_new_tokens=16)    # overflows cache_len
+    h = eng.submit([], max_new_tokens=4)
+    assert h.status == "failed" and not h.done
+    assert h.failure.code == "rejected" and "empty" in h.failure.message
+    h = eng.submit([1, 2, 3], max_new_tokens=16)    # overflows cache_len
+    assert h.status == "failed"
+    assert h.failure.code == "rejected"
+    assert "cache_len" in h.failure.message
+    h = eng.submit([1, 2, 3], max_new_tokens=0)
+    assert h.failure.code == "rejected"
+    assert eng.stats.rejected == 3 and eng.stats.failed == 3
+    # rejected handles still drain through run() (queue conservation) and
+    # a valid follow-up request is unaffected
+    ok = eng.submit([1, 2, 3], max_new_tokens=4)
+    done = eng.run()
+    assert {r.req_id for r in done} == {0, 1, 2, ok.req_id}
+    assert ok.done and len(ok.tokens) == 4
     bert = get_config("bert_base", smoke=True)
     bert_servable = prepare_servable(init_model(jax.random.PRNGKey(0), bert),
                                      bert, ServingSpec(tile=(16, 16)))

@@ -1,0 +1,331 @@
+"""Request-lifecycle robustness of the serving engine (docs/API.md §Engine
+robustness): structured submission rejection, per-request deadlines,
+cancellation, priority preemption with prefill-resume, bounded-queue
+backpressure policies, non-finite quarantine, and the stuck-window
+watchdog -- all enforced at window-sync points so the fused decode window
+stays one jitted scan.
+
+The cross-cutting invariant, asserted throughout: every submit() ends in
+EXACTLY ONE terminal state (done / failed / cancelled / shed), no slot
+leaks, and the failure of one request never perturbs the token streams of
+co-resident requests (per-slot compute is batch-row independent, so
+'unaffected' means bit-identical, not approximately equal).
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerKind, ModelConfig
+from repro.models import init_model
+from repro.runtime import chaos as chaos_mod
+from repro.serving import (FailureReason, ServingSpec, TERMINAL_STATES,
+                           prepare_servable)
+
+RNG = np.random.RandomState(7)
+
+ATTN_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo")
+
+
+def _cfg():
+    return ModelConfig(
+        arch="lifecycle-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256,
+        pattern=(LayerKind("attn", "dense"),), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def servable():
+    cfg = _cfg()
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    return prepare_servable(params, cfg, ServingSpec(
+        tile=(16, 16), sparsity=0.5, prune="oneshot", targets=ATTN_TARGETS))
+
+
+def _prompts(n, lo=4, hi=10):
+    rng = np.random.RandomState(11)
+    return [rng.randint(0, 256, (rng.randint(lo, hi),)).tolist()
+            for _ in range(n)]
+
+
+def _reference(servable, prompts, max_new=8, **kw):
+    """Uninjected greedy token streams, one engine per call (fresh slots)."""
+    eng = servable.engine(max_slots=len(prompts), cache_len=64, **kw)
+    hs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run()
+    assert all(h.done for h in hs)
+    return [list(h.tokens) for h in hs]
+
+
+def _assert_conserved(eng, handles):
+    """Queue conservation + slot hygiene after a drain."""
+    for h in handles:
+        assert h.status in TERMINAL_STATES, (h.req_id, h.status)
+    assert eng.n_active == 0 and eng.n_queued == 0
+    assert eng.n_free == eng.max_slots
+    eng.verify_invariants()
+    st = eng.stats
+    assert (st.completed + st.failed + st.cancelled + st.shed
+            == len(handles))
+
+
+# --------------------------------------------------------------------------
+# deadlines + cancellation (sync-point enforcement)
+# --------------------------------------------------------------------------
+
+def test_deadline_expires_queued_request(servable):
+    """An already-expired deadline fails the request before admission --
+    it never occupies a slot."""
+    eng = servable.engine(max_slots=1, cache_len=64, sync_every=4)
+    good = eng.submit(_prompts(1)[0], max_new_tokens=4)
+    late = eng.submit(_prompts(2)[1], max_new_tokens=4, deadline_s=0.0)
+    time.sleep(0.005)
+    eng.run()
+    assert good.done
+    assert late.status == "failed"
+    assert late.failure.code == FailureReason.DEADLINE
+    assert late.tokens == [] and late.n_generated == 0
+    assert eng.stats.deadline_misses == 1
+    _assert_conserved(eng, [good, late])
+
+
+def test_deadline_expires_active_request_between_windows(servable):
+    """Deadline enforcement on an IN-FLIGHT request happens at the next
+    window-sync point: tokens generated so far stay on the handle, the
+    slot frees, co-resident requests are untouched (fused sync_every>1)."""
+    [ref] = _reference(servable, _prompts(1), max_new=12)
+    eng = servable.engine(max_slots=2, cache_len=64, sync_every=3)
+    other = eng.submit(_prompts(1)[0], max_new_tokens=12)
+    doomed = eng.submit(_prompts(2)[1], max_new_tokens=12, deadline_s=60.0)
+    assert eng.step()                       # admit both + one fused window
+    assert doomed.status == "active" and doomed.n_generated > 0
+    partial = list(doomed.tokens)
+    doomed.deadline_at = time.monotonic() - 1.0     # force expiry
+    eng.run()
+    assert doomed.status == "failed"
+    assert doomed.failure.code == FailureReason.DEADLINE
+    assert doomed.tokens[:len(partial)] == partial
+    assert other.done and other.tokens == ref      # bit-identical neighbor
+    _assert_conserved(eng, [other, doomed])
+
+
+def test_cancel_queued_and_active(servable):
+    [ref] = _reference(servable, _prompts(1), max_new=10)
+    eng = servable.engine(max_slots=1, cache_len=64, sync_every=2)
+    running = eng.submit(_prompts(1)[0], max_new_tokens=10)
+    queued = eng.submit(_prompts(2)[1], max_new_tokens=10)
+    # queued: cancels immediately, before ever holding a slot
+    assert eng.cancel(queued)
+    assert queued.status == "cancelled" and queued.slot == -1
+    assert queued.failure.code == FailureReason.CANCELLED
+    # active: flagged now, honored at the next sync point
+    assert eng.step()
+    got = running.n_generated
+    assert running.status == "active" and got > 0
+    assert eng.cancel(running)
+    assert running.status == "active"       # not yet -- sync-point action
+    eng.step()
+    assert running.status == "cancelled"
+    assert running.tokens == ref[:len(running.tokens)]  # kept partial output
+    assert len(running.tokens) >= got
+    # terminal handles cannot be re-cancelled
+    assert not eng.cancel(running) and not eng.cancel(queued)
+    assert eng.stats.cancelled == 2
+    _assert_conserved(eng, [running, queued])
+    # the engine is still serving after cancellations
+    again = eng.submit(_prompts(1)[0], max_new_tokens=10)
+    eng.run()
+    assert again.done and again.tokens == ref
+
+
+# --------------------------------------------------------------------------
+# priority + preemption
+# --------------------------------------------------------------------------
+
+def test_priority_orders_admission(servable):
+    """Higher priority admits first; FIFO within a class."""
+    order = []
+    eng = servable.engine(max_slots=1, cache_len=64, sync_every=2)
+    hs = [eng.submit(p, max_new_tokens=3, priority=pr,
+                     on_done=lambda rid, toks: order.append(rid))
+          for p, pr in zip(_prompts(4), (0, 1, 0, 1))]
+    eng.run()
+    assert all(h.done for h in hs)
+    assert order == [hs[1].req_id, hs[3].req_id, hs[0].req_id, hs[2].req_id]
+
+
+def test_preemption_resumes_via_prefill(servable):
+    """A strictly-higher-priority submission evicts the low-priority
+    in-flight request; the victim resumes by prefilling prompt + generated
+    tokens and its final greedy stream is EXACTLY the uninterrupted one."""
+    prompts = _prompts(2)
+    [ref_victim, ref_vip] = [_reference(servable, [p], max_new=10)[0]
+                             for p in prompts]
+    eng = servable.engine(max_slots=1, cache_len=64, sync_every=2)
+    victim = eng.submit(prompts[0], max_new_tokens=10, priority=0)
+    eng.step()                              # admit + 1 window (2 tokens)
+    assert victim.status == "active" and 0 < victim.n_generated < 10
+    vip = eng.submit(prompts[1], max_new_tokens=10, priority=5)
+    eng.step()                              # sync point: preempt + admit vip
+    assert vip.status == "active"
+    assert victim.status == "queued" and victim.slot == -1
+    assert victim.n_preempted == 1
+    eng.verify_invariants()
+    eng.run()
+    assert vip.done and vip.tokens == ref_vip
+    assert victim.done and victim.tokens == ref_victim
+    assert eng.stats.preemptions == 1
+    _assert_conserved(eng, [victim, vip])
+
+
+def test_equal_priority_never_preempts(servable):
+    eng = servable.engine(max_slots=1, cache_len=64, sync_every=2)
+    first = eng.submit(_prompts(1)[0], max_new_tokens=6, priority=3)
+    eng.step()
+    second = eng.submit(_prompts(2)[1], max_new_tokens=6, priority=3)
+    eng.run()
+    assert first.done and second.done
+    assert eng.stats.preemptions == 0
+    assert first.n_preempted == 0
+
+
+# --------------------------------------------------------------------------
+# bounded queue + backpressure policies
+# --------------------------------------------------------------------------
+
+def test_overflow_reject_sheds_new_submission(servable):
+    eng = servable.engine(max_slots=1, cache_len=64, max_queue=2,
+                          overflow="reject")
+    hs = [eng.submit(p, max_new_tokens=3) for p in _prompts(4)]
+    # cap 2, no steps in between: hs[0]/hs[1] fill the queue, both later
+    # submissions are shed at the door (the queued traffic is untouched)
+    assert [h.status for h in hs] == ["queued", "queued", "shed", "shed"]
+    assert hs[2].failure.code == FailureReason.QUEUE_FULL
+    eng.run()
+    assert [h.done for h in hs] == [True, True, False, False]
+    assert eng.stats.shed == 2
+    _assert_conserved(eng, hs)
+
+
+def test_overflow_shed_oldest_keeps_fresh_traffic(servable):
+    eng = servable.engine(max_slots=1, cache_len=64, max_queue=2,
+                          overflow="shed-oldest")
+    hs = [eng.submit(p, max_new_tokens=3) for p in _prompts(4)]
+    # cap 2, no steps in between: each of hs[2]/hs[3] sheds the OLDEST
+    # queued request to make room -- stale traffic loses to fresh traffic
+    assert [h.status for h in hs] == ["shed", "shed", "queued", "queued"]
+    assert hs[0].failure.code == FailureReason.QUEUE_FULL
+    eng.run()
+    assert [h.done for h in hs] == [False, False, True, True]
+    assert eng.stats.shed == 2
+    _assert_conserved(eng, hs)
+
+
+def test_overflow_block_drains_instead_of_shedding(servable):
+    eng = servable.engine(max_slots=1, cache_len=64, max_queue=1,
+                          overflow="block", sync_every=2)
+    hs = [eng.submit(p, max_new_tokens=3) for p in _prompts(4)]
+    eng.run()
+    assert all(h.done for h in hs)
+    assert eng.stats.shed == 0 and eng.stats.rejected == 0
+    _assert_conserved(eng, hs)
+
+
+def test_overflow_policy_validated():
+    cfg = _cfg()
+    sv = prepare_servable(init_model(jax.random.PRNGKey(1), cfg), cfg,
+                          ServingSpec(tile=(16, 16), sparsity=0.5,
+                                      prune="oneshot",
+                                      targets=ATTN_TARGETS))
+    with pytest.raises(ValueError):
+        sv.engine(max_slots=1, overflow="drop-all")
+    with pytest.raises(ValueError):
+        sv.engine(max_slots=1, max_queue=0)
+
+
+# --------------------------------------------------------------------------
+# non-finite quarantine
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sync_every", [1, 4])
+def test_nonfinite_quarantine_isolates_one_slot(servable, sync_every):
+    """NaN-poisoning one slot's cache fails exactly that request with a
+    structured reason; co-resident requests finish BIT-IDENTICAL to an
+    uninjected run, and the quarantined slot recycles cleanly."""
+    prompts = _prompts(3)
+    ref = _reference(servable, prompts, max_new=8, sync_every=sync_every)
+    eng = servable.engine(max_slots=3, cache_len=64, sync_every=sync_every)
+    hs = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    eng.step()                              # admit all three + first window
+    victim = hs[1]
+    assert victim.status == "active"
+    eng.corrupt_slot(victim.slot)
+    eng.run()
+    assert victim.status == "failed"
+    assert victim.failure.code == FailureReason.NONFINITE_LOGITS
+    assert hs[0].done and hs[0].tokens == ref[0]
+    assert hs[2].done and hs[2].tokens == ref[2]
+    _assert_conserved(eng, hs)
+    # freed == fresh: a new request over the quarantined slot reproduces
+    # the fresh-engine reference exactly
+    again = eng.submit(prompts[1], max_new_tokens=8)
+    eng.run()
+    assert again.done and again.tokens == ref[1]
+
+
+def test_prefill_failure_is_isolated_to_its_request(servable):
+    """An admission/prefill blow-up fails ONLY its own request with a
+    structured reason; the slot is restored and the engine keeps
+    serving."""
+    chaos = chaos_mod.ChaosInjector()
+    eng = servable.engine(max_slots=2, cache_len=64, sync_every=2,
+                          chaos=chaos)
+    # inject an exception-based prefill failure for the 2nd admission
+    chaos.inject(chaos_mod.SITE_PREFILL, at=2,
+                 exc=RuntimeError("injected prefill blow-up"))
+    ok = eng.submit(_prompts(1)[0], max_new_tokens=4)
+    bad = eng.submit(_prompts(2)[1], max_new_tokens=4)
+    eng.run()
+    assert ok.done
+    assert bad.status == "failed"
+    assert bad.failure.code == FailureReason.PREFILL_ERROR
+    assert "injected prefill blow-up" in bad.failure.message
+    _assert_conserved(eng, [ok, bad])
+
+
+# --------------------------------------------------------------------------
+# watchdog
+# --------------------------------------------------------------------------
+
+def test_watchdog_detects_straggler_window(servable):
+    """An artificial straggler sync (chaos ``straggle``) trips the armed
+    watchdog; the request still completes (detection-only)."""
+    stalls = []
+    chaos = chaos_mod.ChaosInjector()
+    chaos.inject(chaos_mod.SITE_SYNC, at=1,
+                 action=chaos_mod.straggle(0.25))
+    eng = servable.engine(max_slots=1, cache_len=64, sync_every=2,
+                          watchdog_timeout_s=0.05, chaos=chaos,
+                          on_stall=lambda label, s: stalls.append((label, s)))
+    try:
+        h = eng.submit(_prompts(1)[0], max_new_tokens=4)
+        eng.run()
+        assert h.done
+        assert eng.stats.watchdog_stalls >= 1
+        assert stalls and stalls[0][0] == "decode-window"
+        assert stalls[0][1] > 0.05
+    finally:
+        eng.close()
+
+
+def test_watchdog_quiet_on_healthy_engine(servable):
+    eng = servable.engine(max_slots=2, cache_len=64, sync_every=2,
+                          watchdog_timeout_s=30.0)
+    try:
+        hs = [eng.submit(p, max_new_tokens=4) for p in _prompts(3)]
+        eng.run()
+        assert all(h.done for h in hs)
+        assert eng.stats.watchdog_stalls == 0
+    finally:
+        eng.close()
