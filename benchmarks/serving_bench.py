@@ -425,6 +425,155 @@ def run_chaos(emit=print, smoke=False, write_json=True, arms=None):
     return results
 
 
+def run_kv_memory(emit=print, smoke=False, write_json=True, arms=None):
+    """The paged-KV memory cells (docs/API.md §Paged KV + prefix cache):
+
+      * per-request KV bytes -- dense reserves a full ``cache_len`` slot
+        per request; paged reserves ``ceil((len + max_new) / page_size)``
+        pages, so short requests stop paying for the worst case.
+      * max concurrent requests at a FIXED KV byte budget -- the dense
+        engine's whole cache allocation is taken as the budget, a paged
+        pool of exactly that many bytes serves a mixed-length burst, and
+        the peak concurrently-active count is measured (not derived).
+      * shared-system-prompt workload -- every request repeats one system
+        prompt; the radix prefix cache turns the repeats into page reuse.
+        Reports the prefix-hit rate and the measured mean/p50 TTFT against
+        the dense arm (same requests, full prefill each).
+
+    All cells ride the same servable; the engine's ``kv_layout`` kwarg
+    picks the layout so both arms share weights, packs and jit caches."""
+    cfg = _bert_sized_lm(smoke)
+    bp = _bench_params(smoke)
+    cache_len, max_new = bp["cache_len"], bp["max_new"]
+    slots = 4 if smoke else 8
+    rng = np.random.RandomState(4)
+    arms = arms or _build_arms(cfg, emit)
+    servable = arms["sparse"]
+    V = cfg.vocab_size
+
+    def fresh(layout, **kw):
+        return servable.engine(max_slots=slots, cache_len=cache_len,
+                               sync_every=4, kv_layout=layout, **kw)
+
+    # -- cell 1: per-request KV bytes -----------------------------------
+    eng_d = fresh("dense")
+    eng_p = fresh("paged")
+    kv_d, kv_p = eng_d.kv_stats(), eng_p.kv_stats()
+    ps = kv_p["page_size"]
+    from repro.serving.paging import pages_needed
+    mixed_lens = [max(2, int(L)) for L in
+                  np.linspace(4, cache_len - max_new, 8)]
+    per_req_paged = [pages_needed(L + max_new, ps) * kv_p["bytes_per_page"]
+                     for L in mixed_lens]
+    bytes_cell = {
+        "dense_bytes_per_request": kv_d["kv_bytes_per_slot"],
+        "paged_bytes_per_request_mixed": per_req_paged,
+        "paged_mean_bytes_per_request": int(np.mean(per_req_paged)),
+        "page_size": ps, "bytes_per_page": kv_p["bytes_per_page"],
+        "mixed_prompt_lens": mixed_lens, "max_new_tokens": max_new,
+    }
+    emit(f"KV bytes/request: dense {kv_d['kv_bytes_per_slot']}, paged "
+         f"mean {bytes_cell['paged_mean_bytes_per_request']} over mixed "
+         f"lens {mixed_lens[0]}..{mixed_lens[-1]}")
+    eng_d.close(), eng_p.close()
+
+    # -- cell 2: max concurrency at the dense engine's byte budget -------
+    budget = kv_d["kv_bytes_total"]
+    pool_pages = max(1, budget // kv_p["bytes_per_page"])
+    eng = servable.engine(max_slots=4 * slots, cache_len=cache_len,
+                          sync_every=4, kv_layout="paged",
+                          kv_pool_pages=pool_pages, max_queue=None)
+    burst, peak = [], 0
+    for i in range(4 * slots):
+        L = mixed_lens[i % len(mixed_lens)]
+        burst.append(eng.submit(rng.randint(0, V, (L,)),
+                                max_new_tokens=max_new))
+    while eng.step():
+        peak = max(peak, eng.n_active)
+    assert all(r.done for r in burst)
+    concurrency_cell = {
+        "kv_byte_budget": budget, "pool_pages": pool_pages,
+        "dense_max_concurrent": slots,      # budget / full-slot bytes
+        "paged_peak_concurrent": peak,
+        "paged_peak_pages_used": eng.kv_stats()["peak_pages_used"],
+    }
+    emit(f"max concurrent @ {budget} KV bytes: dense {slots}, "
+         f"paged {peak} (peak pages {concurrency_cell['paged_peak_pages_used']}"
+         f"/{pool_pages})")
+    eng.close()
+
+    # -- cell 3: shared-system-prompt workload ---------------------------
+    # exactly `slots` requests: all admit in the first schedule pass, so
+    # TTFT measures admission (prefill) latency, not queue wait behind
+    # decode throughput -- the decode tax shows in tokens_per_s instead
+    system = rng.randint(0, V, (cache_len // 2,)).tolist()
+    tails = [rng.randint(0, V, (3,)).tolist() for _ in range(slots)]
+    results = {}
+    for name in ("dense", "paged"):
+        # warm the jit caches off-clock: two shared-prefix requests so the
+        # paged arm compiles BOTH admission paths (full prefill + insert,
+        # then match + restore + suffix prefill at the tail bucket)
+        warm = fresh(name)
+        warm.submit(system + tails[0], max_new_tokens=max_new)
+        warm.submit(system + tails[1], max_new_tokens=max_new)
+        warm.run()
+        warm.close()
+        eng = fresh(name, max_queue=None)
+        first_tok = {}
+        t0 = time.perf_counter()
+        reqs = [eng.submit(system + tail, max_new_tokens=max_new,
+                           on_token=lambda rid, tok: first_tok.setdefault(
+                               rid, time.perf_counter() - t0))
+                for tail in tails]
+        eng.run()
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        st = eng.stats
+        kv = eng.kv_stats()
+        ttfts = sorted(first_tok[r.req_id] for r in reqs)
+        prompt_tokens = sum(len(system) + len(t) for t in tails)
+        results[name] = [{
+            "slots": slots, "requests": len(reqs), "sync_every": 4,
+            "tokens": st.tokens_generated, "seconds": round(dt, 4),
+            "tokens_per_s": round(st.tokens_generated / dt, 2),
+            "prompt_tokens": prompt_tokens,
+            "prefilled_tokens": kv["prefilled_tokens"],
+            "prefix_hit_tokens": kv["prefix_hit_tokens"],
+            "prefix_hit_rate": round(
+                kv["prefix_hit_tokens"] / prompt_tokens, 4),
+            "prefill_s": round(st.prefill_s, 4),
+            # the paged decode tax (per-step page gather) lives here
+            "decode_ms_per_step": round(
+                1e3 * st.decode_s / max(st.steps, 1), 2),
+            "ttft_mean_ms": round(1e3 * float(np.mean(ttfts)), 2),
+            "ttft_p50_ms": round(1e3 * ttfts[len(ttfts) // 2], 2),
+        }]
+        c = results[name][0]
+        emit(f"{name:8s} shared-prompt: hit rate {c['prefix_hit_rate']:.0%} "
+             f"ttft mean {c['ttft_mean_ms']:.1f} ms  "
+             f"prefilled {c['prefilled_tokens']}/{prompt_tokens} tok  "
+             f"{c['tokens_per_s']:.1f} tok/s")
+    ttft_reduction = round(
+        1.0 - results["paged"][0]["ttft_mean_ms"] /
+        results["dense"][0]["ttft_mean_ms"], 4)
+    emit(f"prefix sharing TTFT reduction vs dense: {ttft_reduction:+.2%}")
+
+    if write_json:
+        section = "kv_memory_smoke" if smoke else "kv_memory"
+        path = update_bench_json(section, {
+            "model": cfg.arch, "layers": cfg.n_layers,
+            "d_model": cfg.d_model, "sparsity": SPARSITY,
+            "tile": list(TILE), "cache_len": cache_len,
+            "max_new_tokens": max_new,
+            "bytes_per_request": bytes_cell,
+            "fixed_budget_concurrency": concurrency_cell,
+            "results": results,
+            "ttft_reduction_vs_dense": ttft_reduction,
+        }, path=bench_path())
+        emit(f"wrote {section} section to {path}")
+    return results
+
+
 def main(argv):
     smoke = "--smoke" in argv
     write_json = "--no-json" not in argv
@@ -443,6 +592,7 @@ def main(argv):
     run_fused(smoke=smoke, write_json=write_json, sync_sweep=sweep,
               arms=arms)
     run_chaos(smoke=smoke, write_json=write_json, arms=arms)
+    run_kv_memory(smoke=smoke, write_json=write_json, arms=arms)
     run_sharded(smoke=smoke, write_json=write_json, mesh_sweep=mesh_sweep)
 
 

@@ -24,9 +24,16 @@ Compare with examples/serve_bert_sparse.py (batched *encoder* serving):
 this demo is the decode-side counterpart the paper's runtime argument
 ultimately cares about -- concurrency without per-request graphs.
 
+``--kv-layout paged`` serves the same burst from a paged KV pool with
+radix prefix sharing; add ``--shared-prefix 32`` to give every request
+one shared system prompt and watch ``stats_dict()['kv']`` report pool
+utilization and the prompt tokens served from shared pages instead of
+prefill (docs/API.md §Paged KV + prefix cache).
+
 Run:  PYTHONPATH=src python examples/serve_lm_engine.py
           [--arch deepseek_7b] [--slots 4] [--requests 10] [--max-new 12]
           [--sync-every 8] [--temperature 0.8] [--top-k 40] [--tp N]
+          [--kv-layout paged] [--kv-page-size 16] [--shared-prefix 32]
 """
 import argparse
 import time
@@ -57,6 +64,15 @@ def main():
                     help="tensor-parallel shards: serve over a (1, N) mesh "
                          "(needs N visible devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV storage: 'paged' = page-pool KV + radix "
+                         "prefix sharing (docs/API.md §Paged KV)")
+    ap.add_argument("--kv-page-size", type=int, default=16)
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend one shared N-token system prompt to every "
+                         "request -- with --kv-layout paged the prefix cache "
+                         "serves the repeats from shared pages")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -65,7 +81,8 @@ def main():
     servable = prepare_servable(params, cfg, ServingSpec(
         tile=(16, 16), sparsity=args.sparsity, prune="oneshot",
         targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo"),
-        mesh_shape=(1, args.tp) if args.tp > 1 else None, partition="tp"))
+        mesh_shape=(1, args.tp) if args.tp > 1 else None, partition="tp",
+        kv_layout=args.kv_layout, kv_page_size=args.kv_page_size))
     st = servable.stats()
     print(f"sparse export: {st['packed_projections']} packed projections, "
           f"density {st['density']:.2f}" if st["density"] is not None
@@ -96,11 +113,17 @@ def main():
         print(f"  request {rid}: done, {len(toks)} tokens -> {toks[:8]}"
               f"{'...' if len(toks) > 8 else ''}")
 
+    system = rng.randint(0, cfg.vocab_size,
+                         (args.shared_prefix,)).tolist()
     print(f"submitting {args.requests} requests "
-          f"(prompts 3..18 tokens) into {args.slots} slots...")
+          f"(prompts 3..18 tokens"
+          + (f" after a shared {len(system)}-token system prompt"
+             if system else "")
+          + f") into {args.slots} slots...")
     handles = []
     for i in range(args.requests):
-        prompt = rng.randint(0, cfg.vocab_size, (3 + (5 * i) % 16,)).tolist()
+        prompt = system + rng.randint(
+            0, cfg.vocab_size, (3 + (5 * i) % 16,)).tolist()
         handles.append(engine.submit(prompt, max_new_tokens=args.max_new,
                                      on_token=on_token, on_done=on_done))
 
@@ -119,6 +142,20 @@ def main():
           f"{dict(s.bucket_hits)}")
     print(f"wall-clock breakdown: prefill {s.prefill_s:.2f}s, decode "
           f"{s.decode_s:.2f}s, host-sync {s.sync_s:.2f}s")
+    kv = engine.stats_dict()["kv"]
+    if kv["layout"] == "paged":
+        print(f"kv pool: {kv['pages_used']}/{kv['n_pages']} pages used "
+              f"(peak {kv['peak_pages_used']}, "
+              f"page_size {kv['page_size']}, "
+              f"utilization {kv['utilization']:.1%}), "
+              f"{kv['kv_bytes_used']}/{kv['kv_bytes_total']} bytes")
+        print(f"prefix sharing: {kv['prefix_hit_tokens']} prompt tokens "
+              f"served from shared pages, {kv['prefilled_tokens']} "
+              f"prefilled, {kv['prefix_cached_pages']} pages cached, "
+              f"{kv['page_resumes']} page-retained resumes")
+    else:
+        print(f"kv (dense slots): {kv['kv_bytes_total']} bytes total, "
+              f"{kv['kv_bytes_per_slot']} per slot")
 
 
 if __name__ == "__main__":

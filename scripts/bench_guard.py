@@ -23,8 +23,12 @@ import sys
 #: engine_chaos tracks the lifecycle-overhead cell (baseline vs
 #: robustness-armed engine over the same servable) -- warn-only, so a PR
 #: that moves lifecycle checks onto the per-token path surfaces here
+#: kv_memory tracks the shared-system-prompt workload (dense vs paged
+#: prefix-sharing arms) by tok/s -- warn-only like the rest; its byte and
+#: concurrency cells are informational (no tok/s, so compare() skips them)
 SECTIONS = ("engine_smoke", "engine", "engine_fused_smoke", "engine_fused",
             "engine_chaos_smoke", "engine_chaos",
+            "kv_memory_smoke", "kv_memory",
             "sharded_smoke", "sharded")
 
 

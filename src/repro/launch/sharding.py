@@ -116,6 +116,16 @@ _CACHE_MODEL_DIM = {
     "cross_k": 3, "cross_v": 3,  # stacked (L, B, T, Hkv, D) handled by lead
 }
 
+#: paged-KV pool leaves: axis 0 (+lead) is PHYSICAL PAGES -- one shared id
+#: space across the pool, never sharded (and never the dp batch dim); only
+#: the kv-head / latent-rank dim goes over "model", mirroring the dense
+#: rules above. page_table / pos_map stay replicated int32 bookkeeping.
+_PAGE_POOL_MODEL_DIM = {
+    "k_pages": 2, "v_pages": 2,      # (N, ps, Hkv, D) -> kv heads
+    "c_kv_pages": 2,                 # (N, ps, r) -> latent rank
+    "k_rope_pages": None,            # (N, ps, dr) shared rope key: replicated
+}
+
 
 def spec_for_cache(name: str, shape, mesh) -> P:
     sizes = _sizes(mesh)
@@ -131,6 +141,16 @@ def spec_for_cache(name: str, shape, mesh) -> P:
                  or "self" in toks) else 0
     if short.startswith("cross"):
         lead = 1
+    if short == "page_table":
+        return P(*([None] * ndim))
+    if short.endswith("_pages"):
+        spec = [None] * ndim
+        mdim = _PAGE_POOL_MODEL_DIM.get(short)
+        if mdim is not None:
+            d = mdim + lead
+            if d < ndim and _div(shape, d, "model", sizes):
+                spec[d] = "model"
+        return P(*spec)
     spec = [None] * ndim
     bdim = lead
     if bdim < ndim and shape[bdim] % dp_size == 0 and shape[bdim] >= dp_size:

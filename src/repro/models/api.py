@@ -40,12 +40,18 @@ def model_forward(params, cfg: ModelConfig, batch, packs=None):
     return lm_mod.forward(params, cfg, batch["tokens"], packs=packs)
 
 
-def init_cache(params, cfg: ModelConfig, batch_size, cache_len, frames=None):
+def init_cache(params, cfg: ModelConfig, batch_size, cache_len, frames=None,
+               paged=None):
+    """``paged`` (models.common.PagedLayout or None): page-pool storage for
+    linear attention/MLA KV (lm-family only; serving/paging.py owns the
+    allocator that hands out page ids)."""
     if cfg.family == "audio":
+        if paged is not None:
+            raise ValueError("paged KV is not supported for family 'audio'")
         return encdec_mod.init_cache(params, cfg, frames, cache_len)
     if cfg.family == "bert":
         raise ValueError("encoder-only arch has no decode step")
-    return lm_mod.init_cache(cfg, batch_size, cache_len)
+    return lm_mod.init_cache(cfg, batch_size, cache_len, paged=paged)
 
 
 def cache_shardings(cache, mesh):
@@ -204,3 +210,31 @@ def write_slot(cache, cfg: ModelConfig, slot, sub):
 def read_slot(cache, cfg: ModelConfig, slot):
     """Extract ``slot`` as a batch-1 cache (write_slot's inverse)."""
     return _slot_mod(cfg).read_slot(cache, slot)
+
+
+def write_slot_paged(cache, cfg: ModelConfig, slot, sub, page_row):
+    """Insert a dense batch-1 prefill result into paged slot ``slot``,
+    scattering KV rows into the physical pages named by ``page_row``
+    (lm-family paged caches only; see lm.write_slot_paged)."""
+    if cfg.family in ("audio", "bert"):
+        raise ValueError(f"no paged slots for family {cfg.family!r}")
+    return lm_mod.write_slot_paged(cache, slot, sub, page_row)
+
+
+def restore_slot_paged(cache, cfg: ModelConfig, slot, page_row, resume_len):
+    """Re-attach retained pages to ``slot`` after preemption (bit-exact,
+    zero prefill; see lm.restore_slot_paged)."""
+    if cfg.family in ("audio", "bert"):
+        raise ValueError(f"no paged slots for family {cfg.family!r}")
+    return lm_mod.restore_slot_paged(cache, slot, page_row, resume_len)
+
+
+def prefill_suffix(params, cache, cfg: ModelConfig, tokens, slot, start,
+                   length=None, packs=None):
+    """Prefill only the suffix of a prompt whose first ``start`` tokens are
+    already resident in paged slot ``slot`` (prefix-cache hit). Pure
+    global-attention paged configs only (see lm.prefill_suffix)."""
+    if cfg.family in ("audio", "bert"):
+        raise ValueError(f"no one-pass prefill for family {cfg.family!r}")
+    return lm_mod.prefill_suffix(params, cache, cfg, tokens, slot, start,
+                                 length, packs=packs)

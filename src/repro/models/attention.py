@@ -15,7 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import apply_rope, init_linear, linear, normal_init
+from repro.models.common import (apply_rope, init_linear, linear, normal_init,
+                                 paged_bulk_write, paged_row_write, paged_view)
 
 NEG_INF = -1e30
 
@@ -43,11 +44,15 @@ def _masked_row_write(buf, rows, slot, val, active):
 
 def slot_reset_value(path, x_slice):
     """Reset value for one cache leaf's slot slice (tree_map_with_path
-    callback): ``pos_map`` slots empty out to -1, everything else --
-    attention KV, quant scales, SSM state, RG-LRU h, conv history -- to 0.
-    Shared by every family's ``reset_slot`` (lm.py, encdec.py)."""
+    callback): ``pos_map`` and ``page_table`` slots empty out to -1,
+    everything else -- attention KV, quant scales, SSM state, RG-LRU h,
+    conv history -- to 0. Shared by every family's ``reset_slot`` (lm.py,
+    encdec.py). Page-pool leaves (``*_pages``) never reach this callback:
+    their leading axis is physical pages, not slots, so the slot ops skip
+    them (lm.reset_slot)."""
     name = getattr(path[-1], "key", None)
-    return jnp.full_like(x_slice, -1 if name == "pos_map" else 0)
+    return jnp.full_like(
+        x_slice, -1 if name in ("pos_map", "page_table") else 0)
 
 
 def prefill_slot_sources(t, length, s):
@@ -346,6 +351,34 @@ def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0):
     return out.reshape(b, 1, hq, d)
 
 
+def masked_attention(q, k, v, ok):
+    """Materialized-scores attention under an explicit boolean mask ``ok``
+    (B, S, T): q (B,S,Hq,D) vs k/v (B,T,Hkv,D). The paged *suffix prefill*
+    path uses this to attend new prompt tokens against a gathered page view
+    holding a shared (radix-cache) prefix -- ``ok[b, s, t]`` encodes the
+    per-position causal mask ``0 <= kv_pos[t] <= q_pos[s]`` that
+    ``decode_attention`` applies for S == 1."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    scores = jnp.where(ok[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p.astype(v.dtype), v)
+    return out.reshape(b, s, hq, d)
+
+
+def paged_suffix_positions(pos_map_len, start, length):
+    """pos_map row after a suffix prefill of ``length`` real tokens starting
+    at absolute position ``start`` on a slot whose shared-prefix pages
+    already cover positions 0..start-1: every position below start + length
+    is occupied (slot == position in a linear paged cache)."""
+    ar = jnp.arange(pos_map_len)
+    return jnp.where(ar < start + length, ar, -1)
+
+
 # ---------------------------------------------------------------------------
 # the GQA attention layer (projections + rope + cache plumbing)
 # ---------------------------------------------------------------------------
@@ -363,14 +396,35 @@ def init_attention(key, cfg):
     return p
 
 
-def init_cache_attn(cfg, batch, cache_len, window=0, dtype=None):
+def init_cache_attn(cfg, batch, cache_len, window=0, dtype=None, paged=None):
     """Linear cache for global layers, ring cache (len=window) for local.
     ``pos_map`` is (batch, T): each request slot tracks its own occupancy so
     slots at different positions batch into one decode call. With
     cfg.kv_cache_quant, K/V are stored int8 with per-(slot, head) scales
-    (dequantized tile-wise inside attention)."""
+    (dequantized tile-wise inside attention).
+
+    ``paged`` (a ``models.common.PagedLayout``) switches GLOBAL layers to
+    the pooled layout: K/V live in (n_pages, page_size, Hkv, D) page pools
+    addressed through a per-slot ``page_table`` (batch, T // page_size) of
+    physical page ids (-1 = unmapped); ``pos_map`` keeps its dense (batch,
+    T) form, so the decode masking -- and therefore the attention math --
+    is unchanged. Ring caches (window > 0) stay slot-dense: their per-slot
+    footprint is already bounded by the window, and ring content depends on
+    total sequence length, which breaks prefix-granular page sharing."""
     t = min(cache_len, window) if window > 0 else cache_len
     dtype = dtype or cfg.jdtype
+    if paged is not None and window == 0:
+        if cfg.kv_cache_quant:
+            raise NotImplementedError(
+                "kv_layout='paged' does not compose with kv_cache_quant yet"
+                " (int8 page pools + per-page scales are future work)")
+        npg = paged.table_width(cache_len)
+        pshape = (paged.n_pages, paged.page_size, cfg.n_kv_heads,
+                  cfg.head_dim)
+        return {"k_pages": jnp.zeros(pshape, dtype),
+                "v_pages": jnp.zeros(pshape, dtype),
+                "page_table": jnp.full((batch, npg), -1, jnp.int32),
+                "pos_map": jnp.full((batch, t), -1, jnp.int32)}
     shape = (batch, t, cfg.n_kv_heads, cfg.head_dim)
     if cfg.kv_cache_quant:
         return {"k": jnp.zeros(shape, jnp.int8),
@@ -421,12 +475,27 @@ def _write_prefill_kv(cache, k, v, length):
 
 def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
                     packs=None, causal=True, kv_override=None,
-                    prefill_len=None):
+                    prefill_len=None, page_slot=None, page_start=None):
     """x: (B,S,d). Returns (out, new_cache). Train/prefill when cache is None.
     With a cache and S > 1, the call is a *prompt prefill*: normal causal
     attention over the S tokens plus a bulk cache write of positions
     0..prefill_len-1 (prefill_len defaults to S; tokens past it are padding
     and leave no trace -- serving/engine.py buckets prompt lengths).
+
+    A PAGED cache (leaf carries ``k_pages``/``v_pages``/``page_table``;
+    init_cache_attn(paged=...)) serves two extra modes:
+      * decode (S == 1): the new K/V row scatters into the slot's current
+        page (jit OOB-drop masking) and attention runs over a gathered
+        slot-contiguous page view -- elementwise identical to the dense
+        cache array, so decode stays bit-exact vs the dense oracle;
+      * suffix prefill (S > 1 with ``page_slot``/``page_start``): x holds
+        ONE slot's new prompt tokens at absolute positions page_start..;
+        their K/V scatter into the slot's (already-installed) pages and
+        the queries attend over the page view, whose low pages hold a
+        shared radix-cache prefix that was never re-prefilled. Whole-cache
+        prefill on a paged layout is not defined -- the engine prefills
+        into a dense batch-1 sub-cache and page-scatters it instead
+        (lm.write_slot_paged).
 
     kv_override: (k, v) tensors for cross-attention (enc-dec).
 
@@ -466,6 +535,37 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
                        rotary_fraction=cfg.rotary_fraction)
 
     new_cache = cache
+    paged = cache is not None and "k_pages" in cache
+    if paged and s > 1:
+        if page_slot is None:
+            raise NotImplementedError(
+                "whole-cache prompt prefill is undefined for a paged KV "
+                "layout; prefill a dense batch-1 sub-cache and insert it "
+                "with write_slot_paged, or pass page_slot/page_start for a "
+                "shared-prefix suffix prefill")
+        assert kv_override is None and b == 1
+        n, ps = cache["k_pages"].shape[0], cache["k_pages"].shape[1]
+        npg = cache["page_table"].shape[1]
+        length = s if prefill_len is None else prefill_len
+        start = jnp.asarray(page_start, jnp.int32)
+        pt_row = cache["page_table"][page_slot]                  # (NP,)
+        pos_i = start + jnp.arange(s)
+        validw = jnp.arange(s) < length
+        pp = pt_row[jnp.clip(pos_i // ps, 0, npg - 1)]
+        pp = jnp.where(validw & (pp >= 0), pp, n)                # OOB: drop
+        kp = cache["k_pages"].at[pp, pos_i % ps].set(k[0])
+        vp = cache["v_pages"].at[pp, pos_i % ps].set(v[0])
+        pm_row = paged_suffix_positions(npg * ps, start, length)
+        pm = cache["pos_map"].at[page_slot].set(pm_row)
+        new_cache = {"k_pages": kp, "v_pages": vp, "pos_map": pm,
+                     "page_table": cache["page_table"]}
+        k_view = paged_view(kp, pt_row[None], pm_row[None])      # (1,T,H,D)
+        v_view = paged_view(vp, pt_row[None], pm_row[None])
+        qpos = pos_i[None, :, None]                              # (1,S,1)
+        ok = (pm_row[None, None, :] >= 0) & (pm_row[None, None, :] <= qpos)
+        out = masked_attention(q, k_view, v_view, ok)
+        out = linear(p["wo"], _merge_heads(out), packs and packs.get("wo"))
+        return out, new_cache
     if cache is None or s > 1:
         if not causal:
             out = full_attention(q, k, v, causal=False) if s <= 2048 else \
@@ -483,6 +583,21 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
             assert kv_override is None, "prefill is self-attention only"
             new_cache = _write_prefill_kv(
                 cache, k, v, s if prefill_len is None else prefill_len)
+    elif paged:
+        assert s == 1 and pos is not None and kv_override is None
+        posv = as_slot_positions(pos, b)
+        active = posv >= 0
+        pt = cache["page_table"]
+        kp = paged_row_write(cache["k_pages"], pt, posv, k[:, 0], active)
+        vp = paged_row_write(cache["v_pages"], pt, posv, v[:, 0], active)
+        pm = _masked_row_write(cache["pos_map"], jnp.arange(b),
+                               jnp.maximum(posv, 0), jnp.maximum(posv, 0),
+                               active)
+        new_cache = {"k_pages": kp, "v_pages": vp, "pos_map": pm,
+                     "page_table": pt}
+        k_view = paged_view(kp, pt, pm)
+        v_view = paged_view(vp, pt, pm)
+        out = decode_attention(q, k_view, v_view, pm, posv, window=window)
     else:
         assert s == 1 and pos is not None
         if kv_override is None:

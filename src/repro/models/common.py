@@ -166,6 +166,88 @@ def prefill_conv_history(x, valid, length, width, dtype):
         padded, jnp.asarray(length, jnp.int32), width, axis=1).astype(dtype)
 
 
+# -- paged KV primitives ------------------------------------------------------
+#
+# A paged cache replaces per-slot contiguous KV storage (B, T, ...) with a
+# pool of fixed-size pages (n_pages, page_size, ...) plus a per-slot page
+# table (B, T // page_size) of physical page ids (-1 = unmapped). The
+# serving engine owns allocation (repro/serving/paging.py); the model layer
+# only needs the three pure device ops below. Index discipline: -1 must
+# never reach a device gather/scatter directly (JAX wraps negative indices);
+# gathers clip into range and mask by pos_map, scatters map invalid rows to
+# n_pages (out of bounds HIGH), which jit scatter semantics DROP.
+
+import dataclasses as _dataclasses
+
+
+@_dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static paging geometry threaded into ``init_cache``: a pool of
+    ``n_pages`` pages of ``page_size`` positions each, addressed through
+    per-slot page tables covering ``cache_len // page_size`` entries."""
+
+    page_size: int
+    n_pages: int
+
+    def __post_init__(self):
+        if self.page_size < 1 or self.n_pages < 1:
+            raise ValueError(f"bad paged layout: page_size={self.page_size} "
+                             f"n_pages={self.n_pages}")
+
+    def table_width(self, cache_len: int) -> int:
+        if cache_len % self.page_size:
+            raise ValueError(
+                f"cache_len={cache_len} not divisible by "
+                f"page_size={self.page_size}")
+        return cache_len // self.page_size
+
+
+def paged_view(pages, page_table, pos_map):
+    """Gather a slot-contiguous (B, T, ...) view out of a page pool.
+
+    ``pages``: (N, ps, ...); ``page_table``: (B, NP) int32 page ids (-1 =
+    unmapped); ``pos_map``: (B, T = NP*ps) absolute positions (-1 = empty).
+    Unmapped/unwritten positions read as EXACT zeros -- the view is then
+    elementwise identical to the dense slot cache the same writes would
+    have produced (dense caches zero-init and zero-reset), which is what
+    makes the paged decode path bit-exact against the dense oracle."""
+    b, npg = page_table.shape
+    n, ps = pages.shape[0], pages.shape[1]
+    safe = jnp.clip(page_table, 0, n - 1)            # gather: clip, mask below
+    view = pages[safe]                               # (B, NP, ps, ...)
+    view = view.reshape((b, npg * ps) + pages.shape[2:])
+    keep = (pos_map >= 0).reshape((b, npg * ps) + (1,) * (pages.ndim - 2))
+    return jnp.where(keep, view, jnp.zeros_like(view))
+
+
+def paged_row_write(pages, page_table, positions, val, active):
+    """Scatter one new position per batch row into the pool: row ``i``'s
+    value lands in page ``page_table[i, positions[i] // ps]`` at offset
+    ``positions[i] % ps``. Inactive/unmapped rows are redirected to page id
+    ``n_pages`` -- out of bounds, so the jit scatter DROPS them (the paged
+    analogue of attention._masked_row_write)."""
+    n, ps = pages.shape[0], pages.shape[1]
+    npg = page_table.shape[1]
+    posv = jnp.maximum(positions, 0)
+    rows = jnp.arange(page_table.shape[0])
+    pp = page_table[rows, jnp.clip(posv // ps, 0, npg - 1)]
+    pp = jnp.where(active & (pp >= 0), pp, n)        # OOB-high => dropped
+    return pages.at[pp, posv % ps].set(val)
+
+
+def paged_bulk_write(pages, page_row, vals):
+    """Scatter a slot-contiguous tensor into the pool pages of ONE slot:
+    ``vals`` (NP*ps, ...) reshaped to (NP, ps, ...) lands page-wise at the
+    ids in ``page_row`` (NP,); entries < 0 (unallocated table slots) are
+    redirected out of bounds and dropped. Used to insert a dense batch-1
+    prefill result into a slot's pages -- every allocated page is fully
+    (re)written, so recycled pages cannot leak stale state."""
+    n, ps = pages.shape[0], pages.shape[1]
+    npg = page_row.shape[0]
+    dst = jnp.where(page_row >= 0, page_row, n)
+    return pages.at[dst].set(vals.reshape((npg, ps) + pages.shape[2:]))
+
+
 def init_mlp(key, d_model, d_ff, act="swiglu", dtype=jnp.float32):
     k1, k2, k3 = jax.random.split(key, 3)
     if act in ("swiglu", "geglu"):

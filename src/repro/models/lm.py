@@ -27,7 +27,7 @@ from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
 from repro.models.common import (apply_mlp, apply_norm, init_mlp, init_norm,
-                                 normal_init)
+                                 normal_init, paged_bulk_write)
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +86,8 @@ def init_lm(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def _apply_layer(p, h, cfg, kind: LayerKind, *, positions, cache=None,
-                 pos=None, packs=None, prefill_len=None):
+                 pos=None, packs=None, prefill_len=None, page_slot=None,
+                 page_start=None):
     hn = apply_norm(p["norm1"], h, cfg.norm)
     aux = jnp.zeros((), jnp.float32)
     mix_packs = _layer_packs(packs, "attn") or _layer_packs(packs, "mixer")
@@ -94,7 +95,8 @@ def _apply_layer(p, h, cfg, kind: LayerKind, *, positions, cache=None,
         out, new_mix_cache = attn.apply_attention(
             p["attn"], hn, cfg, positions=positions, window=kind.window,
             cache=cache.get("mix") if cache else None, pos=pos,
-            packs=mix_packs, prefill_len=prefill_len)
+            packs=mix_packs, prefill_len=prefill_len, page_slot=page_slot,
+            page_start=page_start)
     elif kind.mixer == "mla":
         out, new_mix_cache = mla_mod.apply_mla(
             p["attn"], hn, cfg, positions=positions,
@@ -192,11 +194,13 @@ def forward(params, cfg: ModelConfig, tokens, *, mm_embeds=None, packs=None):
 # decode
 # ---------------------------------------------------------------------------
 
-def _init_layer_cache(cfg, kind: LayerKind, batch, cache_len):
+def _init_layer_cache(cfg, kind: LayerKind, batch, cache_len, paged=None):
     if kind.mixer in ("attn", "local"):
-        return {"mix": attn.init_cache_attn(cfg, batch, cache_len, kind.window)}
+        return {"mix": attn.init_cache_attn(cfg, batch, cache_len, kind.window,
+                                            paged=paged)}
     if kind.mixer == "mla":
-        return {"mix": mla_mod.init_cache_mla(cfg, batch, cache_len)}
+        return {"mix": mla_mod.init_cache_mla(cfg, batch, cache_len,
+                                              paged=paged)}
     if kind.mixer == "ssm":
         return {"mix": ssm_mod.init_cache_ssm(cfg, batch)}
     if kind.mixer == "rglru":
@@ -204,17 +208,21 @@ def _init_layer_cache(cfg, kind: LayerKind, batch, cache_len):
     raise ValueError(kind.mixer)
 
 
-def init_cache(cfg: ModelConfig, batch, cache_len):
+def init_cache(cfg: ModelConfig, batch, cache_len, paged=None):
+    """``paged`` (models.common.PagedLayout or None) switches every linear
+    (window == 0) attention/MLA layer onto page-pool storage; ring caches and
+    SSM/RgLRU state stay slot-dense regardless (their footprint is O(window)
+    or O(1) per slot, so paging them buys nothing)."""
     prefix, pattern, n_periods, suffix = cfg.layer_plan()
     def stack(kind):
-        one = _init_layer_cache(cfg, kind, batch, cache_len)
+        one = _init_layer_cache(cfg, kind, batch, cache_len, paged)
         return jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), one)
     return {
-        "prefix": tuple(_init_layer_cache(cfg, k, batch, cache_len)
+        "prefix": tuple(_init_layer_cache(cfg, k, batch, cache_len, paged)
                         for k in prefix),
         "blocks": tuple(stack(k) for k in pattern) if n_periods > 0 else (),
-        "suffix": tuple(_init_layer_cache(cfg, k, batch, cache_len)
+        "suffix": tuple(_init_layer_cache(cfg, k, batch, cache_len, paged)
                         for k in suffix),
     }
 
@@ -241,15 +249,25 @@ def _map_slot_sections(fn0, fn1, *caches):
     }
 
 
+def _is_pool_leaf(path):
+    """True for ``*_pages`` leaves, whose axis 0 is *physical pages*, not
+    request slots -- a slot-indexed op on them would corrupt page ``slot``."""
+    name = getattr(path[-1], "key", None)
+    return isinstance(name, str) and name.endswith("_pages")
+
+
 def reset_slot(cache, slot):
     """Zero request slot ``slot``: attention KV + pos_map AND the SSM/RgLRU
     recurrent and conv state, so a recycled slot cannot leak its previous
-    request. Returns the updated cache (functional)."""
+    request. Page pools are skipped (page hygiene is the allocator's job:
+    ``pos_map``/``page_table`` reset to -1 here makes stale page content
+    unreachable). Returns the updated cache (functional)."""
     reset = attn.slot_reset_value
     mp = jax.tree_util.tree_map_with_path
-    f0 = lambda c: mp(lambda p, x: x.at[slot].set(reset(p, x[slot])), c)
-    f1 = lambda c: mp(
-        lambda p, x: x.at[:, slot].set(reset(p, x[:, slot])), c)
+    f0 = lambda c: mp(lambda p, x: x if _is_pool_leaf(p)
+                      else x.at[slot].set(reset(p, x[slot])), c)
+    f1 = lambda c: mp(lambda p, x: x if _is_pool_leaf(p)
+                      else x.at[:, slot].set(reset(p, x[:, slot])), c)
     return {"prefix": tuple(f0(c) for c in cache["prefix"]),
             "blocks": tuple(f1(c) for c in cache["blocks"]),
             "suffix": tuple(f0(c) for c in cache["suffix"])}
@@ -267,6 +285,86 @@ def read_slot(cache, slot):
     """Extract slot ``slot`` as a batch-1 cache (the write_slot inverse)."""
     return _map_slot_sections(lambda x: x[slot:slot + 1],
                               lambda x: x[:, slot:slot + 1], cache)
+
+
+# pool leaf -> the dense batch-1 sub-cache leaf that feeds it
+_POOL_SRC = {"k_pages": "k", "v_pages": "v",
+             "c_kv_pages": "c_kv", "k_rope_pages": "k_rope"}
+
+
+def write_slot_paged(cache, slot, sub, page_row):
+    """Insert a *dense* batch-1 prefill result ``sub`` into paged slot
+    ``slot``: each pool leaf scatters the sub-cache rows page-by-page into
+    the physical pages named by ``page_row`` (int32 (n_pages_per_slot,),
+    -1 = unallocated -> dropped), the slot's ``page_table`` row becomes
+    ``page_row`` and ``pos_map`` copies over. Every *allocated* page is
+    fully written (sub content beyond the prompt is zeros), so recycled
+    pages cannot leak stale or poisoned values. Non-paged leaves (rings,
+    SSM/RgLRU state) take the ordinary dense slot write."""
+    def ins(c, s, axis):
+        m, ms = c["mix"], s["mix"]
+        if "page_table" not in m:
+            if axis == 0:
+                return jax.tree_util.tree_map(
+                    lambda x, y: x.at[slot].set(y[0]), c, s)
+            return jax.tree_util.tree_map(
+                lambda x, y: x.at[:, slot].set(y[:, 0]), c, s)
+        out = {}
+        for name, x in m.items():
+            if name in _POOL_SRC:
+                y = ms[_POOL_SRC[name]]
+                if axis == 0:
+                    out[name] = paged_bulk_write(x, page_row, y[0])
+                else:                       # (P, n_pages, ps, ...) pools
+                    out[name] = jax.vmap(
+                        lambda pg, vl: paged_bulk_write(pg, page_row, vl)
+                    )(x, y[:, 0])
+            elif name == "page_table":
+                if axis == 0:
+                    out[name] = x.at[slot].set(page_row)
+                else:
+                    out[name] = x.at[:, slot].set(jnp.broadcast_to(
+                        page_row, (x.shape[0],) + page_row.shape))
+            else:                           # pos_map: plain dense insert
+                out[name] = (x.at[slot].set(ms[name][0]) if axis == 0
+                             else x.at[:, slot].set(ms[name][:, 0]))
+        return {"mix": out}
+    return {"prefix": tuple(ins(c, s, 0) for c, s in
+                            zip(cache["prefix"], sub["prefix"])),
+            "blocks": tuple(ins(c, s, 1) for c, s in
+                            zip(cache["blocks"], sub["blocks"])),
+            "suffix": tuple(ins(c, s, 0) for c, s in
+                            zip(cache["suffix"], sub["suffix"]))}
+
+
+def restore_slot_paged(cache, slot, page_row, resume_len):
+    """Re-attach retained pages to slot ``slot`` after a preemption: write
+    ``page_row`` back into the slot's page table and mark positions
+    0..resume_len-1 live in ``pos_map``. Page *content* was never touched
+    (refcounts held the pages out of the free list), so this restores the
+    victim bit-exactly with zero prefill work. Paged layers only -- the
+    engine gates retention to configs where every layer is paged."""
+    def rst(c, axis):
+        m = c["mix"]
+        if "page_table" not in m:
+            return c
+        t = m["pos_map"].shape[-1]
+        ar = jnp.arange(t)
+        pm_row = jnp.where(ar < resume_len, ar, -1).astype(jnp.int32)
+        out = dict(m)
+        if axis == 0:
+            out["page_table"] = m["page_table"].at[slot].set(page_row)
+            out["pos_map"] = m["pos_map"].at[slot].set(pm_row)
+        else:
+            p = m["page_table"].shape[0]
+            out["page_table"] = m["page_table"].at[:, slot].set(
+                jnp.broadcast_to(page_row, (p,) + page_row.shape))
+            out["pos_map"] = m["pos_map"].at[:, slot].set(
+                jnp.broadcast_to(pm_row, (p, t)))
+        return {"mix": out}
+    return {"prefix": tuple(rst(c, 0) for c in cache["prefix"]),
+            "blocks": tuple(rst(c, 1) for c in cache["blocks"]),
+            "suffix": tuple(rst(c, 0) for c in cache["suffix"])}
 
 
 def decode_step(params, cache, cfg: ModelConfig, token, pos, *, packs=None):
@@ -313,6 +411,67 @@ def decode_step(params, cache, cfg: ModelConfig, token, pos, *, packs=None):
         h, c, _ = _apply_layer(params["suffix"][i], h, cfg, kind,
                                positions=positions, cache=cache["suffix"][i],
                                pos=pos, packs=_layer_packs(packs, f"suffix/{i}"))
+        new_suffix.append(c)
+
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = jnp.einsum("bsd,vd->bsv", h, head,
+                        preferred_element_type=jnp.float32)
+    new_cache = {"prefix": tuple(new_prefix), "blocks": new_blocks,
+                 "suffix": tuple(new_suffix)}
+    return logits, new_cache
+
+
+def prefill_suffix(params, cache, cfg: ModelConfig, tokens, slot, start,
+                   length=None, *, packs=None):
+    """Prefill only the *suffix* ``tokens`` (1, S) of a prompt whose first
+    ``start`` tokens are already resident in paged slot ``slot`` of the
+    batched ``cache`` (a prefix-cache hit): each layer scatters the suffix
+    KV at absolute positions start..start+length-1 into the slot's pages
+    and attends over shared-prefix + suffix with an explicit mask. Pure
+    global-attention paged configs only (the engine gates on this); sample
+    the next token from ``logits[0, length - 1]``."""
+    prefix, pattern, n_periods, suffix = cfg.layer_plan()
+    b, s = tokens.shape
+    length = s if length is None else length
+    h = jnp.take(params["embed"]["w"], tokens, axis=0)
+    if cfg.scale_embedding:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(s)[None, :]
+
+    new_prefix = []
+    for i, kind in enumerate(prefix):
+        h, c, _ = _apply_layer(params["prefix"][i], h, cfg, kind,
+                               positions=positions, cache=cache["prefix"][i],
+                               prefill_len=length, page_slot=slot,
+                               page_start=start,
+                               packs=_layer_packs(packs, f"prefix/{i}"))
+        new_prefix.append(c)
+
+    new_blocks = cache["blocks"]
+    if n_periods > 0:
+        def body(h, xs):
+            layer_ps, layer_cs = xs
+            new_cs = []
+            for i, kind in enumerate(pattern):
+                h, c, _ = _apply_layer(layer_ps[i], h, cfg, kind,
+                                       positions=positions, cache=layer_cs[i],
+                                       prefill_len=length, page_slot=slot,
+                                       page_start=start,
+                                       packs=_layer_packs(packs, f"blocks/{i}"))
+                new_cs.append(c)
+            return h, tuple(new_cs)
+        h, new_blocks = jax.lax.scan(body, h,
+                                     (params["blocks"], cache["blocks"]))
+
+    new_suffix = []
+    for i, kind in enumerate(suffix):
+        h, c, _ = _apply_layer(params["suffix"][i], h, cfg, kind,
+                               positions=positions, cache=cache["suffix"][i],
+                               prefill_len=length, page_slot=slot,
+                               page_start=start,
+                               packs=_layer_packs(packs, f"suffix/{i}"))
         new_suffix.append(c)
 
     h = apply_norm(params["final_norm"], h, cfg.norm)

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from repro.models.attention import (_masked_row_write, as_slot_positions,
                                     decode_attention, flash_attention,
                                     full_attention, prefill_slot_sources)
-from repro.models.common import apply_rope, init_linear, linear, rms_norm
+from repro.models.common import (apply_rope, init_linear, linear,
+                                 paged_row_write, paged_view, rms_norm)
 
 
 def init_mla(key, cfg):
@@ -33,8 +34,23 @@ def init_mla(key, cfg):
     }
 
 
-def init_cache_mla(cfg, batch, cache_len, dtype=None):
+def init_cache_mla(cfg, batch, cache_len, dtype=None, paged=None):
+    """Latent decode cache; ``paged`` (models.common.PagedLayout) stores the
+    latents in page pools (n_pages, page_size, r) addressed through a
+    per-slot page table, sharing ids with the attention pools (one logical
+    page serves every layer). ``pos_map`` stays dense (batch, T) so the
+    absorbed-decode masking is unchanged."""
     dtype = dtype or cfg.jdtype
+    if paged is not None:
+        npg = paged.table_width(cache_len)
+        return {"c_kv_pages": jnp.zeros(
+                    (paged.n_pages, paged.page_size, cfg.kv_lora_rank),
+                    dtype),
+                "k_rope_pages": jnp.zeros(
+                    (paged.n_pages, paged.page_size, cfg.qk_rope_dim),
+                    dtype),
+                "page_table": jnp.full((batch, npg), -1, jnp.int32),
+                "pos_map": jnp.full((batch, cache_len), -1, jnp.int32)}
     return {"c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
             "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
             "pos_map": jnp.full((batch, cache_len), -1, jnp.int32)}
@@ -73,6 +89,11 @@ def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None,
                      packs and packs.get("wo"))
         if cache is None:
             return out, None
+        if "c_kv_pages" in cache:
+            raise NotImplementedError(
+                "whole-cache prompt prefill is undefined for a paged MLA "
+                "layout; prefill a dense batch-1 sub-cache and insert it "
+                "with write_slot_paged")
         # prompt prefill: bulk-write the latent cache (linear, T >= prompt)
         t = cache["c_kv"].shape[1]
         src, slot_pos = prefill_slot_sources(
@@ -90,19 +111,37 @@ def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None,
 
     # ---- absorbed decode: score against the latent cache ----------------
     assert s == 1 and pos is not None
-    t = cache["c_kv"].shape[1]
     posv = as_slot_positions(pos, b)                    # ragged per-slot pos
     active = posv >= 0
-    slot = jnp.maximum(posv, 0) % t
     rows = jnp.arange(b)
-    c_cache = _masked_row_write(cache["c_kv"], rows, slot, c_kv[:, 0], active)
-    r_cache = _masked_row_write(cache["k_rope"], rows, slot,
-                                k_rope[:, 0, 0, :], active)
-    pm = cache["pos_map"]
-    if pm.ndim == 1:                                    # legacy shared map
-        pm = jnp.broadcast_to(pm, (b, t))
-    pm = _masked_row_write(pm, rows, slot, jnp.maximum(posv, 0), active)
-    new_cache = {"c_kv": c_cache, "k_rope": r_cache, "pos_map": pm}
+    if "c_kv_pages" in cache:
+        # paged latents: scatter the new row into the slot's current page,
+        # score against a gathered slot-contiguous view -- elementwise
+        # identical to the dense latent cache, so decode stays bit-exact
+        pt = cache["page_table"]
+        cp = paged_row_write(cache["c_kv_pages"], pt, posv, c_kv[:, 0],
+                             active)
+        rp = paged_row_write(cache["k_rope_pages"], pt, posv,
+                             k_rope[:, 0, 0, :], active)
+        pm = _masked_row_write(cache["pos_map"], rows,
+                               jnp.maximum(posv, 0), jnp.maximum(posv, 0),
+                               active)
+        c_cache = paged_view(cp, pt, pm)
+        r_cache = paged_view(rp, pt, pm)
+        new_cache = {"c_kv_pages": cp, "k_rope_pages": rp, "pos_map": pm,
+                     "page_table": pt}
+    else:
+        t = cache["c_kv"].shape[1]
+        slot = jnp.maximum(posv, 0) % t
+        c_cache = _masked_row_write(cache["c_kv"], rows, slot, c_kv[:, 0],
+                                    active)
+        r_cache = _masked_row_write(cache["k_rope"], rows, slot,
+                                    k_rope[:, 0, 0, :], active)
+        pm = cache["pos_map"]
+        if pm.ndim == 1:                                # legacy shared map
+            pm = jnp.broadcast_to(pm, (b, t))
+        pm = _masked_row_write(pm, rows, slot, jnp.maximum(posv, 0), active)
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache, "pos_map": pm}
 
     w_uk = p["w_uk"]["w"].reshape(h, dn, cfg.kv_lora_rank)    # (h, dn, r)
     q_abs = jnp.einsum("bqhd,hdr->bqhr", q_nope, w_uk)        # (b,1,h,r)

@@ -50,13 +50,16 @@ from typing import Callable, Dict, List, Optional
 __all__ = ["ChaosEvent", "ChaosInjector", "FaultInjector", "Watchdog",
            "poison_slot", "straggle",
            "SITE_ALLOC", "SITE_PREFILL", "SITE_WINDOW", "SITE_SYNC",
-           "SITE_LOAD_PACKS", "SITE_TRAIN_STEP"]
+           "SITE_PAGE_ALLOC", "SITE_LOAD_PACKS", "SITE_TRAIN_STEP"]
 
 #: serving-engine hook points (repro/serving/engine.py)
 SITE_ALLOC = "engine.alloc"
 SITE_PREFILL = "engine.prefill"
 SITE_WINDOW = "engine.window"
 SITE_SYNC = "engine.sync"
+#: paged-KV page allocation (fires before each admission's page reservation;
+#: 'raise' simulates pool exhaustion -> backpressure, never a crash)
+SITE_PAGE_ALLOC = "engine.page_alloc"
 #: servable-loader hook point (repro/serving/servable.py)
 SITE_LOAD_PACKS = "servable.load_packs"
 #: train-loop hook point (FaultInjector shim)

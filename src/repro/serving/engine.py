@@ -77,6 +77,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import logging
+import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -85,9 +86,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api as model_api
+from repro.models.common import PagedLayout
 from repro.models.sampling import sample_token_row
 from repro.runtime import chaos as chaos_mod
-from repro.serving.spec import OVERFLOW_POLICIES
+from repro.serving.paging import PagePool, PagePoolExhausted, pages_needed
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.spec import KV_LAYOUTS, OVERFLOW_POLICIES
 
 __all__ = ["EngineRequest", "EngineStats", "FailureReason", "ServingEngine",
            "TERMINAL_STATES"]
@@ -117,6 +121,7 @@ class FailureReason:
     PREFILL_ERROR = "prefill_error"      # admission/prefill raised
     NONFINITE_LOGITS = "nonfinite_logits"  # NaN/inf quarantine
     ENGINE_ERROR = "engine_error"        # decode window raised
+    KV_PAGES = "kv_pages_exhausted"      # page pool dry with no way to drain
 
     def __str__(self):
         return f"{self.code}: {self.message}" if self.message else self.code
@@ -176,6 +181,13 @@ class EngineStats:
     preemptions: int = 0
     deadline_misses: int = 0        # subset of failed/cancelled-by-deadline
     watchdog_stalls: int = 0
+    # paged-KV accounting (dense engines fill prefilled_tokens only):
+    # tokens actually run through a prefill forward (full or suffix),
+    # prompt tokens served from shared prefix pages instead, and
+    # preemption resumes that re-attached retained pages with NO prefill
+    prefilled_tokens: int = 0
+    prefix_hit_tokens: int = 0
+    page_resumes: int = 0
     bucket_hits: Dict[int, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
     # wall-clock breakdown of the serving loop (seconds): prompt prefill
@@ -200,6 +212,9 @@ class EngineStats:
                 "preemptions": self.preemptions,
                 "deadline_misses": self.deadline_misses,
                 "watchdog_stalls": self.watchdog_stalls,
+                "prefilled_tokens": self.prefilled_tokens,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "page_resumes": self.page_resumes,
                 "mean_occupancy": round(self.mean_occupancy, 3),
                 "prefill_buckets": dict(self.bucket_hits),
                 "prefill_s": round(self.prefill_s, 4),
@@ -230,7 +245,9 @@ class ServingEngine:
                  max_queue: Optional[int] = None, overflow: str = "reject",
                  watchdog_timeout_s: Optional[float] = None,
                  on_stall: Optional[Callable[[str, float], None]] = None,
-                 chaos: Optional["chaos_mod.ChaosInjector"] = None):
+                 chaos: Optional["chaos_mod.ChaosInjector"] = None,
+                 kv_layout: Optional[str] = None,
+                 kv_pool_pages: Optional[int] = None):
         if servable.cfg.family == "bert":
             raise ValueError("encoder-only arch has no decode step")
         if overflow not in OVERFLOW_POLICIES:
@@ -270,7 +287,73 @@ class ServingEngine:
                 from repro.launch.sharding import replicated
                 self._sub_template = jax.device_put(
                     self._sub_template, replicated(self.mesh))
+
+        # -- KV layout resolution: kwarg > REPRO_KV_LAYOUT env > spec ------
+        layout = kv_layout or os.environ.get("REPRO_KV_LAYOUT") \
+            or servable.spec.kv_layout
+        if layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout={layout!r} not in {KV_LAYOUTS}")
+        prefix_k, pattern_k, n_per, suffix_k = self.cfg.layer_plan()
+        kinds = list(prefix_k) + (list(pattern_k) if n_per > 0 else []) \
+            + list(suffix_k)
+        pageable = [k for k in kinds
+                    if k.mixer in ("attn", "mla") and k.window == 0]
+        if layout == "paged":
+            blocker = None
+            if self.cfg.family == "audio":
+                blocker = "family 'audio' (cross-attn caches are per-request)"
+            elif self.cfg.kv_cache_quant:
+                blocker = "kv_cache_quant (int8 page pools are future work)"
+            elif servable.spec.data_shards > 1:
+                blocker = "data-parallel mesh (page ids are a shared space)"
+            elif not pageable:
+                blocker = "no linear attention/MLA layers to page"
+            if blocker is not None:
+                log.info("kv_layout='paged' unavailable for this config "
+                         "(%s); serving dense", blocker)
+                layout = "dense"
+        self.kv_layout = layout
+        self._pool = None
+        self._prefix_cache = None
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._saved_pages: Dict[int, tuple] = {}
+        self._layout = None
+        if layout == "paged":
+            # largest page size <= spec.kv_page_size dividing cache_len (the
+            # table must tile the cache exactly); default pool capacity
+            # matches the dense worst case so parity runs are apples to
+            # apples -- kv_pool_pages shrinks it to create real pressure
+            ps = min(int(servable.spec.kv_page_size), self.cache_len)
+            while self.cache_len % ps:
+                ps -= 1
+            self.kv_page_size = ps
+            self._table_width = self.cache_len // ps
+            n_pages = int(kv_pool_pages) if kv_pool_pages is not None \
+                else self.max_slots * self._table_width
+            self._layout = PagedLayout(page_size=ps, n_pages=n_pages)
+            self._pool = PagePool(n_pages, ps)
+            self._prefix_cache = PrefixCache(self._pool, ps)
+            # prefix sharing needs the masked suffix-prefill path (pure
+            # global attention); preempt-resume page retention additionally
+            # admits MLA (restore is layout-only, no recompute)
+            self._can_share = all(k.mixer == "attn" and k.window == 0
+                                  for k in kinds)
+            self._can_retain = all(k.mixer in ("attn", "mla")
+                                   and k.window == 0 for k in kinds)
         self.cache = self._build_cache()
+        # host-side byte accounting from the real device leaves
+        self._kv_bytes_total = sum(
+            x.nbytes for x in jax.tree_util.tree_leaves(self.cache))
+        if self._pool is not None:
+            pool_bytes = 0
+            def _acc(path, x):
+                nonlocal pool_bytes
+                name = getattr(path[-1], "key", None)
+                if isinstance(name, str) and name.endswith("_pages"):
+                    pool_bytes += x.nbytes
+                return x
+            jax.tree_util.tree_map_with_path(_acc, self.cache)
+            self._pool.bytes_per_page = pool_bytes // self._pool.n_pages
 
         self._tokens = np.zeros((self.max_slots, 1), np.int32)
         self._pos = np.full((self.max_slots,), -1, np.int32)
@@ -305,6 +388,9 @@ class ServingEngine:
         (self._decode, self._decode_many, self._write_slot,
          self._free_slot) = servable.engine_fns(out_sh)
         self._prefill = servable._engine_prefill_fn()
+        if self.kv_layout == "paged":
+            (self._write_paged, self._restore_paged,
+             self._suffix_prefill) = servable.paged_engine_fns(out_sh)
 
     def _build_cache(self):
         """A fresh all-slots-free engine cache (constructor AND the
@@ -323,7 +409,8 @@ class ServingEngine:
                     x, x.shape[:1] + (self.max_slots,) + x.shape[2:]), one)
         else:
             cache = model_api.init_cache(self.servable.params, self.cfg,
-                                         self.max_slots, self.cache_len)
+                                         self.max_slots, self.cache_len,
+                                         paged=self._layout)
         if self.mesh is not None:
             # mesh-first cache: slots over "data", heads/state over "model".
             # Lifecycle ops below are pinned to these shardings, so alloc/
@@ -417,7 +504,29 @@ class ServingEngine:
         b = max(self.min_bucket, 1 << (length - 1).bit_length())
         return min(b, self.cache_len)
 
-    def _admit(self, req: EngineRequest) -> None:
+    def _admit(self, req: EngineRequest) -> bool:
+        """Admit ``req`` into a free slot. Returns True when the request was
+        CONSUMED (now active, or terminally failed) and False when it was
+        PARKED back at the queue front by paged backpressure -- the
+        scheduler must stop admitting for this sync point, or it would spin
+        on the same exhausted pool."""
+        if self.kv_layout == "paged":
+            return self._admit_paged(req)
+        return self._admit_dense(req)
+
+    def _activate(self, req: EngineRequest, slot: int, pos: int,
+                  pages: Optional[List[int]] = None) -> None:
+        """Common admission bookkeeping (dense and paged paths)."""
+        req.slot, req.pos = slot, pos
+        req.status = "active"
+        req.admit_seq = self._admit_counter
+        self._admit_counter += 1
+        self._active[slot] = req
+        self._eos[slot] = -1 if req.eos_id is None else int(req.eos_id)
+        if pages is not None:
+            self._slot_pages[slot] = pages
+
+    def _admit_dense(self, req: EngineRequest) -> bool:
         """Prefill ``req`` into a free slot. A resumed (preempted) request
         prefills over prompt + already-generated tokens, continuing exactly
         where it stopped. Any failure here fails ONLY this request: the
@@ -461,9 +570,10 @@ class ServingEngine:
                         req.req_id, type(e).__name__, e)
             self._finalize(req, "failed", FailureReason(
                 FailureReason.PREFILL_ERROR, f"{type(e).__name__}: {e}"))
-            return
+            return True
 
         self.stats.prefills += 1
+        self.stats.prefilled_tokens += length
         self.stats.bucket_hits[bucket] += 1
         if not np.all(np.isfinite(row)):
             # poisoned before the first decode: quarantine at admission
@@ -473,19 +583,176 @@ class ServingEngine:
             self._finalize(req, "failed", FailureReason(
                 FailureReason.NONFINITE_LOGITS,
                 f"non-finite prefill logits at position {length - 1}"))
-            return
+            return True
 
-        req.slot, req.pos = slot, length
-        req.status = "active"
-        req.admit_seq = self._admit_counter
-        self._admit_counter += 1
-        self._active[slot] = req
-        self._eos[slot] = -1 if req.eos_id is None else int(req.eos_id)
+        self._activate(req, slot, length)
         tok = sample_token_row(row, self._key, slot, length - 1,
                                temperature=self.temperature,
                                top_k=self.top_k)
         self.stats.prefill_s += time.perf_counter() - t0
         self._emit(req, int(tok), row)
+        return True
+
+    def _page_row(self, pages: List[int]):
+        """A slot's page-table row: ``pages`` padded to table width with -1
+        (-1 = unmapped; device scatters drop writes to unmapped pages)."""
+        row = np.full((self._table_width,), -1, np.int32)
+        row[:len(pages)] = pages
+        return jnp.asarray(row)
+
+    def _reserve_pages(self, n: int) -> List[int]:
+        """Claim ``n`` fresh pages, evicting LRU prefix-cache references
+        when the free list runs short (forfeits future hits, never touches
+        an active slot's pages). Raises PagePoolExhausted -- the paged
+        backpressure signal -- when eviction cannot cover the request."""
+        if self._chaos is not None:
+            self._chaos.fire(chaos_mod.SITE_PAGE_ALLOC, engine=self, want=n)
+        while self._pool.free_count < n and self._prefix_cache.evict(1):
+            pass
+        return self._pool.alloc(n)
+
+    def _admit_paged(self, req: EngineRequest) -> bool:
+        """Paged admission: reserve ceil((len + max_new) / page_size) pages
+        up front (the page table is static across decode windows), serve
+        the longest cached prefix from shared pages, prefill only the
+        remainder, and publish the fresh prompt's full pages for future
+        sharers. A preempted request whose pages were retained re-attaches
+        them with NO prefill at all. Pool exhaustion is backpressure (park
+        at the queue front / structured shed), never a crash."""
+        t0 = time.perf_counter()
+        slot = None
+        held: List[int] = []            # pages owned by THIS admission
+        try:
+            if self._chaos is not None:
+                self._chaos.fire(chaos_mod.SITE_ALLOC, engine=self,
+                                 request=req)
+            slot = self._free.pop(0)
+
+            saved = self._saved_pages.pop(req.req_id, None)
+            if saved is not None:
+                # preempt-resume via page retention: the victim's pages
+                # were never released, so restoring the page table + pos
+                # map resumes it bit-exactly with zero prefill work
+                pages, resume_len = saved
+                held = pages
+                self.cache = self._restore_paged(
+                    self.cache, jnp.int32(slot), self._page_row(pages),
+                    jnp.int32(resume_len))
+                self._activate(req, slot, resume_len, pages)
+                self._tokens[slot, 0] = req.tokens[-1]
+                self._pos[slot] = resume_len
+                self._remaining[slot] = \
+                    req.max_new_tokens - req.n_generated
+                self.stats.page_resumes += 1
+                self.stats.prefill_s += time.perf_counter() - t0
+                return True
+
+            seq = req.prompt if not req.tokens else np.concatenate(
+                [req.prompt, np.asarray(req.tokens, np.int32)])
+            length = int(seq.size)
+            need = pages_needed(
+                min(length + req.max_new_tokens, self.cache_len),
+                self.kv_page_size)
+            shared: List[int] = []
+            if self._can_share and not req.tokens:
+                # cap the match at length-1 so a fully-cached prompt still
+                # prefills >= 1 suffix token (the forward pass must have a
+                # position to produce next-token logits from)
+                shared = self._prefix_cache.match(seq, limit=length - 1)
+                held = held + shared
+            start = len(shared) * self.kv_page_size
+            fresh = self._reserve_pages(need - len(shared))
+            held = held + fresh
+            pages = shared + fresh
+
+            if self._chaos is not None:
+                self._chaos.fire(chaos_mod.SITE_PREFILL, engine=self,
+                                 request=req)
+            if start > 0:
+                # prefix hit: attach the pages, then prefill ONLY the
+                # suffix against the resident shared prefix (masked
+                # attention; write positions never land in shared full
+                # pages, so sharing is copy-on-write by construction)
+                suffix = seq[start:]
+                slen = int(suffix.size)
+                bucket = self._bucket(slen)
+                toks = np.zeros((bucket,), np.int32)
+                toks[:slen] = suffix
+                self.cache = self._restore_paged(
+                    self.cache, jnp.int32(slot), self._page_row(pages),
+                    jnp.int32(start))
+                self.cache, logits = self._suffix_prefill(
+                    self.servable.params, self.cache, jnp.asarray(toks),
+                    jnp.int32(slot), jnp.int32(start), jnp.int32(slen))
+                row = np.asarray(logits[slen - 1])
+                self.stats.prefix_hit_tokens += start
+                self.stats.prefilled_tokens += slen
+            else:
+                bucket = self._bucket(length)
+                toks = np.zeros((bucket,), np.int32)
+                toks[:length] = seq
+                pos_seq = np.full((bucket,), -1, np.int32)
+                pos_seq[:length] = np.arange(length)
+                sub, logits = self._prefill(
+                    self.servable.params, self._sub_template,
+                    jnp.asarray(toks), jnp.asarray(pos_seq),
+                    jnp.int32(length))
+                self.cache = self._write_paged(
+                    self.cache, jnp.int32(slot), sub, self._page_row(pages))
+                row = np.asarray(logits[length - 1])
+                self.stats.prefilled_tokens += length
+                if self._can_share and not req.tokens:
+                    # publish the prompt's FULL pages (strictly below the
+                    # prompt length -- the partial tail page is mutable)
+                    self._prefix_cache.insert(
+                        seq, pages[:length // self.kv_page_size])
+        except PagePoolExhausted as e:
+            if held:
+                self._pool.release(held)
+            self._restore_slot(slot)
+            self.stats.prefill_s += time.perf_counter() - t0
+            if self._active:
+                # actives will release pages as they finish: park at the
+                # queue FRONT and let the scheduler retry next sync point
+                req.status = "queued"
+                self._queue.appendleft(req)
+                log.info("parking request %d on page pressure (%s)",
+                         req.req_id, e)
+                return False
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.KV_PAGES,
+                f"{e} with no active requests to drain"))
+            return True
+        except Exception as e:  # noqa: BLE001 -- isolate to this request
+            if held:
+                self._pool.release(held)
+            self._restore_slot(slot)
+            self.stats.prefill_s += time.perf_counter() - t0
+            log.warning("admission of request %d failed (%s: %s)",
+                        req.req_id, type(e).__name__, e)
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.PREFILL_ERROR, f"{type(e).__name__}: {e}"))
+            return True
+
+        self.stats.prefills += 1
+        self.stats.bucket_hits[bucket] += 1
+        if not np.all(np.isfinite(row)):
+            self._pool.release(held)
+            self.cache = self._free_slot(self.cache, jnp.int32(slot))
+            self._restore_slot(slot)
+            self.stats.prefill_s += time.perf_counter() - t0
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.NONFINITE_LOGITS,
+                f"non-finite prefill logits at position {length - 1}"))
+            return True
+
+        self._activate(req, slot, length, pages)
+        tok = sample_token_row(row, self._key, slot, length - 1,
+                               temperature=self.temperature,
+                               top_k=self.top_k)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self._emit(req, int(tok), row)
+        return True
 
     def _restore_slot(self, slot: Optional[int]) -> None:
         """Return a popped-but-unoccupied slot to the free list."""
@@ -512,11 +779,23 @@ class ServingEngine:
             self._pos[req.slot] = req.pos
             self._remaining[req.slot] = req.max_new_tokens - req.n_generated
 
-    def _release_slot(self, req: EngineRequest) -> None:
+    def _release_slot(self, req: EngineRequest, *,
+                      keep_pages: bool = False) -> None:
         """Free ``req``'s slot with full recycle hygiene: zero attention KV
         and recurrent state on device, reset the host mirrors, return the
-        slot to the free list."""
+        slot to the free list. Paged engines also settle the slot's page
+        references -- released back to the pool, or (``keep_pages``,
+        preemption retention) parked in ``_saved_pages`` with the resume
+        position so re-admission can re-attach them prefill-free."""
         slot = req.slot
+        if self.kv_layout == "paged":
+            pages = self._slot_pages.pop(slot, [])
+            if keep_pages and pages:
+                # resume point: KV holds positions 0..req.pos-1 (the
+                # current token's KV is written by its NEXT decode step)
+                self._saved_pages[req.req_id] = (pages, req.pos)
+            elif pages:
+                self._pool.release(pages)
         self.cache = self._free_slot(self.cache, jnp.int32(slot))
         self._pos[slot] = -1
         self._tokens[slot, 0] = 0
@@ -533,6 +812,12 @@ class ServingEngine:
         if it holds one."""
         if req.slot >= 0:
             self._release_slot(req)
+        if self.kv_layout == "paged":
+            # a retained (preempted) request dying while queued must give
+            # its saved pages back -- cancel/deadline/shed paths
+            saved = self._saved_pages.pop(req.req_id, None)
+            if saved is not None:
+                self._pool.release(saved[0])
         req.status = status
         req.failure = reason
         req.done = status == "done"
@@ -552,9 +837,14 @@ class ServingEngine:
 
     def _preempt(self, req: EngineRequest) -> None:
         """Evict an in-flight request: free its slot (recycle hygiene) and
-        requeue it at the FRONT of its priority class; re-admission resumes
-        it via prefill over prompt + generated tokens."""
-        self._release_slot(req)
+        requeue it at the FRONT of its priority class. Re-admission resumes
+        it via page retention when the layout allows (paged + every layer's
+        state lives in pages: pure linear attn/MLA) -- bit-exact and
+        prefill-free -- and otherwise via prefill over prompt + generated
+        tokens."""
+        keep = (self.kv_layout == "paged" and self._can_retain
+                and req.n_generated > 0)
+        self._release_slot(req, keep_pages=keep)
         req.status = "queued"
         req.n_preempted += 1
         self.stats.preemptions += 1
@@ -602,13 +892,16 @@ class ServingEngine:
         return best
 
     def _schedule(self) -> None:
-        """Admissions + priority preemption (a window-sync point action)."""
+        """Admissions + priority preemption (a window-sync point action).
+        A False from ``_admit`` means paged backpressure parked the request
+        at the queue front -- stop admitting until the next sync point (the
+        pool cannot satisfy it now; retrying in this loop would spin)."""
         while self._free and self._queue:
-            self._admit(self._pop_next())
+            if not self._admit(self._pop_next()):
+                return
         # under slot pressure: strictly-higher-priority queued traffic
         # evicts the lowest-priority (latest-admitted on ties) active
-        # request; the victim resumes later via prefill over its
-        # prompt + generated tokens
+        # request; the victim resumes later (page retention or re-prefill)
         while self._queue and not self._free and self._active:
             best_p = max(r.priority for r in self._queue)
             victim = min(self._active.values(),
@@ -616,7 +909,8 @@ class ServingEngine:
             if best_p <= victim.priority:
                 break
             self._preempt(victim)
-            self._admit(self._pop_next())
+            if not self._admit(self._pop_next()):
+                return
 
     # -- stepping ---------------------------------------------------------
     def step(self) -> bool:
@@ -667,6 +961,13 @@ class ServingEngine:
         self._tokens[:] = 0
         self._remaining[:] = 0
         self._eos[:] = -1
+        if self.kv_layout == "paged":
+            # the rebuilt cache has fresh (zeroed) pools: restart the host
+            # allocator and drop every prefix/retention reference with it
+            self._slot_pages.clear()
+            self._saved_pages.clear()
+            self._pool.reset()
+            self._prefix_cache = PrefixCache(self._pool, self.kv_page_size)
         self.cache = self._build_cache()
         for req in reqs:
             req.slot = -1
@@ -781,7 +1082,31 @@ class ServingEngine:
         """Chaos hook: NaN-fill every float leaf of one slot's cache state
         (``repro.runtime.chaos.poison_slot``). The slot's next decode
         logits go non-finite and the engine's quarantine path must contain
-        the damage to exactly this slot."""
+        the damage to exactly this slot. Paged engines NaN-fill the slot's
+        OWN pages instead (pool rows are not slot-addressable; co-resident
+        slots never reference another slot's pages, so containment holds by
+        the same argument). Only the slot's PRIVATE pages (refcount 1) are
+        filled: shared prefix pages are other requests' state too, and
+        poisoning them would break the containment the test asserts."""
+        if self.kv_layout == "paged":
+            own = [p for p in self._slot_pages.get(int(slot), [])
+                   if self._pool.refcount(p) == 1]
+            rows = jnp.asarray(own, jnp.int32)
+            if rows.size == 0:
+                return
+
+            def poison(path, x):
+                name = getattr(path[-1], "key", None)
+                if not (isinstance(name, str) and name.endswith("_pages")
+                        and jnp.issubdtype(x.dtype, jnp.floating)):
+                    return x
+                lead = getattr(path[0], "key", None) == "blocks"
+                nan = jnp.nan
+                if lead:
+                    return x.at[:, rows].set(nan)
+                return x.at[rows].set(nan)
+            self.cache = jax.tree_util.tree_map_with_path(poison, self.cache)
+            return
         sub = model_api.read_slot(self.cache, self.cfg, int(slot))
         sub = jax.tree_util.tree_map(
             lambda x: jnp.full_like(x, jnp.nan)
@@ -814,8 +1139,55 @@ class ServingEngine:
         for req in self._done:
             assert req.status in TERMINAL_STATES and req.slot == -1, (
                 f"drained request {req.req_id} non-terminal: {req.status}")
+        if self.kv_layout == "paged":
+            self._pool.check()
+            assert set(self._slot_pages) == set(self._active), (
+                f"page ownership out of sync with active slots: "
+                f"{sorted(self._slot_pages)} vs {sorted(self._active)}")
+            for slot, pages in self._slot_pages.items():
+                for p in pages:
+                    assert self._pool.refcount(p) >= 1, (
+                        f"slot {slot} holds unreferenced page {p}")
+            for req_id, (pages, _len) in self._saved_pages.items():
+                for p in pages:
+                    assert self._pool.refcount(p) >= 1, (
+                        f"retained request {req_id} holds unreferenced "
+                        f"page {p}")
 
     # -- introspection ----------------------------------------------------
+    def kv_stats(self) -> Dict:
+        """KV-memory scorecard (``stats_dict()['kv']``): layout, pool
+        utilization and the prefix-sharing/retention counters. Byte figures
+        come from the real device leaves at construction time."""
+        if self.kv_layout != "paged":
+            return {"layout": "dense",
+                    "kv_bytes_total": int(self._kv_bytes_total),
+                    "kv_bytes_per_slot":
+                        int(self._kv_bytes_total) // self.max_slots,
+                    "prefilled_tokens": self.stats.prefilled_tokens,
+                    "prefix_hit_tokens": 0}
+        pool = self._pool
+        return {"layout": "paged",
+                "page_size": self.kv_page_size,
+                "n_pages": pool.n_pages,
+                "pages_used": pool.used_count,
+                "pages_free": pool.free_count,
+                "peak_pages_used": pool.peak_used,
+                "bytes_per_page": pool.bytes_per_page,
+                "kv_bytes_total": pool.total_bytes(),
+                "kv_bytes_used": pool.used_bytes(),
+                "utilization": round(pool.used_count / pool.n_pages, 4),
+                "prefix_cached_pages": self._prefix_cache.cached_pages,
+                "prefix_hit_tokens": self.stats.prefix_hit_tokens,
+                "prefilled_tokens": self.stats.prefilled_tokens,
+                "page_resumes": self.stats.page_resumes}
+
+    def stats_dict(self) -> Dict:
+        """``EngineStats.as_dict()`` plus the ``'kv'`` section."""
+        d = self.stats.as_dict()
+        d["kv"] = self.kv_stats()
+        return d
+
     @property
     def n_active(self) -> int:
         return len(self._active)

@@ -151,6 +151,8 @@ class Servable:
         self._engine_prefill = None
         self._engine_write = None
         self._engine_free = None
+        self._engine_paged = None
+        self._mesh_paged_fns: Dict[Any, tuple] = {}
         # mesh engines: (decode, decode_many, write, free) jits cached per
         # cache-sharding tree, so engines over the same placement share
         # executables exactly like the unsharded path
@@ -175,9 +177,10 @@ class Servable:
         logits, _aux = self._fwd_fn(self.params, self._as_batch(batch))
         return logits
 
-    def init_cache(self, batch_size: int, cache_len: int, frames=None):
+    def init_cache(self, batch_size: int, cache_len: int, frames=None,
+                   paged=None):
         cache = model_api.init_cache(self.params, self.cfg, batch_size,
-                                     cache_len, frames=frames)
+                                     cache_len, frames=frames, paged=paged)
         if self.mesh is not None:
             # slots over "data", heads/state over "model"; lifecycle ops
             # stay sharding-preserving device scatters from here on
@@ -384,6 +387,57 @@ class Servable:
         if self._engine_write is None:
             self._engine_write, self._engine_free = build()
         return self._engine_write, self._engine_free
+
+    def paged_engine_fns(self, cache_shardings=None):
+        """The paged engine's three extra cache-carrying jits
+        ``(write_paged, restore_paged, suffix_prefill)``:
+
+        - ``write_paged(cache, slot, sub, page_row)`` -- scatter a dense
+          batch-1 prefill result into the slot's pages (cache DONATED, the
+          paged analogue of ``write_slot``);
+        - ``restore_paged(cache, slot, page_row, resume_len)`` -- re-attach
+          retained pages after preemption, NOT donated: restore runs inside
+          admission's failure envelope, and a donated cache would be
+          invalidated even when the op is abandoned;
+        - ``suffix_prefill(params, cache, tokens (S,), slot, start,
+          length)`` -- prefill only the uncached prompt suffix against a
+          shared resident prefix, NOT donated for the same reason (a
+          chaos-injected prefill failure must leave ``engine.cache``
+          intact). Returns ``(cache, logits (S, V))``.
+
+        Cached like :meth:`engine_fns`: unsharded engines share the
+        Servable-held trio, mesh engines share per cache-sharding tree."""
+        cfg, packs = self.cfg, self.packs
+        kw = {} if cache_shardings is None else \
+            {"out_shardings": cache_shardings}
+
+        def build():
+            write = jax.jit(
+                lambda c, i, sub, row: model_api.write_slot_paged(
+                    c, cfg, i, sub, row),
+                donate_argnums=(0,), **kw)
+            restore = jax.jit(
+                lambda c, i, row, n: model_api.restore_slot_paged(
+                    c, cfg, i, row, n), **kw)
+
+            def suffix(params, cache, tokens, slot, start, length):
+                logits, cache = model_api.prefill_suffix(
+                    params, cache, cfg, tokens[None], slot, start, length,
+                    packs=packs)
+                return cache, logits[0]
+            skw = {} if cache_shardings is None else \
+                {"out_shardings": (cache_shardings, None)}
+            return write, restore, jax.jit(suffix, **skw)
+
+        if cache_shardings is None:
+            if self._engine_paged is None:
+                self._engine_paged = build()
+            return self._engine_paged
+        leaves, treedef = jax.tree_util.tree_flatten(cache_shardings)
+        key = (treedef, tuple(leaves))
+        if key not in self._mesh_paged_fns:
+            self._mesh_paged_fns[key] = build()
+        return self._mesh_paged_fns[key]
 
     # -- instrumentation --------------------------------------------------
     def stats(self) -> Dict[str, Any]:

@@ -32,6 +32,13 @@ PARTITIONS = ("tp", "dp", "tp+dp")
 #:   'block'      -- submit() drives engine steps until the queue drains
 #:                   below the bound (single-process ingest throttling).
 OVERFLOW_POLICIES = ("reject", "shed-oldest", "block")
+#: KV-cache layouts (docs/API.md §Paged KV + prefix cache):
+#:   'dense' -- per-slot (max_slots, max_seq, ...) slot caches, the parity
+#:              oracle; 'paged' -- page-pool storage for linear attention/MLA
+#:              KV with per-slot page tables, a host-side refcounting
+#:              allocator and a radix prefix cache (serving/paging.py,
+#:              serving/prefix_cache.py).
+KV_LAYOUTS = ("dense", "paged")
 #: pack-sharding mesh support: the plan path shards by construction
 #: (ShardedPlan), dense serves through GSPMD param sharding, and 'auto'
 #: chooses between exactly those two; 'bsr' has no sharded layout.
@@ -94,6 +101,13 @@ class ServingSpec:
         only: request slots sharded over devices), ``'tp+dp'`` (both).
         Must be consistent with ``mesh_shape`` (a 'tp' mesh needs
         data == 1, etc.). Ignored when ``mesh_shape`` is None.
+      kv_layout: ``'dense'`` (per-slot slot caches, the parity oracle) or
+        ``'paged'`` (page-pool KV with per-slot page tables, refcounting
+        allocator and radix prefix sharing -- docs/API.md §Paged KV).
+        Requires ``data_shards == 1``.
+      kv_page_size: tokens per physical KV page (paged layout only). Also
+        the prefix-sharing granularity: only whole pages are shared, so
+        smaller pages share more but gather/scatter more page rows.
     """
 
     tile: Tuple[int, int] = (128, 128)
@@ -108,8 +122,20 @@ class ServingSpec:
     autotune_m: int = 256
     mesh_shape: Optional[Tuple[int, int]] = None
     partition: str = "tp"
+    kv_layout: str = "dense"
+    kv_page_size: int = 16
 
     def __post_init__(self):
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(
+                f"kv_layout={self.kv_layout!r} not in {KV_LAYOUTS}")
+        if self.kv_page_size < 1:
+            raise ValueError(f"kv_page_size={self.kv_page_size} must be >= 1")
+        if self.kv_layout == "paged" and self.data_shards > 1:
+            raise ValueError(
+                "kv_layout='paged' requires data_shards == 1: the page pool "
+                "is a shared id space, so its page axis cannot shard over "
+                "'data' (tensor-parallel 'tp' meshes shard the head dims)")
         if self.prune not in PRUNE_RECIPES:
             raise ValueError(f"prune={self.prune!r} not in {PRUNE_RECIPES}")
         if self.backend not in BACKENDS:

@@ -179,6 +179,43 @@ def test_preemption_resumes_via_prefill(servable):
     _assert_conserved(eng, [victim, vip])
 
 
+def test_paged_preemption_resumes_without_reprefill(servable):
+    """Under kv_layout='paged' a preempted victim's pages stay allocated
+    (refcount held in _saved_pages), so re-admission re-attaches the page
+    table and decodes on -- the SAME tokens as the dense resume-by-prefill
+    path, but with strictly fewer prefilled tokens and page_resumes > 0."""
+    cfg = _cfg()
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    paged_sv = prepare_servable(params, cfg, ServingSpec(
+        tile=(16, 16), sparsity=0.5, prune="oneshot", targets=ATTN_TARGETS,
+        kv_layout="paged", kv_page_size=8))
+    prompts = _prompts(2)
+
+    def interrupted(sv, layout, pool_pages=None):
+        # the explicit kwarg outranks REPRO_KV_LAYOUT: the dense comparator
+        # must stay dense even on the env-parametrized paged CI leg
+        kw = {} if pool_pages is None else {"kv_pool_pages": pool_pages}
+        eng = sv.engine(max_slots=1, cache_len=64, sync_every=2,
+                        kv_layout=layout, **kw)
+        victim = eng.submit(prompts[0], max_new_tokens=10, priority=0)
+        eng.step()
+        vip = eng.submit(prompts[1], max_new_tokens=10, priority=5)
+        eng.run()
+        assert victim.done and vip.done
+        assert eng.stats.preemptions == 1
+        eng.verify_invariants()
+        return eng, victim, vip
+
+    eng_d, vd, pd = interrupted(servable, "dense")
+    eng_p, vp, pp = interrupted(paged_sv, "paged", pool_pages=16)
+    assert vp.tokens == vd.tokens and pp.tokens == pd.tokens
+    assert eng_p.stats.page_resumes == 1
+    assert eng_d.stats.page_resumes == 0
+    # dense re-prefills prompt + generated tokens; paged re-prefills NOTHING
+    assert eng_p.stats.prefilled_tokens < eng_d.stats.prefilled_tokens
+    assert eng_p.stats.prefilled_tokens == sum(len(p) for p in prompts)
+
+
 def test_equal_priority_never_preempts(servable):
     eng = servable.engine(max_slots=1, cache_len=64, sync_every=2)
     first = eng.submit(_prompts(1)[0], max_new_tokens=6, priority=3)
