@@ -39,8 +39,10 @@ from repro.core.sparsity import prune_to_sparsity
 from repro.kernels import pack_bsr
 from repro.kernels.autotune import choose_backend
 from repro.kernels.exec_plan import (pack_plan_data, plan_for_pack,
-                                     plan_linear)
+                                     plan_linear, plan_linear_pallas)
+from repro.kernels.flash_decode import flash_decode
 from repro.kernels.ops import bsr_linear
+from repro.models.attention import decode_attention
 from repro.runtime.bench_io import update_bench_json
 
 SHAPES = [("proj_768", 768, 768), ("ffn_3072", 3072, 768)]
@@ -175,5 +177,102 @@ def run(emit=print, smoke=False, write_json=True, reps=7):
     return records
 
 
+def run_plan_bsr(emit=print, smoke=False, write_json=True, reps=7):
+    """Plan-layout arms head to head: the XLA composition ('plan') vs the
+    compiled plan-consuming Pallas kernel ('plan_pallas').
+
+    Off-TPU the Pallas arm executes in interpret mode -- a correctness
+    vehicle, not a serving path (docs/PERF.md) -- so it only runs in the
+    smoke sweep at a tiny shape there; the recorded cells keep the two
+    arms' trajectories comparable on TPU where both compile. Section
+    schema matches the engine benches ({"results": {arm: [cells]}}) so
+    scripts/bench_guard.py tracks it warn-only by ``rate`` (rows/s)."""
+    rng = np.random.RandomState(0)
+    on_tpu = jax.default_backend() == "tpu"
+    if smoke:
+        cells = [("proj_256", 256, 256, 64, 0.2)]
+        reps = min(reps, 3)
+    else:
+        cells = [("proj_768", 768, 768, M, d) for d in (0.5, 0.2, 0.1)]
+    results = {"plan": [], "plan_pallas": []}
+    for name, n, k, m, d in cells:
+        x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+        w = jnp.asarray(rng.randn(n, k).astype(np.float32))
+        pruned, _ = prune_to_sparsity(w, SQUARE_TILE, 1.0 - d)
+        pk = pack_bsr(np.asarray(pruned), SQUARE_TILE)
+        plan = plan_for_pack(pk)
+        data = pack_plan_data(plan, pk.data)
+        arms = [("plan", jax.jit(
+            lambda x_, d_, _p=plan: plan_linear(x_, d_, _p)))]
+        if on_tpu or smoke:
+            arms.append(("plan_pallas", jax.jit(
+                lambda x_, d_, _p=plan: plan_linear_pallas(x_, d_, _p))))
+        times, _ = _time_group([(fn, (x, data)) for _, fn in arms],
+                               reps=reps)
+        for (arm, _), t_s in zip(arms, times):
+            cell = {"cell": f"{name}_d{int(d * 100):03d}", "density": d,
+                    "m": m, "us": round(t_s * 1e6, 1),
+                    "rate": round(m / t_s, 1)}
+            results[arm].append(cell)
+            emit(f"plan_bsr/{name}_{arm}_d{int(d * 100):03d},"
+                 f"{t_s * 1e6:.1f},{m / t_s:.0f}")
+    if write_json:
+        section = "plan_bsr_smoke" if smoke else "plan_bsr"
+        path = update_bench_json(section, {"results": results,
+                                           "device": jax.default_backend()})
+        emit(f"# wrote plan_bsr cells to {path} [{section}]")
+    return results
+
+
+def run_flash_decode(emit=print, smoke=False, write_json=True, reps=7):
+    """Decode-attention arms over a context-length x split-K sweep: the
+    materialized-softmax XLA path vs the split-K flash kernel
+    (kernels/flash_decode.py). Off-TPU the flash arm is interpret-mode
+    (smoke-only, tiny contexts); tokens_per_s = batch tokens emitted per
+    decode step -- the metric bench_guard tracks warn-only."""
+    rng = np.random.RandomState(0)
+    on_tpu = jax.default_backend() == "tpu"
+    b, hq, hkv, d = 8, 8, 4, 64
+    if smoke:
+        sweep = [(128, 1), (128, 2)]
+        reps = min(reps, 3)
+    else:
+        sweep = [(t, s) for t in (256, 1024, 4096) for s in (1, 4, 8)
+                 if s <= t // 128]
+    results = {"xla": [], "flash": []}
+    for t, split in sweep:
+        q = jnp.asarray(rng.randn(b, 1, hq, d).astype(np.float32))
+        k = jnp.asarray(rng.randn(b, t, hkv, d).astype(np.float32))
+        v = jnp.asarray(rng.randn(b, t, hkv, d).astype(np.float32))
+        kvp = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        pos = jnp.full((b,), t - 1, jnp.int32)
+        arms = [("xla", jax.jit(lambda *a: decode_attention(*a)))]
+        if on_tpu or smoke:
+            arms.append(("flash", jax.jit(
+                lambda *a, _s=split: flash_decode(*a, kv_split=_s))))
+        times, _ = _time_group([(fn, (q, k, v, kvp, pos)) for _, fn in arms],
+                               reps=reps)
+        for (arm, _), t_s in zip(arms, times):
+            if arm == "xla" and split > 1:
+                continue            # the XLA arm has no split axis
+            results[arm].append({
+                "cell": f"t{t}_s{split if arm == 'flash' else 1}",
+                "context": t, "kv_split": split if arm == "flash" else 1,
+                "us": round(t_s * 1e6, 1),
+                "tokens_per_s": round(b / t_s, 1)})
+            emit(f"flash_decode/{arm}_t{t}_s{split},{t_s * 1e6:.1f},"
+                 f"{b / t_s:.0f}")
+    if write_json:
+        section = "flash_decode_smoke" if smoke else "flash_decode"
+        path = update_bench_json(section, {"results": results,
+                                           "device": jax.default_backend()})
+        emit(f"# wrote flash_decode cells to {path} [{section}]")
+    return results
+
+
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv, write_json="--no-json" not in sys.argv)
+    smoke = "--smoke" in sys.argv
+    write_json = "--no-json" not in sys.argv
+    run(smoke=smoke, write_json=write_json)
+    run_plan_bsr(smoke=smoke, write_json=write_json)
+    run_flash_decode(smoke=smoke, write_json=write_json)

@@ -26,19 +26,30 @@ import sys
 #: kv_memory tracks the shared-system-prompt workload (dense vs paged
 #: prefix-sharing arms) by tok/s -- warn-only like the rest; its byte and
 #: concurrency cells are informational (no tok/s, so compare() skips them)
+#: flash_decode tracks the decode-attention kernels (xla vs split-K flash)
+#: by tokens_per_s over a context x split sweep; plan_bsr tracks the
+#: plan-layout matmul arms (XLA composition vs the plan-consuming Pallas
+#: kernel) by rate (rows/s) -- both warn-only like everything else here,
+#: keyed per cell tag (kernel_bench.py)
 SECTIONS = ("engine_smoke", "engine", "engine_fused_smoke", "engine_fused",
             "engine_chaos_smoke", "engine_chaos",
             "kv_memory_smoke", "kv_memory",
-            "sharded_smoke", "sharded")
+            "sharded_smoke", "sharded",
+            "flash_decode_smoke", "flash_decode",
+            "plan_bsr_smoke", "plan_bsr")
 
 
 def _cells(section_payload):
-    """-> {(arm, slots, sync_every): tokens_per_s}"""
+    """-> {(arm, cell key, sync_every): rate}. Engine sections key by
+    ``slots`` and carry ``tokens_per_s``; kernel sections key by ``cell``
+    and carry ``tokens_per_s`` or ``rate`` -- one positive-is-faster
+    number either way."""
     out = {}
     for arm, cells in (section_payload.get("results") or {}).items():
         for cell in cells:
-            key = (arm, cell.get("slots"), cell.get("sync_every", 1))
-            out[key] = cell.get("tokens_per_s")
+            key = (arm, cell.get("slots", cell.get("cell")),
+                   cell.get("sync_every", 1))
+            out[key] = cell.get("tokens_per_s", cell.get("rate"))
     return out
 
 

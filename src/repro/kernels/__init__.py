@@ -1,14 +1,20 @@
 """Pallas TPU kernels for the paper's BSR operators + oracles + wrappers."""
-from repro.kernels.autotune import (AutotuneCache, BackendChoice, MaskedPack,
-                                    choose_backend, default_cache_path)
+from repro.kernels.autotune import (DECODE_CANDIDATES, AutotuneCache,
+                                    BackendChoice, MaskedPack, choose_backend,
+                                    choose_decode_kernel, default_cache_path)
 from repro.kernels.bsr_matmul import (KernelBSR, dds, dds_t, masked_matmul,
-                                      pack_bsr, sddmm)
-from repro.kernels.exec_plan import (RowPackPlan, ShardedPlan, build_plan,
-                                     build_sharded_plan,
+                                      pack_bsr, plan_dds, sddmm)
+from repro.kernels.exec_plan import (PlanChoice, RowPackPlan, ShardedPlan,
+                                     build_plan, build_sharded_plan,
                                      default_plan_registry,
                                      kernel_pattern_fingerprint,
                                      pack_plan_data, plan_for_pack,
-                                     plan_linear, plan_matmul,
-                                     shard_divisible, unpack_plan_data)
+                                     plan_kernel_sequence, plan_linear,
+                                     plan_linear_pallas, plan_matmul,
+                                     plan_matmul_pallas, shard_divisible,
+                                     unpack_plan_data)
+from repro.kernels.flash_decode import (decode_kernel_override, default_kv_split,
+                                        flash_decode, paged_flash_decode,
+                                        resolved_decode_kernel)
 from repro.kernels.ops import (bsr_linear, bsr_matmul, default_backend,
-                               sparsify_weight)
+                               plan_dispatch, sparsify_weight)

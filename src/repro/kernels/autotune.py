@@ -8,12 +8,20 @@ below ~10% density, and ``plan`` only at the paper's 32x1 linear tile.
 A hardcoded ``default_backend()`` cannot express any of that. This module
 micro-benchmarks the candidate execution paths
 
-    dense    -- plain ``x @ w.T`` (the negative control / usual CPU winner)
-    gather   -- one gather per stored tile (``bsr_linear`` backend)
-    rowpack  -- row-grouped batched matmul, per-call scatter
-    plan     -- precomputed RowPackPlan, data row-grouped offline
-    pallas   -- the TPU kernel (native on TPU; interpret mode elsewhere)
-    masked   -- dense-layout tile-skipping kernel (TPU)
+    dense       -- plain ``x @ w.T`` (the negative control / usual CPU winner)
+    gather      -- one gather per stored tile (``bsr_linear`` backend)
+    rowpack     -- row-grouped batched matmul, per-call scatter
+    plan        -- precomputed RowPackPlan, data row-grouped offline
+    pallas      -- flat-stream TPU kernel (native on TPU; interpret elsewhere)
+    masked      -- dense-layout tile-skipping kernel (TPU)
+    plan_pallas -- compiled plan-consuming kernel: the RowPackPlan's spill
+                   schedule drives the Pallas grid (exec_plan, TPU)
+
+Decode-side, :func:`choose_decode_kernel` runs the same machinery over the
+attention decode step ('xla' materialized softmax vs the split-K 'flash'
+kernel, kernels/flash_decode.py); its stub proxy charges the flash arm the
+split-K reduce traffic (per-split on-chip (m, l, acc) state) so the
+crossover moves with context length and split count.
 
 per *pattern fingerprint* on the current device, picks the fastest, and
 persists the winner so the cost is paid once per (pattern, device) --
@@ -68,11 +76,18 @@ import numpy as np
 
 from repro.kernels import exec_plan as xp
 from repro.kernels.bsr_matmul import KernelBSR, masked_matmul
+from repro.kernels.flash_decode import default_kv_split
 
-CANDIDATES = ("dense", "gather", "rowpack", "plan", "pallas", "masked")
+CANDIDATES = ("dense", "gather", "rowpack", "plan", "pallas", "masked",
+              "plan_pallas")
 #: interpret-mode-only off TPU: excluded from wall-clock candidate sets
 #: there (docs/PERF.md); the stub proxy still ranks them
-INTERPRET_ONLY = ("pallas", "masked")
+INTERPRET_ONLY = ("pallas", "masked", "plan_pallas")
+
+#: attention decode-step kernels ranked by choose_decode_kernel
+DECODE_CANDIDATES = ("xla", "flash")
+#: decode kernels that run in interpret mode off-TPU
+DECODE_INTERPRET_ONLY = ("flash",)
 
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
 _ENV_STUB = "REPRO_AUTOTUNE_STUB"
@@ -337,6 +352,11 @@ def _candidate_fn(pack: KernelBSR, name: str):
         return (jax.jit(lambda x, w_: masked_matmul(
             x, w_, mask, tile=tile,
             interpret=jax.default_backend() != "tpu")), w)
+    if name == "plan_pallas":
+        plan = xp.plan_for_pack(pack)
+        data = xp.pack_plan_data(plan, pack.data)
+        return (jax.jit(lambda x, d, _p=plan:
+                        xp.plan_linear_pallas(x, d, _p)), data)
     if name in ("gather", "rowpack", "pallas"):
         return (jax.jit(lambda x, d, _pk=pack, _b=name:
                         bsr_linear(x, d, _pk, _b)), pack.data)
@@ -415,6 +435,13 @@ def stub_costs(pack: KernelBSR, m: int,
                 c += m * plan.n_vrows * bn
         elif name == "pallas":
             c = m * nnzt * bn * bk + traffic * nnzt * bn * bk + interp
+        elif name == "plan_pallas":
+            # same real-tile FLOPs and weight stream as 'pallas', minus the
+            # padded-slot work 'plan' pays, with spills + epilogue folded
+            # into the row-change write -- a small scheduling edge that
+            # breaks the tie toward the plan-consuming kernel on TPU
+            c = (0.97 * m * nnzt * bn * bk + traffic * nnzt * bn * bk
+                 + interp)
         elif name == "masked":
             c = m * nnzt * bn * bk + traffic * n * k + interp
         else:
@@ -504,5 +531,116 @@ def choose_backend(pack: KernelBSR, m: int = 256, *,
                     "m": int(m), "device": device_kind(),
                     "devices": jax.device_count(),
                     "shard": shard_tag.lstrip(":") or None,
+                    "created": time.strftime("%Y-%m-%dT%H:%M:%S")})
+    return Choice(backend, costs, False, mode, key)
+
+
+# --------------------------------------------------------------------------
+# decode-kernel selection (attention decode step: 'xla' vs split-K 'flash')
+# --------------------------------------------------------------------------
+
+def decode_stub_costs(*, b: int, t: int, hq: int, hkv: int, d: int,
+                      kv_split: int) -> Dict[str, float]:
+    """Deterministic proxy for the one-token decode step (pseudo-seconds).
+
+    Both arms stream the full KV cache once (the roofline floor). On top of
+    that, 'xla' pays the materialized (B, Hq, T) scores + probs HBM
+    round-trip; 'flash' pays the split-K reduce: per split, the on-chip
+    (m, l, acc) running state -- (G, d + 2) floats per (slot, kv head) --
+    is corrected and re-written, so cost grows with ``kv_split`` while the
+    score tensor never touches HBM. Off-TPU the interpret penalty keeps
+    'flash' from ever winning (same contract as INTERPRET_ONLY)."""
+    g = max(1, hq // hkv)
+    on_tpu = jax.default_backend() == "tpu"
+    interp = 0.0 if on_tpu else 1e6 * t
+    traffic = 8.0
+    flops = 2.0 * b * hq * t * d
+    kv_read = traffic * b * hkv * t * d
+    return {
+        "xla": flops + kv_read + traffic * 2.0 * b * hq * t,
+        "flash": (flops + kv_read
+                  + traffic * b * hkv * g * (d + 2) * kv_split + interp),
+    }
+
+
+def _measure_decode(b, t, hq, hkv, d, window, kv_split, candidates, *,
+                    reps=3, timer=None):
+    """Paired wall-clock micro-benchmark of the decode arms (same
+    round-robin + paired-ratio discipline as :func:`measure`)."""
+    from repro.kernels.flash_decode import flash_decode
+    from repro.models.attention import decode_attention
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, 1, hq, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, t, hkv, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, t, hkv, d).astype(np.float32))
+    pm = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    pos = jnp.full((b,), t - 1, jnp.int32)
+    fns = {
+        "xla": jax.jit(lambda q, k, v, pm, pos: decode_attention(
+            q, k, v, pm, pos, window=window)),
+        "flash": jax.jit(lambda q, k, v, pm, pos: flash_decode(
+            q, k, v, pm, pos, window=window, kv_split=kv_split)),
+    }
+    arms = [(name, fns[name]) for name in candidates]
+    if timer is not None:
+        times = {name: float(timer(name, fn, (q, k, v, pm, pos)))
+                 for name, fn in arms}
+        return times, dict(times)
+    for _, fn in arms:
+        jax.block_until_ready(fn(q, k, v, pm, pos))
+    ts: Dict[str, list] = {name: [] for name, _ in arms}
+    for _ in range(reps):
+        for name, fn in arms:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, k, v, pm, pos))
+            ts[name].append(time.perf_counter() - t0)
+    anchor = np.asarray(ts[arms[0][0]], np.float64)
+    scores = {name: float(np.median(np.asarray(v_, np.float64) / anchor))
+              for name, v_ in ts.items()}
+    return {name: float(np.min(v_)) for name, v_ in ts.items()}, scores
+
+
+def choose_decode_kernel(b: int = 8, t: int = 512, hq: int = 8,
+                         hkv: int = 8, d: int = 64, *, window: int = 0,
+                         kv_split: Optional[int] = None,
+                         cache: Optional[AutotuneCache] = None,
+                         stub: Optional[bool] = None, reps: int = 3,
+                         timer: Optional[Callable] = None) -> Choice:
+    """Pick the attention decode kernel ('xla' | 'flash') for this shape on
+    this device, with the same cache / stub / frozen-timer contract as
+    :func:`choose_backend`. ``Servable`` consults this when
+    ``spec.decode_kernel='auto'`` and no env override pins the choice."""
+    if hq < 1 or hkv < 1 or d < 1:
+        raise ValueError(f"attention-free decode shape (hq={hq}, hkv={hkv}, "
+                         f"d={d}); pin decode kernel instead of tuning")
+    stub = stub_mode() if stub is None else bool(stub)
+    cache = cache if cache is not None else default_cache()
+    split = int(kv_split) if kv_split else default_kv_split(t)
+    candidates = list(DECODE_CANDIDATES)
+    if not stub and timer is None and jax.default_backend() != "tpu":
+        candidates = [c for c in candidates
+                      if c not in DECODE_INTERPRET_ONLY]
+    mode = "stub" if stub else "wallclock"
+    cand_tag = hashlib.sha1(
+        ",".join(sorted(candidates)).encode()).hexdigest()[:8]
+    key = (f"decode:b{int(b)}t{int(t)}h{int(hq)}g{int(hkv)}d{int(d)}"
+           f"w{int(window)}s{split}:{device_kind()}"
+           f":d{jax.device_count()}:{mode}:c{cand_tag}")
+    rec = cache.get(key)
+    if rec is not None and rec.get("backend") in candidates:
+        return Choice(rec["backend"], dict(rec.get("costs", {})), True,
+                      mode, key)
+    if stub:
+        all_costs = decode_stub_costs(b=b, t=t, hq=hq, hkv=hkv, d=d,
+                                      kv_split=split)
+        costs = {name: all_costs[name] for name in candidates}
+        scores = costs
+    else:
+        costs, scores = _measure_decode(b, t, hq, hkv, d, window, split,
+                                        candidates, reps=reps, timer=timer)
+    backend = min(scores, key=scores.get)
+    cache.put(key, {"backend": backend, "costs": costs, "mode": mode,
+                    "device": device_kind(),
+                    "devices": jax.device_count(),
                     "created": time.strftime("%Y-%m-%dT%H:%M:%S")})
     return Choice(backend, costs, False, mode, key)

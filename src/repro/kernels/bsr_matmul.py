@@ -337,3 +337,151 @@ def masked_matmul(x: jax.Array, w_dense: jax.Array, tile_mask: jax.Array,
 
 def _ceil_mult(v: int, m: int) -> int:
     return max(m, ((v + m - 1) // m) * m)
+
+
+# --------------------------------------------------------------------------
+# Plan-consuming DDS: the RowPackPlan layout, streamed per row group
+# --------------------------------------------------------------------------
+#
+# The kernels above read the flat KernelBSR (nnzt, bn, bk) stream. The
+# serving layout, however, is the RowPackPlan's row-grouped (V, P, bn, bk)
+# pack (exec_plan.py): home virtual rows 0..R-1 plus appended spill rows,
+# each holding up to P tiles with per-slot column ids. ``plan_dds`` consumes
+# that pack *directly* -- no re-layout, no segment-sum epilogue: the block
+# loop follows the precomputed spill schedule (tiles stably sorted by output
+# row on the host, see exec_plan.plan_kernel_sequence), so home and spill
+# tiles of one output row are visited consecutively and accumulate in the
+# same VMEM scratch; the row-change write doubles as the spill reduction.
+# A bias add + activation can be fused into that final write (epilogue).
+
+def _act_epilogue(y, act):
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    if act == "silu":
+        return y * jax.nn.sigmoid(y)
+    assert act is None, act
+    return y
+
+
+def _plan_dds_kernel(row_ref, col_ref, vrow_ref, slot_ref, x_ref, w_ref,
+                     b_ref, o_ref, acc_ref, *, act, bias):
+    j = pl.program_id(1)
+    first = (j == 0) | (row_ref[j] != row_ref[jnp.maximum(j - 1, 0)])
+
+    @pl.when(first)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0, 0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(row_ref[j + 1] != row_ref[j])
+    def _():
+        y = acc_ref[...]
+        if bias:
+            y = y + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _act_epilogue(y, act).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile", "bm", "act",
+                                             "bias", "interpret"))
+def _plan_dds_call(x, data_rp, b, row_seq, col_seq, vrow_seq, slot_seq, *,
+                   n, tile, bm, act, bias, interpret):
+    bn, bk = tile
+    nnzt = int(col_seq.shape[0])
+    m = x.shape[0]
+    grid = (m // bm, nnzt)
+    return pl.pallas_call(
+        functools.partial(_plan_dds_kernel, act=act, bias=bias),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk),
+                             lambda i, j, row, col, vr, sl: (i, col[j])),
+                # stream the (V, P, bn, bk) pack in place: the scalar-
+                # prefetched schedule picks (virtual row, slot) per step
+                pl.BlockSpec((1, 1, bn, bk),
+                             lambda i, j, row, col, vr, sl:
+                             (vr[j], sl[j], 0, 0)),
+                pl.BlockSpec((1, bn),
+                             lambda i, j, row, col, vr, sl: (0, row[j])),
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, bn), lambda i, j, row, col, vr, sl: (i, row[j])),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(row_seq, col_seq, vrow_seq, slot_seq, x, data_rp, b)
+
+
+def plan_dds(x: jax.Array, data_rp: jax.Array, schedule, *, n: int,
+             tile: Tuple[int, int], bias: jax.Array | None = None,
+             act: str | None = None, bm: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """Y(M, N) = X(M, K) @ W^T from the row-grouped (V, P, bn, bk) pack.
+
+    ``schedule`` is the (row_seq, col_seq, vrow_seq, slot_seq) tuple from
+    exec_plan.plan_kernel_sequence: real tiles stably sorted by output block
+    row, row_seq sentinel-terminated. ``bias`` (N,) and ``act`` fuse into
+    the row-change write.
+    """
+    m = x.shape[0]
+    bn, bk = tile
+    row_seq, col_seq, vrow_seq, slot_seq = schedule
+    bm = min(bm, _ceil_mult(m, 8))
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    has_bias = bias is not None
+    b = (bias.reshape(1, n) if has_bias
+         else jnp.zeros((1, n), x.dtype))
+    y = _plan_dds_call(x, data_rp, b, jnp.asarray(row_seq),
+                       jnp.asarray(col_seq), jnp.asarray(vrow_seq),
+                       jnp.asarray(slot_seq), n=n, tile=tile, bm=bm,
+                       act=act, bias=has_bias, interpret=interpret)
+    return y[:m] if pad else y
+
+
+def plan_dds_t(dy: jax.Array, data_rp: jax.Array, t_schedule, *, k: int,
+               tile: Tuple[int, int], bm: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """dX(M, K) = dY(M, N) @ W on the transposed schedule (tiles sorted by
+    block column); tile values are gathered+transposed per call, like dds_t.
+    """
+    bn, bk = tile
+    t_row_seq, t_col_seq, t_flat = t_schedule
+    flat = data_rp.reshape(-1, bn, bk)
+    t_data = jnp.transpose(flat[jnp.asarray(t_flat)], (0, 2, 1))
+    m, n = dy.shape
+    bm = min(bm, _ceil_mult(m, 8))
+    pad = (-m) % bm
+    if pad:
+        dy = jnp.pad(dy, ((0, pad), (0, 0)))
+    x = _dds_call(dy, t_data, jnp.asarray(t_row_seq), jnp.asarray(t_col_seq),
+                  pack_static=((k, n), (bk, bn)), bm=bm, interpret=interpret)
+    return x[:m] if pad else x
+
+
+def plan_sddmm(dy: jax.Array, x: jax.Array, schedule, *,
+               tile: Tuple[int, int], out_dtype, bm: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """Per-tile gradient dW[j] = dY[:, row_j]^T @ X[:, col_j] over the
+    schedule order. Returns (nnzt, bn, bk); all schedule tiles are real
+    (the plan keeps no padding tiles in its vrow/slot lists)."""
+    row_seq, col_seq, _, _ = schedule
+    m = x.shape[0]
+    bm = min(bm, _ceil_mult(m, 8))
+    pad = (-m) % bm
+    if pad:
+        dy = jnp.pad(dy, ((0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n = dy.shape[1]
+    k = x.shape[1]
+    return _sddmm_call(dy, x, jnp.asarray(row_seq), jnp.asarray(col_seq),
+                       pack_static=((n, k), tile, out_dtype),
+                       bm=bm, interpret=interpret)

@@ -536,3 +536,162 @@ def plan_matmul(x: jax.Array, data_rp: jax.Array, plan: RowPackPlan):
     lead = x.shape[:-1]
     y = plan_linear(x.reshape(-1, x.shape[-1]), data_rp, plan)
     return y.reshape(*lead, plan.shape[0])
+
+
+# --------------------------------------------------------------------------
+# compiled Pallas backend: the plan's spill schedule drives the kernel grid
+# --------------------------------------------------------------------------
+#
+# plan_linear composes the row-grouped layout out of XLA ops (gather /
+# batched matmul / segment-sum). plan_linear_pallas hands the SAME layout to
+# a Pallas kernel (bsr_matmul.plan_dds): the (V, P, bn, bk) values are
+# streamed in place -- the scalar-prefetched schedule below picks one
+# (vrow, slot) tile per grid step -- and because tiles are visited in output-
+# row order, spill vrows accumulate into the same VMEM scratch as their home
+# row and the segment-sum disappears into the row-change write.
+
+def pallas_interpret_default() -> bool:
+    """Kernels compile on TPU; everywhere else interpret mode is the
+    correctness oracle (docs/PERF.md: orders of magnitude slower)."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.lru_cache(maxsize=None)
+def plan_kernel_sequence(plan: RowPackPlan):
+    """Forward tile visitation schedule for the plan-consuming kernel.
+
+    Real tiles stably sorted by owning output block row, so home and spill
+    tiles of one row are consecutive (one accumulator lifetime per row).
+    Returns ``(row_seq, col_seq, vrow_seq, slot_seq)`` int32 numpy arrays;
+    ``row_seq`` carries the usual write-on-row-change sentinel. Cached per
+    plan fingerprint (the plan hashes by it) -- host work runs once.
+    """
+    vrow = np.asarray(plan.vrow, np.int64)
+    slot = np.asarray(plan.slot, np.int64)
+    t_row = np.asarray(plan.row_of_vrow, np.int64)[vrow]
+    # pack_bsr guarantees >= 1 real tile per block row, which build_plan
+    # preserves -- the write-on-row-change protocol needs full coverage
+    assert np.array_equal(np.unique(t_row), np.arange(plan.n_brows)), \
+        "plan does not cover every output block row"
+    order = np.argsort(t_row, kind="stable")
+    row_seq = np.concatenate([t_row[order], [plan.n_brows]]).astype(np.int32)
+    col_seq = np.asarray(plan.col_idx, np.int64)[vrow, slot][order]
+    return (row_seq, col_seq.astype(np.int32),
+            vrow[order].astype(np.int32), slot[order].astype(np.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def plan_t_sequence(plan: RowPackPlan):
+    """Transposed schedule (tiles sorted by block column) for dX = dY @ W.
+
+    Returns ``(t_row_seq, t_col_seq, t_flat)`` where ``t_flat`` indexes the
+    flattened (V*P, bn, bk) values (gathered + transposed per call, like
+    the KernelBSR dds_t path)."""
+    vrow = np.asarray(plan.vrow, np.int64)
+    slot = np.asarray(plan.slot, np.int64)
+    t_row = np.asarray(plan.row_of_vrow, np.int64)[vrow]
+    t_col = np.asarray(plan.col_idx, np.int64)[vrow, slot]
+    assert np.array_equal(np.unique(t_col), np.arange(plan.n_bcols)), \
+        "plan does not cover every input block column"
+    order = np.lexsort((t_row, t_col))
+    t_row_seq = np.concatenate(
+        [t_col[order], [plan.n_bcols]]).astype(np.int32)
+    t_col_seq = t_row[order].astype(np.int32)
+    t_flat = (vrow[order] * plan.p_max + slot[order]).astype(np.int32)
+    return t_row_seq, t_col_seq, t_flat
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def plan_linear_pallas(x, data_rp, plan: RowPackPlan):
+    """Y(M, N) = X(M, K) @ W^T via the compiled plan-consuming Pallas kernel.
+
+    Same layout contract as :func:`plan_linear` (row-grouped (V, P, bn, bk)
+    values), same gradients (padding-slot grads exactly zero); the execution
+    is one Pallas grid over the spill schedule instead of gather + einsum +
+    segment-sum. Interpret mode (off-TPU) is the correctness oracle.
+    """
+    return _plan_pallas_fwd_impl(x, data_rp, plan)
+
+
+def _plan_pallas_fwd_impl(x, data_rp, plan, bias=None, act=None):
+    from repro.kernels.bsr_matmul import plan_dds
+    return plan_dds(x, data_rp, plan_kernel_sequence(plan),
+                    n=plan.shape[0], tile=plan.tile, bias=bias, act=act,
+                    interpret=pallas_interpret_default())
+
+
+def _plan_pallas_fwd(x, data_rp, plan):
+    return _plan_pallas_fwd_impl(x, data_rp, plan), (x, data_rp)
+
+
+def _plan_pallas_bwd(plan, res, dy):
+    from repro.kernels.bsr_matmul import plan_dds_t, plan_sddmm
+    x, data_rp = res
+    interpret = pallas_interpret_default()
+    dx = plan_dds_t(dy, data_rp, plan_t_sequence(plan),
+                    k=plan.shape[1], tile=plan.tile, interpret=interpret)
+    seq = plan_kernel_sequence(plan)
+    g_seq = plan_sddmm(dy, x, seq, tile=plan.tile,
+                       out_dtype=jnp.float32, interpret=interpret)
+    # scatter schedule-ordered tile grads back into the row-grouped layout;
+    # untouched (padding) slots stay exactly zero, matching slot_mask
+    ddata = jnp.zeros(data_rp.shape, jnp.float32)
+    ddata = ddata.at[jnp.asarray(seq[2]), jnp.asarray(seq[3])].set(g_seq)
+    return dx.astype(x.dtype), ddata.astype(data_rp.dtype)
+
+
+plan_linear_pallas.defvjp(_plan_pallas_fwd, _plan_pallas_bwd)
+
+
+def plan_fused_linear(x, data_rp, plan: RowPackPlan, *, bias=None,
+                      act: str | None = None):
+    """Forward-only fused epilogue entry: bias add + activation ('relu' /
+    'gelu' / 'silu') folded into the kernel's row-change write -- the
+    serving-path shape of the op (no extra HBM round-trip for the
+    activation between wi and wo)."""
+    return _plan_pallas_fwd_impl(x, data_rp, plan, bias=bias, act=act)
+
+
+def plan_matmul_pallas(x: jax.Array, data_rp: jax.Array, plan: RowPackPlan):
+    """Batched-x entry point for the Pallas plan backend."""
+    lead = x.shape[:-1]
+    y = plan_linear_pallas(x.reshape(-1, x.shape[-1]), data_rp, plan)
+    return y.reshape(*lead, plan.shape[0])
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlanChoice:
+    """A RowPackPlan pinned to a specific plan-consuming execution backend.
+
+    ``backend='plan_pallas'`` routes models/common.linear through
+    :func:`plan_linear_pallas`; the wrapper (rather than a bare plan) keeps
+    the choice serializable and the pattern key distinct from the XLA plan
+    path, mirroring autotune.BackendChoice for flat KernelBSR packs.
+    """
+
+    plan: RowPackPlan
+    backend: str = "plan_pallas"
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.plan.shape
+
+    @property
+    def tile(self) -> Tuple[int, int]:
+        return self.plan.tile
+
+    @property
+    def density(self) -> float:
+        return self.plan.density
+
+    @property
+    def fingerprint(self) -> bytes:
+        return (b"plan_choice:" + self.backend.encode() + b":"
+                + self.plan.fingerprint)
+
+    def __hash__(self):
+        return hash(self.fingerprint)
+
+    def __eq__(self, other):
+        return (isinstance(other, PlanChoice)
+                and self.fingerprint == other.fingerprint)

@@ -169,6 +169,26 @@ def bsr_matmul(x: jax.Array, w: KernelBSR, backend: str | None = None):
     return y.reshape(*lead, w.shape[0])
 
 
+def default_plan_backend() -> str:
+    """Execution backend for row-grouped plan layouts: the compiled
+    plan-consuming Pallas kernel on TPU, the XLA composition elsewhere."""
+    return "plan_pallas" if jax.default_backend() == "tpu" else "plan"
+
+
+def plan_dispatch(x, data_rp, plan, backend: str | None = None):
+    """Plan-layout matmul behind a backend switch: 'plan' = the XLA
+    gather/einsum/segment-sum composition (exec_plan.plan_matmul),
+    'plan_pallas' = the compiled kernel driven by the plan's spill schedule
+    (exec_plan.plan_matmul_pallas). Both differentiate; both take the same
+    row-grouped (V, P, bn, bk) values."""
+    backend = backend or default_plan_backend()
+    if backend == "plan_pallas":
+        return xp.plan_matmul_pallas(x, data_rp, plan)
+    if backend == "plan":
+        return xp.plan_matmul(x, data_rp, plan)
+    raise ValueError(f"unknown plan backend {backend}")
+
+
 def sparsify_weight(w_dense, tile: Tuple[int, int] = (128, 128),
                     nnzt: int | None = None) -> KernelBSR:
     """Host-side packing step (offline, like TVM's relay BSR conversion)."""

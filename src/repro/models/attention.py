@@ -15,6 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_decode import (flash_decode, paged_flash_decode,
+                                        resolved_decode_kernel)
 from repro.models.common import (apply_rope, init_linear, linear, normal_init,
                                  paged_bulk_write, paged_row_write, paged_view)
 
@@ -595,9 +597,15 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
                                active)
         new_cache = {"k_pages": kp, "v_pages": vp, "pos_map": pm,
                      "page_table": pt}
-        k_view = paged_view(kp, pt, pm)
-        v_view = paged_view(vp, pt, pm)
-        out = decode_attention(q, k_view, v_view, pm, posv, window=window)
+        if resolved_decode_kernel() == "flash":
+            # the split-K kernel reads pages in place via the prefetched
+            # table -- no per-step dense-view gather
+            out = paged_flash_decode(q, kp, vp, pt, pm, posv, window=window)
+        else:
+            k_view = paged_view(kp, pt, pm)
+            v_view = paged_view(vp, pt, pm)
+            out = decode_attention(q, k_view, v_view, pm, posv,
+                                   window=window)
     else:
         assert s == 1 and pos is not None
         if kv_override is None:
@@ -633,7 +641,11 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
                 cv = _masked_row_write(cache["v"], rows, slot, v[:, 0],
                                        active)
                 new_cache = {"k": ck, "v": cv, "pos_map": pm}
-                out = decode_attention(q, ck, cv, pm, posv, window=window)
+                if resolved_decode_kernel() == "flash":
+                    out = flash_decode(q, ck, cv, pm, posv, window=window)
+                else:
+                    out = decode_attention(q, ck, cv, pm, posv,
+                                           window=window)
         else:
             # cross-attn decode: every encoder position is visible
             t = k.shape[1]

@@ -118,6 +118,9 @@ def linear(p, x, pack=None, backend=None):
         ``ShardedPlan`` subclass additionally carries the tensor-parallel
         vrow partitioning and (when a mesh is attached) pins the output
         sharding via :func:`tp_constrain`;
+      * a ``PlanChoice`` -- the same row-grouped layout pinned to a
+        plan-consuming execution backend (``'plan_pallas'`` = the compiled
+        Pallas kernel driven by the plan's spill schedule);
       * a ``KernelBSR`` -- ``p['w']`` holds packed tile values (nnzt, bn, bk)
         and the matmul dispatches through ``bsr_linear``'s backends;
       * an ``autotune.BackendChoice`` -- a KernelBSR pattern pinned to the
@@ -126,8 +129,11 @@ def linear(p, x, pack=None, backend=None):
         weight and the tile-skipping ``masked`` kernel executes.
     """
     if pack is not None:
-        from repro.kernels.exec_plan import (RowPackPlan, ShardedPlan,
-                                             plan_matmul)
+        from repro.kernels.exec_plan import (PlanChoice, RowPackPlan,
+                                             ShardedPlan, plan_matmul)
+        if isinstance(pack, PlanChoice):
+            from repro.kernels.ops import plan_dispatch
+            return plan_dispatch(x, p["w"], pack.plan, backend=pack.backend)
         if isinstance(pack, RowPackPlan):
             y = plan_matmul(x, p["w"], pack)
             if isinstance(pack, ShardedPlan) and pack.mesh is not None:

@@ -110,6 +110,10 @@ def _realize_backend(pack, data, backend: str,
         :class:`~repro.kernels.exec_plan.ShardedPlan` whose vrow axis is
         mesh-"model"-shardable (indivisible patterns fall back to the
         replicated plan, the ``spec_for_param`` divisibility rule);
+      * ``plan_pallas`` -> the same row-grouped layout wrapped in a
+        :class:`~repro.kernels.exec_plan.PlanChoice` pinning every call to
+        the compiled plan-consuming Pallas kernel (no sharded form --
+        ShardedPlan stays on the XLA 'plan' path);
       * ``bsr``     -> bare KernelBSR (runtime ``default_backend()``);
       * ``gather``/``rowpack``/``pallas`` -> the pattern pinned to that
         ``bsr_linear`` backend (``autotune.BackendChoice``);
@@ -131,6 +135,10 @@ def _realize_backend(pack, data, backend: str,
         else:
             plan = plan_for_pack(pack, registry)
         return plan, pack_plan_data(plan, data)
+    if backend == "plan_pallas":
+        from repro.kernels.exec_plan import PlanChoice
+        plan = plan_for_pack(pack, registry)
+        return PlanChoice(plan), pack_plan_data(plan, data)
     if backend == "bsr":
         return pack, data
     if backend == "dense":
@@ -235,6 +243,7 @@ def _pack_nnzt(pk) -> Optional[int]:
     if pk is None:
         return None
     inner = getattr(pk, "pack", pk)             # BackendChoice wraps a BSR
+    inner = getattr(inner, "plan", inner)       # PlanChoice wraps a plan
     if hasattr(inner, "real_nnzt"):
         return int(inner.real_nnzt)
     if hasattr(inner, "tile_mask"):

@@ -27,7 +27,7 @@ from repro.core.pattern_reuse import PatternRegistry
 from repro.core.sparsity import SparsityConfig
 from repro.kernels.autotune import BackendChoice, MaskedPack
 from repro.kernels.bsr_matmul import KernelBSR
-from repro.kernels.exec_plan import (RowPackPlan, ShardedPlan,
+from repro.kernels.exec_plan import (PlanChoice, RowPackPlan, ShardedPlan,
                                      kernel_pattern_fingerprint)
 
 _PLAN_FIELDS = ("col_idx", "slot_mask", "row_of_vrow", "vrow", "slot")
@@ -76,7 +76,7 @@ def pattern_key(pack) -> bytes:
     uniqueness key of ``Servable.stats()``. Choice/masked packs embed the
     backend in their fingerprint, so the same pattern pinned to two
     different backends is (correctly) two keys."""
-    if isinstance(pack, (RowPackPlan, BackendChoice, MaskedPack)):
+    if isinstance(pack, (RowPackPlan, PlanChoice, BackendChoice, MaskedPack)):
         return pack.fingerprint
     return kernel_pattern_fingerprint(pack)
 
@@ -156,6 +156,20 @@ def packs_to_arrays(packs: Dict[str, object]) -> Tuple[dict, dict]:
                               "real_nnzt": pk.real_nnzt})
                 for f in _PLAN_FIELDS:
                     arrays[f"p{idx}_{f}"] = np.asarray(getattr(pk, f))
+            elif isinstance(pk, PlanChoice):
+                # plan fields + the pinned backend; the inner plan's own
+                # fingerprint is stored too so the registry-cached rebuild
+                # shares the plan with any bare-'plan' packs of the same
+                # pattern
+                plan = pk.plan
+                metas.append({"kind": "plan_choice", "backend": pk.backend,
+                              "shape": list(plan.shape),
+                              "tile": list(plan.tile), "nnzt": plan.nnzt,
+                              "real_nnzt": plan.real_nnzt})
+                arrays[f"p{idx}_plan_fingerprint"] = np.frombuffer(
+                    plan.fingerprint, np.uint8)
+                for f in _PLAN_FIELDS:
+                    arrays[f"p{idx}_{f}"] = np.asarray(getattr(plan, f))
             elif isinstance(pk, MaskedPack):
                 metas.append({"kind": "masked", "shape": list(pk.shape),
                               "tile": list(pk.tile)})
@@ -230,6 +244,26 @@ def packs_from_arrays(meta: dict, arrays, registry: PatternRegistry = None
                 built.append(registry.cached(("rowpack_plan", fp), build))
             else:
                 built.append(build())
+        elif m["kind"] == "plan_choice":
+            plan_fp = bytes(np.asarray(arrays[f"p{idx}_plan_fingerprint"],
+                                       np.uint8))
+            def build_plan_obj(idx=idx, m=m, plan_fp=plan_fp):
+                return RowPackPlan(
+                    col_idx=np.asarray(arrays[f"p{idx}_col_idx"], np.int32),
+                    slot_mask=np.asarray(arrays[f"p{idx}_slot_mask"], bool),
+                    row_of_vrow=np.asarray(arrays[f"p{idx}_row_of_vrow"],
+                                           np.int32),
+                    vrow=np.asarray(arrays[f"p{idx}_vrow"], np.int32),
+                    slot=np.asarray(arrays[f"p{idx}_slot"], np.int32),
+                    shape=tuple(m["shape"]), tile=tuple(m["tile"]),
+                    nnzt=int(m["nnzt"]), real_nnzt=int(m["real_nnzt"]),
+                    fingerprint=plan_fp)
+            if registry is not None:
+                plan = registry.cached(("rowpack_plan", plan_fp),
+                                       build_plan_obj)
+            else:
+                plan = build_plan_obj()
+            built.append(PlanChoice(plan, m["backend"]))
         elif m["kind"] == "masked":
             built.append(MaskedPack(
                 tile_mask=np.asarray(arrays[f"p{idx}_tile_mask"], bool),

@@ -31,6 +31,7 @@ from repro.models.sampling import sample_tokens
 from repro.core.pattern_reuse import PatternRegistry
 from repro.core.pruner import _path_name, oneshot_prune, tied_prune
 from repro.kernels.exec_plan import RowPackPlan, ShardedPlan
+from repro.kernels.flash_decode import decode_kernel_override
 from repro.models import api as model_api
 from repro.serving.export import export_params
 from repro.serving.serialize import (LeafReader, ServableLoadError,
@@ -144,6 +145,7 @@ class Servable:
         self.export_stats = export_stats or {}
         self.stats_at_save = stats_at_save
         self._fwd_fn = None
+        self._decode_kind = None
         self._decode_fn = None
         self._decode_many_fn = None
         self._engine_decode = None
@@ -187,6 +189,33 @@ class Servable:
             cache = model_api.shard_cache(cache, self.cfg, self.mesh)
         return cache
 
+    def decode_kernel_kind(self) -> str:
+        """Resolve the attention decode kernel every jitted decode closure
+        of this servable pins at trace time ('xla' | 'flash' | 'auto'):
+        the ``REPRO_DECODE_KERNEL`` env var wins when set to a non-'auto'
+        value, then a non-'auto' ``spec.decode_kernel``, then -- for
+        'auto' -- :func:`repro.kernels.autotune.choose_decode_kernel` over
+        this config's decode shape (so the choice is measured/stubbed per
+        device and persisted like every other autotune winner)."""
+        if self._decode_kind is None:
+            env = os.environ.get("REPRO_DECODE_KERNEL", "").strip()
+            if env and env != "auto":
+                self._decode_kind = env
+            elif self.spec.decode_kernel != "auto":
+                self._decode_kind = self.spec.decode_kernel
+            else:
+                cfg = self.cfg
+                if not getattr(cfg, "n_kv_heads", 0):
+                    # attention-free families (pure SSM) never reach the
+                    # decode-attention kernel -- nothing to tune
+                    self._decode_kind = "xla"
+                else:
+                    from repro.kernels.autotune import choose_decode_kernel
+                    self._decode_kind = choose_decode_kernel(
+                        b=8, t=512, hq=cfg.n_heads, hkv=cfg.n_kv_heads,
+                        d=cfg.head_dim).backend
+        return self._decode_kind
+
     def decode_step(self, cache, token, pos):
         """(cache, token (B,1), pos) -> (logits, new_cache); encoder-only
         families raise (models/api.py contract). ``pos`` is a scalar or a
@@ -194,9 +223,13 @@ class Servable:
         cache untouched) -- the continuous-batching calling convention."""
         if self._decode_fn is None:
             cfg, packs = self.cfg, self.packs
-            self._decode_fn = jax.jit(
-                lambda p, c, t, s: model_api.decode_step(p, c, cfg, t, s,
-                                                         packs=packs))
+            kind = self.decode_kernel_kind()
+
+            def step(p, c, t, s):
+                with decode_kernel_override(kind):
+                    return model_api.decode_step(p, c, cfg, t, s,
+                                                 packs=packs)
+            self._decode_fn = jax.jit(step)
         return self._decode_fn(self.params, cache, token, pos)
 
     def decode_many(self, cache, token, pos, n_steps, *, remaining=None,
@@ -211,11 +244,13 @@ class Servable:
         ``(K, temperature, top_k)``."""
         if self._decode_many_fn is None:
             cfg, packs = self.cfg, self.packs
+            kind = self.decode_kernel_kind()
 
             def fused(p, c, t, s, rem, eos, k, n, temp, tk):
-                return model_api.decode_many(
-                    p, c, cfg, t, s, n, packs=packs, remaining=rem,
-                    eos_id=eos, key=k, temperature=temp, top_k=tk)
+                with decode_kernel_override(kind):
+                    return model_api.decode_many(
+                        p, c, cfg, t, s, n, packs=packs, remaining=rem,
+                        eos_id=eos, key=k, temperature=temp, top_k=tk)
 
             self._decode_many_fn = jax.jit(fused, static_argnums=(7, 8, 9))
         b = jnp.shape(token)[0]
@@ -261,10 +296,12 @@ class Servable:
         leaf; cached per sharding tree by :meth:`engine_fns`."""
         if self._engine_decode is None or cache_shardings is not None:
             cfg, packs = self.cfg, self.packs
+            kind = self.decode_kernel_kind()
 
             def decode(p, c, t, s, key, temperature, top_k):
-                logits, c = model_api.decode_step(p, c, cfg, t, s,
-                                                  packs=packs)
+                with decode_kernel_override(kind):
+                    logits, c = model_api.decode_step(p, c, cfg, t, s,
+                                                      packs=packs)
                 rows = logits[:, 0, :]
                 ok = jnp.isfinite(rows).all(axis=-1)
                 nxt = sample_tokens(rows, key, s,
@@ -290,13 +327,15 @@ class Servable:
         ``cache_shardings`` as in :meth:`_engine_decode_fn`."""
         if self._engine_decode_many is None or cache_shardings is not None:
             cfg, packs = self.cfg, self.packs
+            kind = self.decode_kernel_kind()
 
             def fused(p, c, t, s, rem, eos, key, n_steps, temperature,
                       top_k):
-                return model_api.decode_many(
-                    p, c, cfg, t, s, n_steps, packs=packs, remaining=rem,
-                    eos_id=eos, key=key, temperature=temperature,
-                    top_k=top_k)
+                with decode_kernel_override(kind):
+                    return model_api.decode_many(
+                        p, c, cfg, t, s, n_steps, packs=packs,
+                        remaining=rem, eos_id=eos, key=key,
+                        temperature=temperature, top_k=top_k)
 
             kw = {}
             if cache_shardings is not None:
@@ -579,7 +618,16 @@ def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
                         mesh=mesh)
 
     chooser = None
-    if spec.backend == "auto":
+    if spec.backend == "plan_pallas":
+        # pinned, not measured: every pack serves through the compiled
+        # plan-consuming kernel (export wraps each plan in a PlanChoice);
+        # the chooser protocol only needs backend/cache_hit/mode
+        import types
+
+        def chooser(pack, shard=None):
+            return types.SimpleNamespace(backend="plan_pallas",
+                                         cache_hit=False, mode="pinned")
+    elif spec.backend == "auto":
         from repro.kernels.autotune import choose_backend
 
         def chooser(pack, shard=None):

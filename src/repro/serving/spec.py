@@ -20,7 +20,12 @@ DEFAULT_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
                    "ffn/wi", "ffn/wo")
 
 PRUNE_RECIPES = ("none", "oneshot", "tied")
-BACKENDS = ("plan", "bsr", "dense", "auto")
+BACKENDS = ("plan", "plan_pallas", "bsr", "dense", "auto")
+#: attention decode-step kernel: 'xla' (materialized softmax), 'flash'
+#: (split-K online-softmax Pallas kernel, kernels/flash_decode.py), or
+#: 'auto' (choose_decode_kernel measures/stubs per shape+device; the
+#: REPRO_DECODE_KERNEL env var overrides all of these at trace time).
+DECODE_KERNELS = ("auto", "xla", "flash")
 PARTITIONS = ("tp", "dp", "tp+dp")
 #: admission-queue backpressure policies (ServingEngine(overflow=...),
 #: docs/API.md §Engine robustness). With a bounded queue (max_queue):
@@ -69,7 +74,11 @@ class ServingSpec:
         union). The paper's §2.2 task-buffer collapse.
       backend: ``'plan'`` stores weights row-grouped offline and serves
         through the precomputed-RowPackPlan path (the serving optimum);
-        ``'bsr'`` keeps packed ``(nnzt, bn, bk)`` values and dispatches via
+        ``'plan_pallas'`` stores the same row-grouped layout but pins every
+        pack to the compiled plan-consuming Pallas kernel (the plan's spill
+        schedule drives the grid -- TPU-native, interpret-mode oracle
+        elsewhere); ``'bsr'`` keeps packed ``(nnzt, bn, bk)`` values and
+        dispatches via
         ``bsr_linear``'s runtime backends (rowpack on CPU, pallas on TPU);
         ``'dense'`` skips BSR export entirely -- the (possibly pruned)
         weights serve through plain dense matmuls, the paper's negative
@@ -108,6 +117,12 @@ class ServingSpec:
       kv_page_size: tokens per physical KV page (paged layout only). Also
         the prefix-sharing granularity: only whole pages are shared, so
         smaller pages share more but gather/scatter more page rows.
+      decode_kernel: attention decode-step kernel. ``'xla'`` is the
+        materialized-softmax reference, ``'flash'`` the split-K
+        online-softmax Pallas kernel (paged caches gather KV pages in
+        place -- no dense-view reassembly), ``'auto'`` asks
+        ``kernels.autotune.choose_decode_kernel`` per shape+device. The
+        ``REPRO_DECODE_KERNEL`` env var overrides any spec value.
     """
 
     tile: Tuple[int, int] = (128, 128)
@@ -124,6 +139,7 @@ class ServingSpec:
     partition: str = "tp"
     kv_layout: str = "dense"
     kv_page_size: int = 16
+    decode_kernel: str = "auto"
 
     def __post_init__(self):
         if self.kv_layout not in KV_LAYOUTS:
@@ -140,6 +156,9 @@ class ServingSpec:
             raise ValueError(f"prune={self.prune!r} not in {PRUNE_RECIPES}")
         if self.backend not in BACKENDS:
             raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
+        if self.decode_kernel not in DECODE_KERNELS:
+            raise ValueError(
+                f"decode_kernel={self.decode_kernel!r} not in {DECODE_KERNELS}")
         if self.dtype not in (None, "float32", "bfloat16"):
             raise ValueError(f"unsupported dtype {self.dtype!r}")
         if self.partition not in PARTITIONS:
