@@ -38,6 +38,13 @@ SECTIONS = ("engine_smoke", "engine", "engine_fused_smoke", "engine_fused",
             "flash_decode_smoke", "flash_decode",
             "plan_bsr_smoke", "plan_bsr")
 
+#: open_loop cells carry LATENCY percentiles (lower is better, the
+#: opposite direction from every throughput section above): p95 TTFT and
+#: p95 per-token latency per (arm, offered qps). Warn-only like the rest
+#: -- open-loop tails on a shared box are the noisiest numbers in the
+#: file, so the threshold only flags step-change regressions
+LATENCY_SECTIONS = ("open_loop_smoke", "open_loop")
+
 
 def _cells(section_payload):
     """-> {(arm, cell key, sync_every): rate}. Engine sections key by
@@ -53,8 +60,25 @@ def _cells(section_payload):
     return out
 
 
+def _latency_cells(section_payload):
+    """-> {(arm, qps, metric): ms} for the open_loop sections; lower is
+    better. Cells whose percentile is None (e.g. everything shed at an
+    extreme qps) are skipped."""
+    out = {}
+    for arm, cells in (section_payload.get("results") or {}).items():
+        for cell in cells:
+            for metric, group in (("ttft_p95", "ttft"), ("tpot_p95", "tpot")):
+                ms = (cell.get(group) or {}).get("p95_ms")
+                if ms:
+                    out[(arm, cell.get("qps"), metric)] = ms
+    return out
+
+
 def compare(baseline: dict, fresh: dict, threshold: float = 0.2):
-    """-> list of (section, cell key, baseline tok/s, fresh tok/s)."""
+    """-> list of (section, cell key, baseline, fresh, unit). Throughput
+    sections regress when the fresh rate drops by more than ``threshold``;
+    open_loop latency sections regress when the fresh p95 RISES by more
+    than ``threshold`` (direction inverted: latency, lower is better)."""
     regressions = []
     for section in SECTIONS:
         if section not in baseline or section not in fresh:
@@ -66,7 +90,19 @@ def compare(baseline: dict, fresh: dict, threshold: float = 0.2):
             if not base_tps or not new_tps:
                 continue
             if new_tps < (1.0 - threshold) * base_tps:
-                regressions.append((section, key, base_tps, new_tps))
+                regressions.append((section, key, base_tps, new_tps,
+                                    "tok/s"))
+    for section in LATENCY_SECTIONS:
+        if section not in baseline or section not in fresh:
+            continue
+        base_cells = _latency_cells(baseline[section])
+        fresh_cells = _latency_cells(fresh[section])
+        for key, base_ms in base_cells.items():
+            new_ms = fresh_cells.get(key)
+            if not base_ms or not new_ms:
+                continue
+            if new_ms > (1.0 + threshold) * base_ms:
+                regressions.append((section, key, base_ms, new_ms, "ms"))
     return regressions
 
 
@@ -90,12 +126,16 @@ def main(argv):
         print(f"bench_guard: cannot compare ({e}); skipping")
         return 0
     regressions = compare(baseline, fresh, threshold)
-    for section, (arm, slots, sync), base_tps, new_tps in regressions:
-        print(f"WARNING: bench regression in {section}: {arm} slots={slots} "
-              f"sync_every={sync}: {base_tps:.1f} -> {new_tps:.1f} tok/s "
-              f"({100 * (new_tps / base_tps - 1):+.0f}%)")
+    for section, key, base_v, new_v, unit in regressions:
+        arm, mid, tail = key
+        desc = (f"{arm} qps={mid} {tail}" if unit == "ms"
+                else f"{arm} slots={mid} sync_every={tail}")
+        print(f"WARNING: bench regression in {section}: {desc}: "
+              f"{base_v:.1f} -> {new_v:.1f} {unit} "
+              f"({100 * (new_v / base_v - 1):+.0f}%)")
     if not regressions:
-        print(f"bench_guard: no >{threshold:.0%} throughput regression")
+        print(f"bench_guard: no >{threshold:.0%} regression "
+              f"(throughput or open-loop latency)")
     return 1 if (regressions and "--strict" in argv) else 0
 
 

@@ -232,8 +232,9 @@ def restore_slot_paged(cache, cfg: ModelConfig, slot, page_row, resume_len):
 def prefill_suffix(params, cache, cfg: ModelConfig, tokens, slot, start,
                    length=None, packs=None):
     """Prefill only the suffix of a prompt whose first ``start`` tokens are
-    already resident in paged slot ``slot`` (prefix-cache hit). Pure
-    global-attention paged configs only (see lm.prefill_suffix)."""
+    already resident in slot ``slot`` of the batched engine cache: the
+    paged shared-prefix path (prefix-cache hit) and the dense-KV chunked-
+    prefill path share this entry point (see lm.prefill_suffix)."""
     if cfg.family in ("audio", "bert"):
         raise ValueError(f"no one-pass prefill for family {cfg.family!r}")
     return lm_mod.prefill_suffix(params, cache, cfg, tokens, slot, start,

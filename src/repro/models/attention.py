@@ -499,6 +499,15 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
         into a dense batch-1 sub-cache and page-scatters it instead
         (lm.write_slot_paged).
 
+    A DENSE cache with ``page_slot``/``page_start`` and S > 1 is the same
+    suffix/chunk-prefill contract on slot-dense storage (chunked prefill,
+    docs/API.md §SLO scheduling): x holds one slot's next prompt slice, the
+    queries attend over the slot's current ring content concatenated with
+    the fresh chunk K/V (attend-before-write -- see the branch comment),
+    and the chunk then ring-writes latest-wins into the slot row. Works for
+    global (T = cache_len) and windowed (T = window) layers; int8-quantized
+    caches are excluded (the engine gates chunking off for them).
+
     kv_override: (k, v) tensors for cross-attention (enc-dec).
 
     When the sparse export fused the q/k/v projections (``packs['wqkv']``,
@@ -566,6 +575,60 @@ def apply_attention(p, x, cfg, *, positions, window=0, cache=None, pos=None,
         qpos = pos_i[None, :, None]                              # (1,S,1)
         ok = (pm_row[None, None, :] >= 0) & (pm_row[None, None, :] <= qpos)
         out = masked_attention(q, k_view, v_view, ok)
+        out = linear(p["wo"], _merge_heads(out), packs and packs.get("wo"))
+        return out, new_cache
+    if cache is not None and s > 1 and page_slot is not None:
+        # DENSE chunk/suffix prefill: x holds ONE slot's next prompt slice
+        # at absolute positions page_start.. against the BATCHED engine
+        # cache. Attention runs BEFORE the cache write over a concat of the
+        # slot's current ring content and the fresh chunk K/V -- a write-
+        # then-view order would let the chunk's own tail overwrite ring
+        # slots (slot = pos % window) that earlier chunk queries still need.
+        assert kv_override is None and b == 1
+        if "k_scale" in cache:
+            raise NotImplementedError(
+                "chunked prefill does not compose with kv_cache_quant: the "
+                "one-shot path attends unquantized chunk K/V, so a chunked "
+                "run could not be token-exact against it")
+        t = cache["k"].shape[1]
+        nslots = cache["k"].shape[0]
+        length = s if prefill_len is None else prefill_len
+        start = jnp.asarray(page_start, jnp.int32)
+        pos_i = start + jnp.arange(s)
+        validw = jnp.arange(s) < length
+        ck_row = cache["k"][page_slot]                           # (T,H,D)
+        cv_row = cache["v"][page_slot]
+        pm = cache["pos_map"]
+        if pm.ndim == 1:                                # legacy shared map
+            pm = jnp.broadcast_to(pm, (nslots, t))
+        pm_row = pm[page_slot]                                   # (T,)
+        k_eff = jnp.concatenate([ck_row[None], k], axis=1)       # (1,T+S,..)
+        v_eff = jnp.concatenate([cv_row[None], v], axis=1)
+        kvpos = jnp.concatenate([pm_row, jnp.where(validw, pos_i, -1)])
+        qpos = pos_i[None, :, None]                              # (1,S,1)
+        ok = (kvpos[None, None, :] >= 0) & (kvpos[None, None, :] <= qpos)
+        if window > 0:
+            ok &= (qpos - kvpos[None, None, :]) < window
+        out = masked_attention(q, k_eff, v_eff, ok)
+        # latest-wins ring write of the chunk: prefill_slot_sources' gather
+        # plan shifted to absolute positions start..start+length-1; ring
+        # slots whose latest congruent position predates the chunk keep
+        # their old content
+        j = jnp.arange(t)
+        last = start + jnp.asarray(length, jnp.int32) - 1
+        src_abs = j + t * ((last - j) // t)
+        okw = (src_abs >= start) & (src_abs <= last)
+        src_rel = jnp.clip(src_abs - start, 0, s - 1)
+
+        def ring_merge(row, chunk):
+            keep = okw.reshape((t,) + (1,) * (row.ndim - 1))
+            return jnp.where(keep, chunk[0][src_rel].astype(row.dtype), row)
+
+        new_cache = {
+            "k": cache["k"].at[page_slot].set(ring_merge(ck_row, k)),
+            "v": cache["v"].at[page_slot].set(ring_merge(cv_row, v)),
+            "pos_map": pm.at[page_slot].set(
+                jnp.where(okw, src_abs, pm_row))}
         out = linear(p["wo"], _merge_heads(out), packs and packs.get("wo"))
         return out, new_cache
     if cache is None or s > 1:

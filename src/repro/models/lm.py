@@ -101,15 +101,18 @@ def _apply_layer(p, h, cfg, kind: LayerKind, *, positions, cache=None,
         out, new_mix_cache = mla_mod.apply_mla(
             p["attn"], hn, cfg, positions=positions,
             cache=cache.get("mix") if cache else None, pos=pos,
-            packs=mix_packs, prefill_len=prefill_len)
+            packs=mix_packs, prefill_len=prefill_len, page_slot=page_slot,
+            page_start=page_start)
     elif kind.mixer == "ssm":
         out, new_mix_cache = ssm_mod.apply_ssm(
             p["mixer"], hn, cfg, cache=cache.get("mix") if cache else None,
-            pos=pos, packs=mix_packs, prefill_len=prefill_len)
+            pos=pos, packs=mix_packs, prefill_len=prefill_len,
+            page_slot=page_slot)
     elif kind.mixer == "rglru":
         out, new_mix_cache = rglru_mod.apply_rglru(
             p["mixer"], hn, cfg, cache=cache.get("mix") if cache else None,
-            pos=pos, packs=mix_packs, prefill_len=prefill_len)
+            pos=pos, packs=mix_packs, prefill_len=prefill_len,
+            page_slot=page_slot)
     # name the mixer output so the remat policy can pin it: the layer-body
     # recompute then skips re-running attention forward (saves ~2 of the 9
     # O(S^2) passes per layer; §Perf iter 4)
@@ -425,12 +428,15 @@ def decode_step(params, cache, cfg: ModelConfig, token, pos, *, packs=None):
 def prefill_suffix(params, cache, cfg: ModelConfig, tokens, slot, start,
                    length=None, *, packs=None):
     """Prefill only the *suffix* ``tokens`` (1, S) of a prompt whose first
-    ``start`` tokens are already resident in paged slot ``slot`` of the
-    batched ``cache`` (a prefix-cache hit): each layer scatters the suffix
-    KV at absolute positions start..start+length-1 into the slot's pages
-    and attends over shared-prefix + suffix with an explicit mask. Pure
-    global-attention paged configs only (the engine gates on this); sample
-    the next token from ``logits[0, length - 1]``."""
+    ``start`` tokens are already resident in slot ``slot`` of the batched
+    ``cache``: each layer writes the suffix KV (or carries recurrent state)
+    at absolute positions start..start+length-1 for that slot and attends
+    over resident-prefix + suffix with an explicit mask. Serves both the
+    paged shared-prefix path (prefix-cache hit; PR 7) and dense-KV
+    *chunked prefill* (docs/API.md §SLO scheduling), across every decode-
+    capable mixer: global/windowed attention (dense rings + paged pools),
+    MLA latents, SSM state carry, RG-LRU state carry. Sample the next
+    token from ``logits[0, length - 1]`` after the final chunk."""
     prefix, pattern, n_periods, suffix = cfg.layer_plan()
     b, s = tokens.shape
     length = s if length is None else length

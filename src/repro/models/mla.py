@@ -13,7 +13,9 @@ import jax.numpy as jnp
 
 from repro.models.attention import (_masked_row_write, as_slot_positions,
                                     decode_attention, flash_attention,
-                                    full_attention, prefill_slot_sources)
+                                    full_attention, masked_attention,
+                                    paged_suffix_positions,
+                                    prefill_slot_sources)
 from repro.models.common import (apply_rope, init_linear, linear,
                                  paged_row_write, paged_view, rms_norm)
 
@@ -64,7 +66,7 @@ def _project_q(p, x, cfg, packs=None):
 
 
 def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None,
-              prefill_len=None):
+              prefill_len=None, page_slot=None, page_start=None):
     b, s, d = x.shape
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     q_nope, q_rope = _project_q(p, x, cfg, packs)
@@ -73,6 +75,67 @@ def apply_mla(p, x, cfg, *, positions, cache=None, pos=None, packs=None,
     c_kv = rms_norm(linear(p["w_dkv"], x), p["kv_norm"]["scale"])
     k_rope = apply_rope(linear(p["w_krope"], x)[:, :, None, :],
                         positions, theta=cfg.rope_theta)       # (b,s,1,dr)
+
+    if cache is not None and s > 1 and page_slot is not None:
+        # chunk/suffix prefill: x holds ONE slot's next prompt slice at
+        # absolute positions page_start.. . The latent cache is linear
+        # (slot == position, no ring), so the chunk's latents write first
+        # and the queries attend EXPANDED K/V materialized from the updated
+        # latent view -- the same per-token expansion the one-shot prefill
+        # runs, just against cached latents for positions < page_start.
+        assert b == 1
+        length = s if prefill_len is None else prefill_len
+        start = jnp.asarray(page_start, jnp.int32)
+        pos_i = start + jnp.arange(s)
+        validw = jnp.arange(s) < length
+        if "c_kv_pages" in cache:
+            n, psz = (cache["c_kv_pages"].shape[0],
+                      cache["c_kv_pages"].shape[1])
+            npg = cache["page_table"].shape[1]
+            pt_row = cache["page_table"][page_slot]              # (NP,)
+            pp = pt_row[jnp.clip(pos_i // psz, 0, npg - 1)]
+            pp = jnp.where(validw & (pp >= 0), pp, n)            # OOB: drop
+            cp = cache["c_kv_pages"].at[pp, pos_i % psz].set(c_kv[0])
+            rp = cache["k_rope_pages"].at[pp, pos_i % psz].set(
+                k_rope[0, :, 0, :])
+            pm_row = paged_suffix_positions(npg * psz, start, length)
+            new_cache = {"c_kv_pages": cp, "k_rope_pages": rp,
+                         "pos_map": cache["pos_map"].at[page_slot].set(
+                             pm_row),
+                         "page_table": cache["page_table"]}
+            c_view = paged_view(cp, pt_row[None], pm_row[None])  # (1,T,r)
+            r_view = paged_view(rp, pt_row[None], pm_row[None])  # (1,T,dr)
+        else:
+            t = cache["c_kv"].shape[1]
+            nslots = cache["c_kv"].shape[0]
+            dst = jnp.where(validw, pos_i, t)           # OOB: drop padding
+            c_row = cache["c_kv"][page_slot].at[dst].set(
+                c_kv[0].astype(cache["c_kv"].dtype))
+            r_row = cache["k_rope"][page_slot].at[dst].set(
+                k_rope[0, :, 0, :].astype(cache["k_rope"].dtype))
+            pm = cache["pos_map"]
+            if pm.ndim == 1:                            # legacy shared map
+                pm = jnp.broadcast_to(pm, (nslots, t))
+            pm_row = paged_suffix_positions(t, start, length)
+            new_cache = {"c_kv": cache["c_kv"].at[page_slot].set(c_row),
+                         "k_rope": cache["k_rope"].at[page_slot].set(r_row),
+                         "pos_map": pm.at[page_slot].set(pm_row)}
+            c_view, r_view = c_row[None], r_row[None]
+        tv = c_view.shape[1]
+        k_nope_all = linear(p["w_uk"], c_view).reshape(1, tv, h, dn)
+        v_all = linear(p["w_uv"], c_view).reshape(1, tv, h, dv)
+        k_all = jnp.concatenate(
+            [k_nope_all,
+             jnp.broadcast_to(r_view[:, :, None, :], (1, tv, h, dr))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        vp = jnp.pad(v_all, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        qpos = pos_i[None, :, None]                              # (1,S,1)
+        ok = (pm_row[None, None, :] >= 0) & (pm_row[None, None, :] <= qpos)
+        o = masked_attention(q, k_all, vp, ok)[..., :dv]
+        out = linear(p["wo"], o.reshape(1, s, h * dv),
+                     packs and packs.get("wo"))
+        return out, new_cache
 
     if cache is None or s > 1:
         # expanded path: materialize per-head K/V from latents

@@ -69,16 +69,27 @@ def _lru_gates(p, xr):
 
 
 def apply_rglru(p, x, cfg, *, cache=None, pos=None, packs=None,
-                prefill_len=None, **_):
+                prefill_len=None, page_slot=None, **_):
     b, s, _ = x.shape
     gate = jax.nn.gelu(linear(p["in_gate"], x,
                               packs and packs.get("in_gate")).astype(jnp.float32))
     xr = linear(p["in_x"], x, packs and packs.get("in_x"))
 
     prefill = cache is not None and s > 1
+    # chunk/suffix prefill: x holds ONE slot's next prompt slice against the
+    # BATCHED engine cache -- continue from the slot's carried h and real
+    # conv history instead of zeros (docs/API.md §SLO scheduling)
+    chunked = prefill and page_slot is not None
     if cache is None or prefill:
+        w1 = cfg.conv_width - 1
         xr_raw = xr
-        xr = _conv(xr, p["conv_w"], p["conv_b"])
+        if chunked:
+            assert b == 1
+            hist_row = cache["conv"][page_slot].astype(xr.dtype)  # (W-1,w)
+            hist_stream = jnp.concatenate([hist_row[None], xr], axis=1)
+            xr = _conv(hist_stream, p["conv_w"], p["conv_b"])[:, w1:]
+        else:
+            xr = _conv(xr, p["conv_w"], p["conv_b"])
         a, u = _lru_gates(p, xr)
         if prefill:
             # padding steps (>= prefill_len) become identity: a = 1, u = 0,
@@ -95,7 +106,20 @@ def apply_rglru(p, x, cfg, *, cache=None, pos=None, packs=None,
         aa, hh = jax.lax.associative_scan(combine, (a, u), axis=1)
         h = hh
         new_cache = None
-        if prefill:
+        if chunked:
+            # inject the carried state: h_t = (prod a_1..t) h_prev + hh_t
+            h = aa * cache["h"][page_slot][None, None] + hh
+            validp = jnp.concatenate(
+                [jnp.ones((1, w1, 1), bool),
+                 jnp.broadcast_to(valid, (1, s, 1))], axis=1)
+            hist_in = jnp.concatenate([hist_row[None], xr_raw], axis=1)
+            new_hist = prefill_conv_history(
+                hist_in, validp, w1 + jnp.asarray(length, jnp.int32), w1,
+                cache["conv"].dtype)
+            new_cache = {
+                "h": cache["h"].at[page_slot].set(h[0, -1]),
+                "conv": cache["conv"].at[page_slot].set(new_hist[0])}
+        elif prefill:
             new_cache = {
                 "h": hh[:, -1],                 # padding holds h at length-1
                 "conv": prefill_conv_history(xr_raw, valid, length,

@@ -82,15 +82,26 @@ def _split_proj(zxbcdt, cfg):
 
 
 def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None,
-              prefill_len=None, **_):
+              prefill_len=None, page_slot=None, **_):
     b, s, _ = xin.shape
     d_inner, h, p_dim, n = _dims(cfg)
     zxbcdt = linear(p["in_proj"], xin, packs and packs.get("in_proj"))
     z, x, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
 
     prefill = cache is not None and s > 1
+    # chunk/suffix prefill: xin holds ONE slot's next prompt slice against
+    # the BATCHED engine cache -- continue from the slot's recurrent state
+    # and real conv history instead of zeros (docs/API.md §SLO scheduling)
+    chunked = prefill and page_slot is not None
     conv_in = jnp.concatenate([x, bmat, cmat], axis=-1)
-    if cache is None or prefill:
+    if chunked:
+        assert b == 1
+        w1 = cfg.conv_width - 1
+        hist_row = cache["conv"][page_slot].astype(conv_in.dtype)  # (W-1,C)
+        hist_stream = jnp.concatenate([hist_row[None], conv_in], axis=1)
+        conv_out = _causal_conv(hist_stream, p["conv_w"],
+                                p["conv_b"])[:, w1:]
+    elif cache is None or prefill:
         conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
     else:
         hist = jnp.concatenate([cache["conv"], conv_in], axis=1)
@@ -115,10 +126,22 @@ def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None,
     cmat = cmat.astype(jnp.float32)
 
     if cache is None or prefill:
+        init_state = cache["state"][page_slot][None] if chunked else None
         y, state = _ssd_chunked(xh, dt, da, bmat, cmat, cfg.ssm_chunk,
-                                return_state=True)
+                                return_state=True,
+                                initial_state=init_state)
         new_cache = None
-        if prefill:
+        if chunked:
+            validp = jnp.concatenate(
+                [jnp.ones((1, w1, 1), bool),
+                 jnp.broadcast_to(valid, (1, s, 1))], axis=1)
+            new_hist = prefill_conv_history(
+                hist_stream, validp, w1 + jnp.asarray(length, jnp.int32),
+                w1, cache["conv"].dtype)
+            new_cache = {
+                "state": cache["state"].at[page_slot].set(state[0]),
+                "conv": cache["conv"].at[page_slot].set(new_hist[0])}
+        elif prefill:
             new_cache = {"state": state,
                          "conv": prefill_conv_history(
                              conv_in, valid, length, cfg.conv_width - 1,
@@ -147,10 +170,14 @@ def apply_ssm(p, xin, cfg, *, cache=None, pos=None, packs=None,
     return out, new_cache
 
 
-def _ssd_chunked(x, dt, da, bmat, cmat, chunk, return_state=False):
+def _ssd_chunked(x, dt, da, bmat, cmat, chunk, return_state=False,
+                 initial_state=None):
     """Chunked SSD. x:(b,s,h,p) f32, dt/da:(b,s,h), B/C:(b,s,n).
     With ``return_state`` also returns the final recurrent state (b,h,p,n)
-    -- the carry a one-pass prompt prefill hands to the decode path."""
+    -- the carry a one-pass prompt prefill hands to the decode path.
+    ``initial_state`` (b,h,p,n) seeds the inter-chunk recurrence -- the
+    chunked-prefill continuation passes the slot's current state so a
+    prompt split across windows matches the one-pass result."""
     b, s, h, p_dim = x.shape
     n = bmat.shape[-1]
     q = min(chunk, s)
@@ -188,7 +215,9 @@ def _ssd_chunked(x, dt, da, bmat, cmat, chunk, return_state=False):
         out = carry
         carry = carry * dec[..., None, None] + st
         return carry, out
-    init = jnp.zeros((b, h, p_dim, n), jnp.float32)
+    init = (jnp.zeros((b, h, p_dim, n), jnp.float32)
+            if initial_state is None else
+            initial_state.astype(jnp.float32))
     final_state, prev_states = jax.lax.scan(
         step, init, (states.transpose(1, 0, 2, 3, 4),
                      chunk_decay.transpose(1, 0, 2)))

@@ -20,6 +20,10 @@ machinery:
         carries the engine: poison a slot here to test NaN quarantine)
       - ``engine.sync``    -- host-side sync after a window (sleep here to
         fake a straggler and trip the watchdog)
+      - ``engine.arrival_burst`` -- inside submit(), before enqueue (an
+        action may recursively submit a burst; raise sheds the submission)
+      - ``engine.prefill_chunk`` -- before each chunked-prefill dispatch
+        (raise fails that request; sleep fakes a straggling chunk)
     and ``servable.load_packs`` (``repro/serving/servable.py``) -- fired
     with the pack-archive path before it is read, so a fault can corrupt
     the bytes a load is about to trust.
@@ -50,13 +54,25 @@ from typing import Callable, Dict, List, Optional
 __all__ = ["ChaosEvent", "ChaosInjector", "FaultInjector", "Watchdog",
            "poison_slot", "straggle",
            "SITE_ALLOC", "SITE_PREFILL", "SITE_WINDOW", "SITE_SYNC",
-           "SITE_PAGE_ALLOC", "SITE_LOAD_PACKS", "SITE_TRAIN_STEP"]
+           "SITE_PAGE_ALLOC", "SITE_LOAD_PACKS", "SITE_TRAIN_STEP",
+           "SITE_ARRIVAL_BURST", "SITE_PREFILL_CHUNK"]
 
 #: serving-engine hook points (repro/serving/engine.py)
 SITE_ALLOC = "engine.alloc"
 SITE_PREFILL = "engine.prefill"
 SITE_WINDOW = "engine.window"
 SITE_SYNC = "engine.sync"
+#: open-loop ingest hook: fires inside submit() after validation, before the
+#: request is enqueued (ctx: engine, request). An action may submit a burst
+#: of extra requests through the same engine (re-entrant: the nested
+#: submits re-fire this site); 'raise' sheds THIS submission with a
+#: structured failure, never a crash
+SITE_ARRIVAL_BURST = "engine.arrival_burst"
+#: chunked-prefill hook: fires before each prefill chunk dispatch (ctx:
+#: engine, request, start, size). 'raise' fails the request with
+#: FailureReason.PREFILL_ERROR and releases its slot; straggle() here fakes
+#: a slow chunk so the watchdog's prefill-chunk label trips
+SITE_PREFILL_CHUNK = "engine.prefill_chunk"
 #: paged-KV page allocation (fires before each admission's page reservation;
 #: 'raise' simulates pool exhaustion -> backpressure, never a crash)
 SITE_PAGE_ALLOC = "engine.page_alloc"

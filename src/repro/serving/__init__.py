@@ -20,6 +20,6 @@ from repro.serving.serialize import ServableLoadError
 from repro.serving.servable import (SERVABLE_STEP, Servable, load_servable,
                                     make_serving_mesh, prepare_servable)
 from repro.serving.spec import (DEFAULT_TARGETS, OVERFLOW_POLICIES,
-                                ServingSpec)
+                                SchedSpec, ServingSpec)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

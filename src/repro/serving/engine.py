@@ -21,6 +21,16 @@ machinery on top:
     emitted tokens, fire callbacks, recycle finished slots and admit
     queued requests. ``sync_every=1`` (or ``collect_logits=True``) keeps
     the one-decode-per-step loop;
+  * **SLO-aware scheduling** (``sched=SchedSpec(...)``, docs/API.md §SLO
+    scheduling) -- chunked prefill splits long prompts into
+    ``max_chunk``-sized slices run through the masked suffix-prefill path
+    between decode windows (a partially-prefilled request holds its slot
+    as a pos -1 no-op row; chunked == one-shot bit-exact), a per-window
+    ``token_budget`` with ``decode_priority`` reserve eliminates
+    head-of-line blocking, and graceful overload degradation fast-fails
+    un-meetable deadlines at admission and sheds the newest low-priority
+    queued traffic once the estimated queue delay exceeds
+    ``max_queue_delay_s`` (both from MEASURED prefill/decode rates);
   * **request lifecycle robustness** (docs/API.md §Engine robustness) --
     every submitted request ends in EXACTLY ONE terminal status (``done``
     / ``failed`` / ``cancelled`` / ``shed``), with a structured
@@ -91,7 +101,7 @@ from repro.models.sampling import sample_token_row
 from repro.runtime import chaos as chaos_mod
 from repro.serving.paging import PagePool, PagePoolExhausted, pages_needed
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.spec import KV_LAYOUTS, OVERFLOW_POLICIES
+from repro.serving.spec import KV_LAYOUTS, OVERFLOW_POLICIES, SchedSpec
 
 __all__ = ["EngineRequest", "EngineStats", "FailureReason", "ServingEngine",
            "TERMINAL_STATES"]
@@ -116,6 +126,7 @@ class FailureReason:
 
     REJECTED = "rejected"                # invalid at submission
     QUEUE_FULL = "queue_full"            # shed by backpressure policy
+    OVERLOAD = "overload_shed"           # SLO shedding (SchedSpec knobs)
     DEADLINE = "deadline"                # deadline_s expired (sync point)
     CANCELLED = "cancelled"              # engine.cancel(handle)
     PREFILL_ERROR = "prefill_error"      # admission/prefill raised
@@ -152,6 +163,17 @@ class EngineRequest:
     cancel_requested: bool = False
     n_preempted: int = 0
     admit_seq: int = -1                     # monotonic admission counter
+    # chunked prefill (docs/API.md §SLO scheduling): prompt tokens already
+    # resident in the slot vs the full prefill length; pos == target (or
+    # target == 0) = the request is decodable
+    prefill_pos: int = 0
+    prefill_target: int = 0
+    # SLO timestamps (time.monotonic): submission, first emitted token and
+    # terminal transition -- the open-loop bench derives TTFT and
+    # per-token latency from these (benchmarks/serving_bench.py)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
 
     @property
     def n_generated(self) -> int:
@@ -188,6 +210,7 @@ class EngineStats:
     prefilled_tokens: int = 0
     prefix_hit_tokens: int = 0
     page_resumes: int = 0
+    prefill_chunks: int = 0         # chunk dispatches (SLO scheduler)
     bucket_hits: Dict[int, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
     # wall-clock breakdown of the serving loop (seconds): prompt prefill
@@ -215,6 +238,7 @@ class EngineStats:
                 "prefilled_tokens": self.prefilled_tokens,
                 "prefix_hit_tokens": self.prefix_hit_tokens,
                 "page_resumes": self.page_resumes,
+                "prefill_chunks": self.prefill_chunks,
                 "mean_occupancy": round(self.mean_occupancy, 3),
                 "prefill_buckets": dict(self.bucket_hits),
                 "prefill_s": round(self.prefill_s, 4),
@@ -233,9 +257,13 @@ class ServingEngine:
     Robustness knobs (docs/API.md §Engine robustness): ``max_queue`` +
     ``overflow`` bound the admission queue (policies in
     ``spec.OVERFLOW_POLICIES``); ``watchdog_timeout_s`` arms a stuck-window
-    detector (``on_stall(label, elapsed)`` optional callback); ``chaos``
-    attaches a :class:`repro.runtime.chaos.ChaosInjector` whose
-    alloc/prefill/window/sync sites this engine fires.
+    detector (``on_stall(label, elapsed)`` optional callback; stalls also
+    snapshot into ``stats_dict()['watchdog']``); ``chaos`` attaches a
+    :class:`repro.runtime.chaos.ChaosInjector` whose
+    alloc/prefill/window/sync/arrival/chunk sites this engine fires;
+    ``sched`` (:class:`repro.serving.SchedSpec`; kwarg > spec.sched)
+    enables the SLO scheduler -- chunked prefill, per-window token
+    budget, deadline fast-fail and overload shedding (module docstring).
     """
 
     def __init__(self, servable, max_slots: int = 8, cache_len: int = 256,
@@ -247,7 +275,8 @@ class ServingEngine:
                  on_stall: Optional[Callable[[str, float], None]] = None,
                  chaos: Optional["chaos_mod.ChaosInjector"] = None,
                  kv_layout: Optional[str] = None,
-                 kv_pool_pages: Optional[int] = None):
+                 kv_pool_pages: Optional[int] = None,
+                 sched: Optional[SchedSpec] = None):
         if servable.cfg.family == "bert":
             raise ValueError("encoder-only arch has no decode step")
         if overflow not in OVERFLOW_POLICIES:
@@ -273,9 +302,14 @@ class ServingEngine:
         self.overflow = overflow
         self._chaos = chaos
         self._watchdog = None
+        self._user_on_stall = on_stall
+        self._watchdog_snapshot: Optional[Dict] = None
         if watchdog_timeout_s is not None:
+            # the engine interposes on the stall callback to snapshot its
+            # queue/active/chunk state for stats_dict()['watchdog'];
+            # detection semantics are the Watchdog's, unchanged
             self._watchdog = chaos_mod.Watchdog(watchdog_timeout_s,
-                                                on_stall=on_stall)
+                                                on_stall=self._on_stall)
 
         self._sub_template = None
         if self.cfg.family != "audio":
@@ -340,6 +374,42 @@ class ServingEngine:
                                   for k in kinds)
             self._can_retain = all(k.mixer in ("attn", "mla")
                                    and k.window == 0 for k in kinds)
+
+        # -- SLO scheduling: kwarg > spec (docs/API.md §SLO scheduling) ---
+        # sched arms deadline fast-fail and overload shedding regardless;
+        # chunked prefill (max_chunk > 0) additionally needs the masked
+        # chunk path every layer supports -- ineligible configs fall back
+        # to one-shot admission with the other knobs still live
+        self.sched = sched if sched is not None else servable.spec.sched
+        self._chunking = False
+        if self.sched is not None and self.sched.max_chunk > 0:
+            blocker = None
+            if self.cfg.family == "audio":
+                blocker = "family 'audio' prefills through the decode path"
+            elif self.cfg.kv_cache_quant:
+                blocker = "kv_cache_quant (int8 KV has no masked chunk path)"
+            elif any(k.ffn == "moe" for k in kinds):
+                blocker = "MoE ffn (expert routing is batch-global)"
+            if blocker is not None:
+                log.info("chunked prefill unavailable for this config "
+                         "(%s); scheduling runs without it", blocker)
+            else:
+                self._chunking = True
+        # chunk lengths are QUANTIZED: every dispatched chunk is exactly
+        # _chunk_len tokens or the prompt tail, never a budget-truncated
+        # remainder -- each novel chunk length is a fresh suffix-jit shape
+        # (an on-clock compile), so max_chunk is clamped to the window
+        # budget and a chunk that no longer fits waits for the next window
+        self._chunk_len = 0
+        if self._chunking:
+            self._chunk_len = self.sched.max_chunk
+            if self.sched.token_budget > 0:
+                self._chunk_len = min(self._chunk_len,
+                                      self.sched.token_budget)
+        #: req_ids whose fresh full-prompt pages publish to the prefix
+        #: cache once their (chunked) prefill completes
+        self._pending_publish: set = set()
+
         self.cache = self._build_cache()
         # host-side byte accounting from the real device leaves
         self._kv_bytes_total = sum(
@@ -391,6 +461,10 @@ class ServingEngine:
         if self.kv_layout == "paged":
             (self._write_paged, self._restore_paged,
              self._suffix_prefill) = servable.paged_engine_fns(out_sh)
+        elif self._chunking:
+            # dense chunked prefill rides the same suffix entry point the
+            # paged prefix-hit path uses (servable.suffix_prefill_fn)
+            self._suffix_prefill = servable.suffix_prefill_fn(out_sh)
 
     def _build_cache(self):
         """A fresh all-slots-free engine cache (constructor AND the
@@ -433,16 +507,19 @@ class ServingEngine:
         reason (``status == 'failed'``, ``failure.code == 'rejected'``)
         instead of failing late inside prefill/decode -- submit() never
         raises for request-level problems. ``deadline_s`` is a relative
-        wall-clock budget enforced at window-sync points; ``priority``
-        orders admission and arms preemption (higher wins)."""
+        wall-clock budget enforced at window-sync points (and, with a
+        ``SchedSpec``, fast-failed at admission when the engine's measured
+        rates already rule the deadline out); ``priority`` orders admission
+        and arms preemption (higher wins)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         req = EngineRequest(req_id=self._next_id, prompt=prompt,
                             max_new_tokens=int(max_new_tokens), eos_id=eos_id,
                             frames=frames, on_token=on_token, on_done=on_done,
                             priority=int(priority))
+        req.submitted_at = time.monotonic()
         self._next_id += 1
         if deadline_s is not None:
-            req.deadline_at = time.monotonic() + float(deadline_s)
+            req.deadline_at = req.submitted_at + float(deadline_s)
 
         reject = None
         if prompt.size == 0:
@@ -462,6 +539,39 @@ class ServingEngine:
                            FailureReason(FailureReason.REJECTED, reject))
             return req
 
+        # deadline fast-fail AT ADMISSION (docs/API.md §SLO scheduling): an
+        # already-expired deadline always fails here; with sched.fast_fail,
+        # a completion projected past the deadline from the engine's
+        # MEASURED prefill/decode rates fails too -- either way before the
+        # request consumes a prefill slot. Both count as deadline_misses.
+        if req.deadline_at is not None:
+            now = time.monotonic()
+            if now > req.deadline_at:
+                self._finalize(req, "failed", FailureReason(
+                    FailureReason.DEADLINE, "deadline expired at submission"))
+                return req
+            if self.sched is not None and self.sched.fast_fail:
+                est = self._service_estimate_s(req)
+                if est is not None and now + est > req.deadline_at:
+                    self._finalize(req, "failed", FailureReason(
+                        FailureReason.DEADLINE,
+                        f"projected completion in {est:.3f}s exceeds the "
+                        f"deadline (measured prefill/decode rates)"))
+                    return req
+
+        if self._chaos is not None:
+            # open-loop ingest chaos: an action may re-entrantly submit a
+            # burst through this engine; an exception sheds ONLY this
+            # submission with a structured reason (never a crash)
+            try:
+                self._chaos.fire(chaos_mod.SITE_ARRIVAL_BURST, engine=self,
+                                 request=req)
+            except Exception as e:  # noqa: BLE001 -- shed, keep serving
+                self._finalize(req, "shed", FailureReason(
+                    FailureReason.OVERLOAD,
+                    f"shed at ingest: {type(e).__name__}: {e}"))
+                return req
+
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
             if self.overflow == "block":
                 # drive the engine until the queue drains below the bound
@@ -480,6 +590,7 @@ class ServingEngine:
                         f"{self.overflow!r}"))
                     return req
         self._queue.append(req)
+        self._shed_overload()
         return req
 
     def cancel(self, req: EngineRequest) -> bool:
@@ -498,6 +609,80 @@ class ServingEngine:
             self._finalize(req, "cancelled", FailureReason(
                 FailureReason.CANCELLED, "cancelled while queued"))
         return True
+
+    # -- SLO estimation + overload degradation ----------------------------
+    def _service_estimate_s(self, req: EngineRequest) -> Optional[float]:
+        """Projected seconds to finish ``req``, from the engine's MEASURED
+        prefill/decode rates (the EngineStats wall-clock buckets). Returns
+        None until both rates have real samples -- estimation never
+        guesses, so a cold engine neither fast-fails nor sheds."""
+        st = self.stats
+        if (st.prefill_s <= 0 or st.prefilled_tokens <= 0
+                or st.decode_s <= 0 or st.steps <= 0):
+            return None
+        pre_tokens = req.prompt.size + req.n_generated - req.prefill_pos
+        pre = pre_tokens / (st.prefilled_tokens / st.prefill_s)
+        dec = (req.max_new_tokens - req.n_generated) \
+            / (st.steps / st.decode_s)
+        return max(pre, 0.0) + max(dec, 0.0)
+
+    def _shed_overload(self) -> None:
+        """Graceful overload degradation (``sched.max_queue_delay_s > 0``):
+        when the estimated time to drain the queue exceeds the bound, shed
+        queued requests -- lowest priority first, newest first within a
+        class -- with the structured OVERLOAD reason until the backlog
+        fits. Shedding the newest lowest-priority traffic keeps requests
+        that already waited (and higher SLO tiers) on track instead of
+        letting every request miss a little."""
+        if (self.sched is None or self.sched.max_queue_delay_s <= 0
+                or not self._queue):
+            return
+        ests: Dict[int, float] = {}
+        for r in self._queue:
+            est = self._service_estimate_s(r)
+            if est is None:         # rates not measured yet: never shed
+                return
+            ests[r.req_id] = est
+        bound = self.sched.max_queue_delay_s
+        slots = max(1, self.max_slots)
+        backlog = sum(ests.values()) / slots
+        while backlog > bound and self._queue:
+            victim = min(self._queue,
+                         key=lambda r: (r.priority, -r.submitted_at))
+            self._queue.remove(victim)
+            backlog -= ests[victim.req_id] / slots
+            self._finalize(victim, "shed", FailureReason(
+                FailureReason.OVERLOAD,
+                f"estimated queue delay exceeds "
+                f"max_queue_delay_s={bound}"))
+
+    def _on_stall(self, label: str, elapsed: float) -> None:
+        """Watchdog callback (daemon thread): snapshot queue/active/chunk
+        state into ``stats_dict()['watchdog']`` -- best-effort shallow
+        reads, since the serving thread keeps mutating -- then forward to
+        the user's ``on_stall``. Detection-only semantics unchanged."""
+        try:
+            now = time.monotonic()
+
+            def row(r):
+                return {"req_id": r.req_id, "status": r.status,
+                        "pos": int(r.pos),
+                        "prefill_pos": int(r.prefill_pos),
+                        "prefill_target": int(r.prefill_target),
+                        "n_generated": r.n_generated,
+                        "age_s": round(now - r.submitted_at, 4)}
+
+            self._watchdog_snapshot = {
+                "site": label, "elapsed_s": round(elapsed, 4),
+                "n_queued": len(self._queue),
+                "n_active": len(self._active),
+                "queued": [row(r) for r in list(self._queue)[:8]],
+                "active": [row(r) for r in list(self._active.values())[:8]]}
+        except Exception:  # pragma: no cover -- racing the serving thread
+            self._watchdog_snapshot = {"site": label,
+                                       "elapsed_s": round(elapsed, 4)}
+        if self._user_on_stall is not None:
+            self._user_on_stall(label, elapsed)
 
     # -- prefill ----------------------------------------------------------
     def _bucket(self, length: int) -> int:
@@ -754,6 +939,204 @@ class ServingEngine:
         self._emit(req, int(tok), row)
         return True
 
+    # -- chunked prefill (docs/API.md §SLO scheduling) --------------------
+    def _begin_chunked(self, req: EngineRequest) -> bool:
+        """Claim a slot (and, paged, the request's full page reservation +
+        prefix match) WITHOUT running prefill compute -- chunk dispatch is
+        metered separately by the token budget (``_prefill_chunk``). The
+        request becomes active with ``_pos[slot]`` still -1: it holds its
+        slot across windows but is a device no-op row until the final
+        chunk samples its first token. Returns False when paged
+        backpressure parked it at the queue front (the ``_admit``
+        contract)."""
+        t0 = time.perf_counter()
+        slot = None
+        held: List[int] = []
+        try:
+            if self._chaos is not None:
+                self._chaos.fire(chaos_mod.SITE_ALLOC, engine=self,
+                                 request=req)
+            slot = self._free.pop(0)
+
+            if self.kv_layout == "paged":
+                saved = self._saved_pages.pop(req.req_id, None)
+                if saved is not None:
+                    # preempt-resume page retention: instant, no prefill
+                    pages, resume_len = saved
+                    held = pages
+                    self.cache = self._restore_paged(
+                        self.cache, jnp.int32(slot), self._page_row(pages),
+                        jnp.int32(resume_len))
+                    self._activate(req, slot, resume_len, pages)
+                    req.prefill_pos = req.prefill_target = 0
+                    self._tokens[slot, 0] = req.tokens[-1]
+                    self._pos[slot] = resume_len
+                    self._remaining[slot] = \
+                        req.max_new_tokens - req.n_generated
+                    self.stats.page_resumes += 1
+                    self.stats.prefill_s += time.perf_counter() - t0
+                    return True
+
+            seq = req.prompt if not req.tokens else np.concatenate(
+                [req.prompt, np.asarray(req.tokens, np.int32)])
+            length = int(seq.size)
+            start = 0
+            pages = None
+            if self.kv_layout == "paged":
+                need = pages_needed(
+                    min(length + req.max_new_tokens, self.cache_len),
+                    self.kv_page_size)
+                shared: List[int] = []
+                if self._can_share and not req.tokens:
+                    shared = self._prefix_cache.match(seq, limit=length - 1)
+                    held = held + shared
+                start = len(shared) * self.kv_page_size
+                fresh = self._reserve_pages(need - len(shared))
+                held = held + fresh
+                pages = shared + fresh
+                # install the page table up front: every chunk scatters
+                # through it, and the pos map starts at the shared prefix
+                self.cache = self._restore_paged(
+                    self.cache, jnp.int32(slot), self._page_row(pages),
+                    jnp.int32(start))
+                if start > 0:
+                    self.stats.prefix_hit_tokens += start
+                elif self._can_share and not req.tokens:
+                    self._pending_publish.add(req.req_id)
+        except PagePoolExhausted as e:
+            if held:
+                self._pool.release(held)
+            self._restore_slot(slot)
+            self.stats.prefill_s += time.perf_counter() - t0
+            if self._active:
+                req.status = "queued"
+                self._queue.appendleft(req)
+                log.info("parking request %d on page pressure (%s)",
+                         req.req_id, e)
+                return False
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.KV_PAGES,
+                f"{e} with no active requests to drain"))
+            return True
+        except Exception as e:  # noqa: BLE001 -- isolate to this request
+            if held:
+                self._pool.release(held)
+            self._restore_slot(slot)
+            self.stats.prefill_s += time.perf_counter() - t0
+            log.warning("admission of request %d failed (%s: %s)",
+                        req.req_id, type(e).__name__, e)
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.PREFILL_ERROR, f"{type(e).__name__}: {e}"))
+            return True
+
+        self._activate(req, slot, length, pages)
+        req.prefill_pos = start
+        req.prefill_target = length
+        self.stats.prefill_s += time.perf_counter() - t0
+        return True
+
+    def _prefill_chunk(self, req: EngineRequest, budget: int) -> int:
+        """Run prefill chunks for an admitted, partially-prefilled request
+        until its prompt is resident or ``budget`` tokens are spent;
+        returns the tokens dispatched. Chunk lengths are quantized to
+        ``_chunk_len`` (or the prompt tail) and bucketed like one-shot
+        prefills, so the suffix jit set stays small and warm. The final chunk
+        samples the first token (the request decodes next window). A
+        failure fails ONLY this request: the chaos site fires before the
+        (cache-donating) suffix dispatch, so ``engine.cache`` survives an
+        injected chunk fault intact (tests/test_chaos.py)."""
+        if budget <= 0 or req.prefill_pos >= req.prefill_target:
+            return 0
+        seq = req.prompt if not req.tokens else np.concatenate(
+            [req.prompt, np.asarray(req.tokens, np.int32)])
+        used = 0
+        t0 = time.perf_counter()
+        try:
+            while req.prefill_pos < req.prefill_target:
+                start = req.prefill_pos
+                c = min(self._chunk_len, req.prefill_target - start)
+                if c > budget - used:
+                    break               # whole-chunk budget gating: defer
+                if self._chaos is not None:
+                    self._chaos.fire(chaos_mod.SITE_PREFILL_CHUNK,
+                                     engine=self, request=req,
+                                     start=start, size=c)
+                bucket = self._bucket(c)
+                toks = np.zeros((bucket,), np.int32)
+                toks[:c] = seq[start:start + c]
+                if self._watchdog is not None:
+                    self._watchdog.arm("prefill-chunk")
+                try:
+                    self.cache, logits = self._suffix_prefill(
+                        self.servable.params, self.cache,
+                        jnp.asarray(toks), jnp.int32(req.slot),
+                        jnp.int32(start), jnp.int32(c))
+                finally:
+                    if self._watchdog is not None:
+                        self._watchdog.disarm()
+                        self.stats.watchdog_stalls = \
+                            len(self._watchdog.stalls)
+                req.prefill_pos += c
+                used += c
+                self.stats.prefilled_tokens += c
+                self.stats.prefill_chunks += 1
+                self.stats.bucket_hits[bucket] += 1
+            if req.prefill_pos < req.prefill_target:
+                return used                 # budget spent mid-prompt
+            row = np.asarray(logits[c - 1])
+        except Exception as e:  # noqa: BLE001 -- isolate to this request
+            log.warning("chunked prefill of request %d failed (%s: %s)",
+                        req.req_id, type(e).__name__, e)
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.PREFILL_ERROR, f"{type(e).__name__}: {e}"))
+            return used
+        finally:
+            self.stats.prefill_s += time.perf_counter() - t0
+
+        self.stats.prefills += 1
+        if not np.all(np.isfinite(row)):
+            self._finalize(req, "failed", FailureReason(
+                FailureReason.NONFINITE_LOGITS,
+                f"non-finite prefill logits at position "
+                f"{req.prefill_target - 1}"))
+            return used
+        if req.req_id in self._pending_publish:
+            self._pending_publish.discard(req.req_id)
+            pages = self._slot_pages.get(req.slot, [])
+            self._prefix_cache.insert(
+                seq, pages[:req.prefill_target // self.kv_page_size])
+        tok = sample_token_row(row, self._key, req.slot,
+                               req.prefill_target - 1,
+                               temperature=self.temperature,
+                               top_k=self.top_k)
+        self._emit(req, int(tok), row)
+        return used
+
+    def _admit_budgeted(self, req: EngineRequest, budget: int):
+        """Admission dispatch for the chunked scheduler: prompts that fit
+        in ONE chunk (the short/interactive population an SLO protects)
+        take the LEGACY one-shot path -- donated slot write, paged prefix
+        match, no full-cache chunk attention -- because slicing only pays
+        off when a prompt spans windows. Multi-chunk prompts go through
+        ``_admit_chunked``. Returns ``(consumed, tokens_used)``."""
+        need = req.prompt.size + req.n_generated
+        if need <= self._chunk_len:
+            return self._admit(req), need
+        return self._admit_chunked(req, budget)
+
+    def _admit_chunked(self, req: EngineRequest, budget: int):
+        """Chunked admission: claim slot + pages, then spend up to
+        ``budget`` prefill tokens. Returns ``(consumed, tokens_used)``;
+        ``consumed`` False = paged backpressure parked the request (the
+        scheduler must stop admitting this sync point)."""
+        if not self._begin_chunked(req):
+            return False, 0
+        if req.status != "active":          # begin failed terminally
+            return True, 0
+        if req.prefill_pos >= req.prefill_target:   # page-retention resume
+            return True, 0
+        return True, self._prefill_chunk(req, budget)
+
     def _restore_slot(self, slot: Optional[int]) -> None:
         """Return a popped-but-unoccupied slot to the free list."""
         if slot is not None and slot not in self._free:
@@ -766,6 +1149,8 @@ class ServingEngine:
         completed. ``logits_row`` (V,) is only materialized on host when
         the engine collects logits."""
         req.tokens.append(tok)
+        if req.first_token_at is None:
+            req.first_token_at = time.monotonic()
         if self.collect_logits and logits_row is not None:
             req.step_logits.append(np.asarray(logits_row, np.float32))
         self.stats.tokens_generated += 1
@@ -818,9 +1203,11 @@ class ServingEngine:
             saved = self._saved_pages.pop(req.req_id, None)
             if saved is not None:
                 self._pool.release(saved[0])
+        self._pending_publish.discard(req.req_id)
         req.status = status
         req.failure = reason
         req.done = status == "done"
+        req.finished_at = time.monotonic()
         if status == "done":
             self.stats.completed += 1
         elif status == "failed":
@@ -845,31 +1232,52 @@ class ServingEngine:
         keep = (self.kv_layout == "paged" and self._can_retain
                 and req.n_generated > 0)
         self._release_slot(req, keep_pages=keep)
+        # a half-prefilled victim (chunk scheduling) restarts its prefill
+        # from scratch on re-admission -- its slot state is gone (retention
+        # requires n_generated > 0, so it never kept pages either)
+        self._pending_publish.discard(req.req_id)
+        req.prefill_pos = req.prefill_target = 0
         req.status = "queued"
         req.n_preempted += 1
         self.stats.preemptions += 1
         self._queue.appendleft(req)
 
     def _sweep_control(self) -> None:
-        """The window-sync control sweep: apply pending cancellations and
-        expire deadlines for queued AND active requests. Runs at the top of
-        every step(), so lifecycle enforcement costs nothing between sync
-        points (the fused window stays one jitted scan)."""
+        """The window-sync control sweep: apply pending cancellations,
+        expire deadlines for queued AND active requests, fast-fail queued
+        requests whose projected completion already rules their deadline
+        out (``sched.fast_fail``, measured rates only) and run overload
+        shedding. Runs at the top of every step(), so lifecycle
+        enforcement costs nothing between sync points (the fused window
+        stays one jitted scan)."""
         now = time.monotonic()
 
         def expired(r):
             return r.deadline_at is not None and now > r.deadline_at
 
+        fast = self.sched is not None and self.sched.fast_fail
+
+        def doomed(r):
+            if not fast or r.deadline_at is None:
+                return False
+            est = self._service_estimate_s(r)
+            return est is not None and now + est > r.deadline_at
+
         for req in [r for r in self._queue
-                    if r.cancel_requested or expired(r)]:
+                    if r.cancel_requested or expired(r) or doomed(r)]:
             self._queue.remove(req)
             if req.cancel_requested:
                 self._finalize(req, "cancelled", FailureReason(
                     FailureReason.CANCELLED, "cancelled while queued"))
-            else:
+            elif expired(req):
                 self._finalize(req, "failed", FailureReason(
                     FailureReason.DEADLINE,
                     "deadline expired before admission"))
+            else:
+                self._finalize(req, "failed", FailureReason(
+                    FailureReason.DEADLINE,
+                    "projected completion exceeds deadline while queued "
+                    "(fast-fail before consuming a prefill slot)"))
         for req in [r for r in self._active.values()
                     if r.cancel_requested or expired(r)]:
             if req.cancel_requested:
@@ -881,6 +1289,7 @@ class ServingEngine:
                     FailureReason.DEADLINE,
                     f"deadline expired after {req.n_generated}/"
                     f"{req.max_new_tokens} tokens"))
+        self._shed_overload()
 
     def _pop_next(self) -> EngineRequest:
         """Highest-priority queued request, FIFO within a priority class."""
@@ -895,7 +1304,11 @@ class ServingEngine:
         """Admissions + priority preemption (a window-sync point action).
         A False from ``_admit`` means paged backpressure parked the request
         at the queue front -- stop admitting until the next sync point (the
-        pool cannot satisfy it now; retrying in this loop would spin)."""
+        pool cannot satisfy it now; retrying in this loop would spin).
+        Chunk-scheduling engines route through ``_schedule_chunked``."""
+        if self._chunking:
+            self._schedule_chunked()
+            return
         while self._free and self._queue:
             if not self._admit(self._pop_next()):
                 return
@@ -912,27 +1325,96 @@ class ServingEngine:
             if not self._admit(self._pop_next()):
                 return
 
+    def _schedule_chunked(self) -> None:
+        """The token-budget scheduler (docs/API.md §SLO scheduling): each
+        window-sync point spends at most ``sched.token_budget`` prefill
+        tokens, in ``sched.max_chunk``-sized chunks, so one long prompt
+        can never head-of-line-block running decodes behind a monolithic
+        prefill. ``decode_priority`` reserves ``n_decoding * sync_every``
+        of the budget for the decode window that follows; with nothing
+        decoding the budget clamps to >= 1 token so prefill always makes
+        progress (liveness). Partially-prefilled residents continue in
+        admission order before new requests are admitted; priority
+        preemption matches the legacy scheduler."""
+        sched = self.sched
+        budget = sched.token_budget if sched.token_budget > 0 else (1 << 30)
+        n_dec = sum(1 for s in self._active if self._pos[s] >= 0)
+        if sched.decode_priority:
+            budget -= n_dec * self.sync_every
+        if n_dec == 0:
+            budget = max(budget, 1)
+
+        # 1. priority preemption FIRST (the legacy policy): a high-SLO
+        # arrival must not wait out a low-priority resident's chunked
+        # prefill -- the continuation pass below would otherwise spend
+        # every window's budget on the victim it is about to evict. The
+        # preemptor claims its slot even at budget 0 (its chunks then run
+        # in later windows).
+        while self._queue and not self._free and self._active:
+            best_p = max(r.priority for r in self._queue)
+            victim = min(self._active.values(),
+                         key=lambda r: (r.priority, -r.admit_seq))
+            if best_p <= victim.priority:
+                break
+            self._preempt(victim)
+            consumed, used = self._admit_budgeted(self._pop_next(), budget)
+            budget -= used
+            if not consumed:
+                return
+
+        # 2. admit new requests into free slots BEFORE continuing resident
+        # prefills: a short arrival starts (and finishes) its prefill out
+        # of the same budget a long resident would otherwise monopolize --
+        # this is what kills head-of-line blocking. But admissions must
+        # not STARVE the residents either (under sustained arrivals a long
+        # prompt would otherwise never finish prefilling while holding its
+        # slot): when a continuation is pending, admissions may spend at
+        # most half the window budget, so the oldest resident keeps
+        # making whole-chunk progress (set token_budget >= 2 * max_chunk
+        # for both halves to fit a chunk).
+        pending = any(r.prefill_pos < r.prefill_target
+                      for r in self._active.values())
+        adm_budget = budget // 2 if pending else budget
+        while adm_budget > 0 and self._free and self._queue:
+            consumed, used = self._admit_budgeted(self._pop_next(),
+                                                  adm_budget)
+            adm_budget -= used
+            budget -= used
+            if not consumed:
+                return
+
+        # 3. continue partially-prefilled residents, oldest admission first
+        for req in sorted((r for r in self._active.values()
+                           if r.prefill_pos < r.prefill_target),
+                          key=lambda r: r.admit_seq):
+            if budget <= 0:
+                break
+            budget -= self._prefill_chunk(req, budget)
+
     # -- stepping ---------------------------------------------------------
     def step(self) -> bool:
-        """One window-sync cycle: control sweep (cancel/deadline), schedule
-        (admit + preempt), then ONE batched decode window (up to
-        ``sync_every`` fused steps) over all active slots. Returns True
-        while there is (or may be) work left."""
+        """One window-sync cycle: control sweep (cancel/deadline/overload),
+        schedule (chunk continuation + admit + preempt), then ONE batched
+        decode window (up to ``sync_every`` fused steps) over the DECODING
+        slots -- a mid-prefill request (chunk scheduling) holds its slot
+        as a device no-op row (pos -1) and rides along untouched. Returns
+        True while there is (or may be) work left."""
         self._sweep_control()
         self._schedule()
-        if not self._active:
-            return bool(self._queue)
+        decoding = sorted(s for s in self._active if self._pos[s] >= 0)
+        if not decoding:
+            return bool(self._active or self._queue)
         if self._watchdog is not None:
             self._watchdog.arm("decode-window")
         try:
             if self._chaos is not None:
                 self._chaos.fire(chaos_mod.SITE_WINDOW, engine=self)
             k = min(self.sync_every,
-                    max(int(self._remaining[s]) for s in self._active))
+                    max(int(self._remaining[s]) for s in decoding))
             if k <= 1:
-                self._step_single()
+                self._step_single(decoding)
             else:
-                self._step_fused(k)
+                self._step_fused(k, decoding)
             if self._chaos is not None:
                 self._chaos.fire(chaos_mod.SITE_SYNC, engine=self)
         except Exception as e:  # noqa: BLE001 -- keep the engine serving
@@ -973,14 +1455,16 @@ class ServingEngine:
             req.slot = -1
             self._finalize(req, "failed", reason)
 
-    def _step_single(self) -> None:
+    def _step_single(self, decoding: List[int]) -> None:
         """The unfused loop: one decode, one host sync per token. Kept for
         ``sync_every=1`` and ``collect_logits`` (per-step logits only exist
-        on host here)."""
+        on host here). ``decoding`` is the slot set this window actually
+        decodes -- mid-prefill slots are skipped at the drain (their rows
+        are device no-ops and must not be quarantined or emitted)."""
         t0 = time.perf_counter()
         self.stats.steps += 1
         self.stats.windows += 1
-        self.stats.occupancy_sum += len(self._active)
+        self.stats.occupancy_sum += len(decoding)
         next_tok, ok, logits, self.cache = self._decode(
             self.servable.params, self.cache, jnp.asarray(self._tokens),
             jnp.asarray(self._pos), self._key, self.temperature, self.top_k)
@@ -989,7 +1473,7 @@ class ServingEngine:
         rows = np.asarray(logits[:, 0, :]) if self.collect_logits else None
         self.stats.decode_s += time.perf_counter() - t0
         t0 = time.perf_counter()
-        for slot in sorted(self._active):
+        for slot in decoding:
             req = self._active[slot]
             if not ok_h[slot]:
                 # non-finite logits: quarantine only this slot
@@ -1002,7 +1486,7 @@ class ServingEngine:
                        rows[slot] if rows is not None else None)
         self.stats.sync_s += time.perf_counter() - t0
 
-    def _step_fused(self, k: int) -> None:
+    def _step_fused(self, k: int, decoding: List[int]) -> None:
         """The fused hot loop: K decode steps inside one jitted scan
         (sampling, EOS, non-finite guard and position bookkeeping on
         device), then ONE host sync that drains the emitted tokens, fires
@@ -1031,7 +1515,7 @@ class ServingEngine:
 
         t0 = time.perf_counter()
         self.stats.occupancy_sum += int(valid_h.sum())
-        window = sorted(self._active)
+        window = decoding
         for step in range(k):
             for slot in window:
                 if not valid_h[step, slot]:
@@ -1127,7 +1611,8 @@ class ServingEngine:
             assert req.slot == slot and req.status == "active", (
                 f"slot {slot} holds request {req.req_id} with "
                 f"slot={req.slot} status={req.status}")
-            assert self._pos[slot] >= 0 or req.n_generated > 0, (
+            assert (self._pos[slot] >= 0 or req.n_generated > 0
+                    or 0 <= req.prefill_pos < req.prefill_target), (
                 f"active slot {slot} has no progress")
         for slot in self._free:
             assert self._pos[slot] == -1, (
@@ -1183,9 +1668,13 @@ class ServingEngine:
                 "page_resumes": self.stats.page_resumes}
 
     def stats_dict(self) -> Dict:
-        """``EngineStats.as_dict()`` plus the ``'kv'`` section."""
+        """``EngineStats.as_dict()`` plus the ``'kv'`` section (and, after
+        a watchdog stall, the ``'watchdog'`` snapshot of queue/active/
+        chunk state taken at detection time -- last stall wins)."""
         d = self.stats.as_dict()
         d["kv"] = self.kv_stats()
+        if self._watchdog_snapshot is not None:
+            d["watchdog"] = dict(self._watchdog_snapshot)
         return d
 
     @property

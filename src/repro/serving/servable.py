@@ -154,7 +154,9 @@ class Servable:
         self._engine_write = None
         self._engine_free = None
         self._engine_paged = None
+        self._engine_suffix = None
         self._mesh_paged_fns: Dict[Any, tuple] = {}
+        self._mesh_suffix_fns: Dict[Any, Any] = {}
         # mesh engines: (decode, decode_many, write, free) jits cached per
         # cache-sharding tree, so engines over the same placement share
         # executables exactly like the unsharded path
@@ -427,6 +429,46 @@ class Servable:
             self._engine_write, self._engine_free = build()
         return self._engine_write, self._engine_free
 
+    def suffix_prefill_fn(self, cache_shardings=None):
+        """Jitted suffix/chunk prefill over the BATCHED engine cache:
+        ``suffix_prefill(params, cache, tokens (S,), slot, start, length)
+        -> (cache, logits (S, V))``. One trace per bucketed chunk length S
+        serves every chunk (``slot``/``start``/``length`` are traced). The
+        cache is DONATED, like the decode and write-slot jits: at serving
+        scale the batched cache is tens of MB and an un-donated copy per
+        chunk (~35 ms observed at 8x512 slots) would dwarf the chunk's own
+        compute. Fault containment is unchanged -- the chaos site
+        ``engine.prefill_chunk`` fires BEFORE dispatch, where the buffer
+        has not yet been consumed (tests/test_chaos.py).
+
+        Shared by the paged shared-prefix path (PR 7,
+        :meth:`paged_engine_fns`) and the dense-KV chunked-prefill
+        scheduler (docs/API.md §SLO scheduling) -- the model-layer entry
+        point is the same ``models.api.prefill_suffix`` either way.
+        Cached like the other engine jits: once on the Servable when
+        unsharded, per cache-sharding tree for mesh engines."""
+        cfg, packs = self.cfg, self.packs
+
+        def build():
+            def suffix(params, cache, tokens, slot, start, length):
+                logits, cache = model_api.prefill_suffix(
+                    params, cache, cfg, tokens[None], slot, start, length,
+                    packs=packs)
+                return cache, logits[0]
+            skw = {} if cache_shardings is None else \
+                {"out_shardings": (cache_shardings, None)}
+            return jax.jit(suffix, donate_argnums=(1,), **skw)
+
+        if cache_shardings is None:
+            if self._engine_suffix is None:
+                self._engine_suffix = build()
+            return self._engine_suffix
+        leaves, treedef = jax.tree_util.tree_flatten(cache_shardings)
+        key = (treedef, tuple(leaves))
+        if key not in self._mesh_suffix_fns:
+            self._mesh_suffix_fns[key] = build()
+        return self._mesh_suffix_fns[key]
+
     def paged_engine_fns(self, cache_shardings=None):
         """The paged engine's three extra cache-carrying jits
         ``(write_paged, restore_paged, suffix_prefill)``:
@@ -440,9 +482,9 @@ class Servable:
           invalidated even when the op is abandoned;
         - ``suffix_prefill(params, cache, tokens (S,), slot, start,
           length)`` -- prefill only the uncached prompt suffix against a
-          shared resident prefix, NOT donated for the same reason (a
-          chaos-injected prefill failure must leave ``engine.cache``
-          intact). Returns ``(cache, logits (S, V))``.
+          shared resident prefix; :meth:`suffix_prefill_fn`, shared with
+          the dense chunked-prefill path. Returns ``(cache, logits
+          (S, V))``.
 
         Cached like :meth:`engine_fns`: unsharded engines share the
         Servable-held trio, mesh engines share per cache-sharding tree."""
@@ -458,15 +500,7 @@ class Servable:
             restore = jax.jit(
                 lambda c, i, row, n: model_api.restore_slot_paged(
                     c, cfg, i, row, n), **kw)
-
-            def suffix(params, cache, tokens, slot, start, length):
-                logits, cache = model_api.prefill_suffix(
-                    params, cache, cfg, tokens[None], slot, start, length,
-                    packs=packs)
-                return cache, logits[0]
-            skw = {} if cache_shardings is None else \
-                {"out_shardings": (cache_shardings, None)}
-            return write, restore, jax.jit(suffix, **skw)
+            return write, restore, self.suffix_prefill_fn(cache_shardings)
 
         if cache_shardings is None:
             if self._engine_paged is None:

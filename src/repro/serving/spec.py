@@ -51,6 +51,63 @@ SHARDED_BACKENDS = ("plan", "dense", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
+class SchedSpec:
+    """SLO-aware scheduler knobs for the serving engine (docs/API.md §SLO
+    scheduling). A default-constructed ``SchedSpec()`` (all knobs off) is
+    behaviorally identical to an engine without one.
+
+    Attributes:
+      max_chunk: > 0 enables **chunked prefill**: prompts prefill in slices
+        of at most ``max_chunk`` tokens, one slice per window-sync point,
+        interleaved with running decodes -- a long prompt no longer
+        head-of-line blocks the decode batch. 0 = one-shot prefill (the
+        legacy path). Chunking silently falls back to one-shot for configs
+        it cannot serve exactly (MoE FFN capacity routing, int8 KV
+        quantization, the audio family).
+      token_budget: > 0 caps the tokens each window-sync point may spend
+        across prefill chunks + new admissions (decode tokens are reserved
+        first under ``decode_priority``). 0 = unlimited (admit-everything,
+        the legacy behavior). Only meaningful with ``max_chunk`` > 0.
+      decode_priority: reserve ``n_decoding * sync_every`` tokens of the
+        budget for the running decodes before spending any of it on
+        prefill work, so prefill pressure cannot starve token streaming.
+      fast_fail: arm the admission-time deadline estimator: a queued
+        request whose deadline provably cannot be met at the engine's
+        *measured* prefill/decode rates (EngineStats) fails with
+        ``FailureReason.DEADLINE`` before consuming a prefill slot.
+        Already-expired deadlines fast-fail regardless of this knob.
+      max_queue_delay_s: > 0 arms SLO-aware overload shedding: when the
+        estimated backlog drain time exceeds this bound, queued requests
+        are shed lowest-priority-first (newest-first within a class) with
+        ``FailureReason.OVERLOAD`` until the backlog fits. 0 = never shed
+        on load (the bounded-queue ``overflow`` policies still apply).
+    """
+
+    max_chunk: int = 0
+    token_budget: int = 0
+    decode_priority: bool = True
+    fast_fail: bool = False
+    max_queue_delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.max_chunk < 0:
+            raise ValueError(f"max_chunk={self.max_chunk} must be >= 0")
+        if self.token_budget < 0:
+            raise ValueError(
+                f"token_budget={self.token_budget} must be >= 0")
+        if self.max_queue_delay_s < 0:
+            raise ValueError(
+                f"max_queue_delay_s={self.max_queue_delay_s} must be >= 0")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SchedSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingSpec:
     """Declarative spec for :func:`repro.serving.prepare_servable`.
 
@@ -123,6 +180,12 @@ class ServingSpec:
         place -- no dense-view reassembly), ``'auto'`` asks
         ``kernels.autotune.choose_decode_kernel`` per shape+device. The
         ``REPRO_DECODE_KERNEL`` env var overrides any spec value.
+      sched: optional :class:`SchedSpec` arming SLO-aware scheduling on
+        engines built over this servable (chunked prefill, per-window token
+        budget, deadline fast-fail, overload shedding -- docs/API.md §SLO
+        scheduling). None (or a default ``SchedSpec()``) keeps the legacy
+        admit-everything one-shot-prefill scheduler. The engine's ``sched=``
+        kwarg overrides the spec value, mirroring ``kv_layout``.
     """
 
     tile: Tuple[int, int] = (128, 128)
@@ -140,6 +203,7 @@ class ServingSpec:
     kv_layout: str = "dense"
     kv_page_size: int = 16
     decode_kernel: str = "auto"
+    sched: Optional[SchedSpec] = None
 
     def __post_init__(self):
         if self.kv_layout not in KV_LAYOUTS:
@@ -161,6 +225,9 @@ class ServingSpec:
                 f"decode_kernel={self.decode_kernel!r} not in {DECODE_KERNELS}")
         if self.dtype not in (None, "float32", "bfloat16"):
             raise ValueError(f"unsupported dtype {self.dtype!r}")
+        if self.sched is not None and not isinstance(self.sched, SchedSpec):
+            raise ValueError(
+                f"sched must be a SchedSpec or None, got {self.sched!r}")
         if self.partition not in PARTITIONS:
             raise ValueError(
                 f"partition={self.partition!r} not in {PARTITIONS}")
@@ -207,6 +274,7 @@ class ServingSpec:
         d["targets"] = list(self.targets)
         if self.mesh_shape is not None:
             d["mesh_shape"] = list(self.mesh_shape)
+        # dataclasses.asdict already lowered the nested SchedSpec to a dict
         return d
 
     @classmethod
@@ -216,4 +284,6 @@ class ServingSpec:
         d["targets"] = tuple(d["targets"])
         if d.get("mesh_shape") is not None:
             d["mesh_shape"] = tuple(d["mesh_shape"])
+        if d.get("sched") is not None:
+            d["sched"] = SchedSpec.from_dict(d["sched"])
         return cls(**d)
