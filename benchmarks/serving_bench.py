@@ -750,10 +750,140 @@ def run_open_loop(emit=print, smoke=False, write_json=True, arms=None,
     return results
 
 
+def run_quant_error(emit=print, smoke=False, write_json=True, arms=None):
+    """The quantized-pack cells (docs/API.md §Quantized sparse packs): the
+    fp32 plan arm against the SAME pruned weights exported with
+    ``pack_quant='int8'`` (per-block absmax scales, dequant fused into the
+    plan matmul). Three numbers matter:
+
+      * pack bytes -- fp32 vs int8+scales, total and per device; the
+        acceptance gate wants >= 3x smaller (int8 is 4x on values, the
+        scale stream gives a little back).
+      * fidelity -- max abs logit delta, teacher-forced next-token
+        agreement (identical context per position, the standard metric)
+        and free-running engine greedy agreement on identical prompts
+        (both arms at temperature 0, same seeds), alongside the model's
+        own top-2 logit margins. The >= 99% gate holds on the
+        config-registry models (tests/test_quant_packs.py, gemma3);
+        THIS model is random-init, so its margins sit at the quant
+        noise floor and the agreement here reads against
+        `logit_margins` (docs/PERF.md §Quantized packs). bench_guard
+        warns if agreement or the delta drifts.
+      * throughput -- tok/s per arm through the fused engine loop, so the
+        dequant-fused path's cost (or win) is on the record next to the
+        bytes it saves.
+    """
+    cfg = _bert_sized_lm(smoke)
+    bp = _bench_params(smoke)
+    slots = 4 if smoke else SLOT_COUNTS[-1]
+    sync_every = 4
+    rng = np.random.RandomState(5)
+    arms = arms or _build_arms(cfg, emit)
+    fp32 = arms["sparse"]
+    emit("exporting int8 arm (same pruned weights, pack_quant='int8')...")
+    # init_model is deterministic: PRNGKey(0) reproduces _build_arms'
+    # weights exactly, so both arms prune to the identical pattern
+    int8 = prepare_servable(
+        init_model(jax.random.PRNGKey(0), cfg), cfg,
+        ServingSpec(tile=TILE, sparsity=SPARSITY, prune="tied",
+                    targets=TARGETS, backend="plan", pack_quant="int8"))
+
+    # -- fidelity: teacher-forced next-token agreement over a prompt
+    # batch (both arms see the IDENTICAL context at every position --
+    # the standard quantization-fidelity metric; free-running decode
+    # cascades a single flip into every later token) plus the raw max
+    # logit delta and the model's own top-2 logit margins, so the
+    # agreement number can be read against the decision margins it is
+    # up against (random-init logits are near-tied by construction;
+    # docs/PERF.md §Quantized packs)
+    import jax.numpy as jnp
+    toks = np.random.RandomState(6).randint(0, cfg.vocab_size, (8, 24))
+    y32 = np.asarray(fp32.forward(jnp.asarray(toks)))
+    y8 = np.asarray(int8.forward(jnp.asarray(toks)))
+    max_delta = float(np.abs(y32 - y8).max())
+    a32, a8 = y32.argmax(-1), y8.argmax(-1)
+    tf_agreement = float((a32 == a8).mean())
+    top2 = np.sort(y32, -1)
+    gaps = top2[..., -1] - top2[..., -2]
+    margin_stats = {"top2_gap_median": round(float(np.median(gaps)), 5),
+                    "top2_gap_p10": round(float(np.percentile(gaps, 10)),
+                                          5)}
+
+    def greedy_tokens(servable):
+        eng = servable.engine(max_slots=slots, cache_len=bp["cache_len"],
+                              sync_every=sync_every, temperature=0.0)
+        prng = np.random.RandomState(7)
+        lens = [max(2, bp["prompt_len"] - (i % 4))
+                for i in range(2 * slots)]
+        reqs = [eng.submit(prng.randint(0, cfg.vocab_size, (L,)),
+                           max_new_tokens=bp["max_new"]) for L in lens]
+        eng.run()
+        assert all(r.done for r in reqs)
+        out = [list(r.tokens) for r in reqs]
+        eng.close()
+        return out
+
+    t32, t8 = greedy_tokens(fp32), greedy_tokens(int8)
+    matched = sum(a == b for s32, s8 in zip(t32, t8)
+                  for a, b in zip(s32, s8))
+    total = sum(len(s) for s in t32)
+    fr_agreement = matched / max(total, 1)
+
+    # -- bytes: fp32 vs int8+scales, total and per device ----------------
+    b32_total, b32_dev = fp32.pack_bytes()
+    b8_total, b8_dev = int8.pack_bytes()
+    qs = int8.quant_stats() or {}
+    bytes_cell = {
+        "fp32_pack_bytes": b32_total, "fp32_pack_bytes_per_device": b32_dev,
+        "int8_pack_bytes": b8_total, "int8_pack_bytes_per_device": b8_dev,
+        "bytes_ratio": round(b32_total / max(b8_total, 1), 3),
+        "compression_ratio": qs.get("compression_ratio"),
+        "granularities": qs.get("granularities"),
+        "max_abs_quant_err": qs.get("max_abs_err"),
+    }
+    emit(f"pack bytes: fp32 {b32_total}, int8 {b8_total} "
+         f"({bytes_cell['bytes_ratio']}x smaller); "
+         f"max |logit delta| {max_delta:.4g} "
+         f"(model top-2 gap median {margin_stats['top2_gap_median']})")
+    emit(f"greedy agreement: teacher-forced {tf_agreement:.2%}, "
+         f"free-running engine {fr_agreement:.2%} "
+         f"({matched}/{total} tokens)")
+
+    # -- throughput: both arms through the fused engine loop -------------
+    results = {}
+    emit(f"{'arm':10s} {'tokens':>7s} {'sec':>8s} {'tok/s':>8s}")
+    for name, servable in (("fp32_plan", fp32), ("int8_plan", int8)):
+        _, cell = _run_cell(servable, slots, prompt_len=bp["prompt_len"],
+                            max_new=bp["max_new"],
+                            cache_len=bp["cache_len"], rng=rng,
+                            reps=1 if smoke else 2, sync_every=sync_every)
+        results[name] = [cell]
+        emit(f"{name:10s} {cell['tokens']:7d} {cell['seconds']:8.3f} "
+             f"{cell['tokens_per_s']:8.1f}")
+
+    if write_json:
+        section = "quant_error_smoke" if smoke else "quant_error"
+        path = update_bench_json(section, {
+            "model": cfg.arch, "layers": cfg.n_layers,
+            "d_model": cfg.d_model, "sparsity": SPARSITY,
+            "tile": list(TILE), "slots": slots, "sync_every": sync_every,
+            "prompt_len": bp["prompt_len"], "max_new_tokens": bp["max_new"],
+            "pack_quant": "int8",
+            "pack_bytes": bytes_cell,
+            "max_abs_logit_delta": round(max_delta, 6),
+            "greedy_token_agreement": round(tf_agreement, 6),
+            "engine_greedy_agreement": round(fr_agreement, 6),
+            "logit_margins": margin_stats,
+            "results": results,
+        }, path=bench_path())
+        emit(f"wrote {section} section to {path}")
+    return results
+
+
 #: positional selectors: `serving_bench.py --smoke run_open_loop` runs just
 #: that section; no selector keeps the historical run-everything behavior
 SELECTORS = ("run", "run_fused", "run_chaos", "run_kv_memory",
-             "run_sharded", "run_open_loop")
+             "run_sharded", "run_open_loop", "run_quant_error")
 
 
 def main(argv):
@@ -793,6 +923,8 @@ def main(argv):
     if want("run_open_loop"):
         run_open_loop(smoke=smoke, write_json=write_json, arms=arms,
                       qps_sweep=qps_sweep)
+    if want("run_quant_error"):
+        run_quant_error(smoke=smoke, write_json=write_json, arms=arms)
     if want("run_sharded"):
         run_sharded(smoke=smoke, write_json=write_json,
                     mesh_sweep=mesh_sweep)

@@ -30,10 +30,18 @@ one shared system prompt and watch ``stats_dict()['kv']`` report pool
 utilization and the prompt tokens served from shared pages instead of
 prefill (docs/API.md §Paged KV + prefix cache).
 
+``--pack-quant int8`` serves the same packs with int8 block values +
+per-block fp32 scales, dequant fused into the plan matmul
+(docs/API.md §Quantized sparse packs). The demo prints a pack-bytes
+scorecard -- fp32-equivalent vs quantized, per device under ``--tp N``
+-- next to the tok/s line, so the memory/fidelity trade is visible in
+one run.
+
 Run:  PYTHONPATH=src python examples/serve_lm_engine.py
           [--arch deepseek_7b] [--slots 4] [--requests 10] [--max-new 12]
           [--sync-every 8] [--temperature 0.8] [--top-k 40] [--tp N]
           [--kv-layout paged] [--kv-page-size 16] [--shared-prefix 32]
+          [--pack-quant int8]
 """
 import argparse
 import time
@@ -73,6 +81,11 @@ def main():
                     help="prepend one shared N-token system prompt to every "
                          "request -- with --kv-layout paged the prefix cache "
                          "serves the repeats from shared pages")
+    ap.add_argument("--pack-quant", default="none",
+                    choices=("none", "int8", "fp8"),
+                    help="store pack values quantized with per-block "
+                         "scales, dequant fused into the plan matmul "
+                         "(docs/API.md §Quantized sparse packs)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -82,7 +95,8 @@ def main():
         tile=(16, 16), sparsity=args.sparsity, prune="oneshot",
         targets=("attn/wq", "attn/wk", "attn/wv", "attn/wo"),
         mesh_shape=(1, args.tp) if args.tp > 1 else None, partition="tp",
-        kv_layout=args.kv_layout, kv_page_size=args.kv_page_size))
+        kv_layout=args.kv_layout, kv_page_size=args.kv_page_size,
+        pack_quant=args.pack_quant))
     st = servable.stats()
     print(f"sparse export: {st['packed_projections']} packed projections, "
           f"density {st['density']:.2f}" if st["density"] is not None
@@ -97,6 +111,18 @@ def main():
         hits = {s: f"{v['hits']}h/{v['misses']}m"
                 for s, v in sorted(sh["per_shard_registry"].items())}
         print(f"per-shard registry (layout reuse across layers): {hits}")
+    qs = servable.quant_stats()
+    if qs:
+        print(f"pack-bytes scorecard ({qs['qdtype']}, "
+              f"{'/'.join(sorted(qs['granularities']))} scales):")
+        print(f"  fp32-equivalent: {qs['fp32_equiv_bytes_total']:>10d} B "
+              f"total, {qs['fp32_equiv_bytes_per_device']:>10d} B/device")
+        print(f"  quantized:       {qs['quant_bytes_total']:>10d} B "
+              f"total, {qs['quant_bytes_per_device']:>10d} B/device "
+              f"(incl. {qs['scale_bytes_total']} B scales)")
+        print(f"  compression {qs['compression_ratio']:.2f}x, worst "
+              f"quant err {qs['max_abs_err']:.2e} abs / "
+              f"{qs['max_rel_err']:.2e} rel")
 
     engine = servable.engine(max_slots=args.slots, cache_len=128,
                              sync_every=args.sync_every,

@@ -31,12 +31,18 @@ import sys
 #: plan-layout matmul arms (XLA composition vs the plan-consuming Pallas
 #: kernel) by rate (rows/s) -- both warn-only like everything else here,
 #: keyed per cell tag (kernel_bench.py)
+#: quant_error tracks the fp32-plan vs int8-plan arms (same pruned
+#: weights, pack_quant='int8') by tok/s; its fidelity scalars (greedy
+#: token agreement, max abs logit delta) get their own direction-aware
+#: pass below -- all warn-only, so a PR that degrades quantized decode
+#: fidelity or throughput shows up in the trajectory without blocking
 SECTIONS = ("engine_smoke", "engine", "engine_fused_smoke", "engine_fused",
             "engine_chaos_smoke", "engine_chaos",
             "kv_memory_smoke", "kv_memory",
             "sharded_smoke", "sharded",
             "flash_decode_smoke", "flash_decode",
-            "plan_bsr_smoke", "plan_bsr")
+            "plan_bsr_smoke", "plan_bsr",
+            "quant_error_smoke", "quant_error")
 
 #: open_loop cells carry LATENCY percentiles (lower is better, the
 #: opposite direction from every throughput section above): p95 TTFT and
@@ -44,6 +50,14 @@ SECTIONS = ("engine_smoke", "engine", "engine_fused_smoke", "engine_fused",
 #: -- open-loop tails on a shared box are the noisiest numbers in the
 #: file, so the threshold only flags step-change regressions
 LATENCY_SECTIONS = ("open_loop_smoke", "open_loop")
+
+#: quant fidelity scalars live at the section's top level, one number
+#: each, with opposite regression directions: agreement is
+#: higher-is-better (a drop warns, like throughput), the logit delta is
+#: lower-is-better (a rise warns, like latency)
+QUANT_SECTIONS = ("quant_error_smoke", "quant_error")
+QUANT_HIGHER_BETTER = ("greedy_token_agreement",)
+QUANT_LOWER_BETTER = ("max_abs_logit_delta",)
 
 
 def _cells(section_payload):
@@ -103,6 +117,20 @@ def compare(baseline: dict, fresh: dict, threshold: float = 0.2):
                 continue
             if new_ms > (1.0 + threshold) * base_ms:
                 regressions.append((section, key, base_ms, new_ms, "ms"))
+    for section in QUANT_SECTIONS:
+        if section not in baseline or section not in fresh:
+            continue
+        for metric in QUANT_HIGHER_BETTER + QUANT_LOWER_BETTER:
+            base_v = baseline[section].get(metric)
+            new_v = fresh[section].get(metric)
+            if base_v is None or new_v is None or not base_v:
+                continue
+            worse = (new_v < (1.0 - threshold) * base_v
+                     if metric in QUANT_HIGHER_BETTER
+                     else new_v > (1.0 + threshold) * base_v)
+            if worse:
+                regressions.append((section, (metric, None, None),
+                                    base_v, new_v, "quant"))
     return regressions
 
 
@@ -128,10 +156,14 @@ def main(argv):
     regressions = compare(baseline, fresh, threshold)
     for section, key, base_v, new_v, unit in regressions:
         arm, mid, tail = key
-        desc = (f"{arm} qps={mid} {tail}" if unit == "ms"
-                else f"{arm} slots={mid} sync_every={tail}")
+        if unit == "quant":
+            desc = f"{arm}"
+        elif unit == "ms":
+            desc = f"{arm} qps={mid} {tail}"
+        else:
+            desc = f"{arm} slots={mid} sync_every={tail}"
         print(f"WARNING: bench regression in {section}: {desc}: "
-              f"{base_v:.1f} -> {new_v:.1f} {unit} "
+              f"{base_v:.4g} -> {new_v:.4g} {unit} "
               f"({100 * (new_v / base_v - 1):+.0f}%)")
     if not regressions:
         print(f"bench_guard: no >{threshold:.0%} regression "

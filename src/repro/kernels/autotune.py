@@ -80,9 +80,16 @@ from repro.kernels.flash_decode import default_kv_split
 
 CANDIDATES = ("dense", "gather", "rowpack", "plan", "pallas", "masked",
               "plan_pallas")
+#: quantized-pack arms, appended to the default candidate set only when
+#: the caller serves quantized packs (choose_backend(quant=...)): int8
+#: values + per-block scales through the dequant-fused plan matmul (XLA
+#: composition / compiled Pallas kernel). Their stub costs price the
+#: 4x-smaller value stream plus the scale stream, so 'auto' only picks
+#: them where the reduced traffic actually pays.
+QUANT_CANDIDATES = ("plan_q8", "plan_pallas_q8")
 #: interpret-mode-only off TPU: excluded from wall-clock candidate sets
 #: there (docs/PERF.md); the stub proxy still ranks them
-INTERPRET_ONLY = ("pallas", "masked", "plan_pallas")
+INTERPRET_ONLY = ("pallas", "masked", "plan_pallas", "plan_pallas_q8")
 
 #: attention decode-step kernels ranked by choose_decode_kernel
 DECODE_CANDIDATES = ("xla", "flash")
@@ -357,6 +364,18 @@ def _candidate_fn(pack: KernelBSR, name: str):
         data = xp.pack_plan_data(plan, pack.data)
         return (jax.jit(lambda x, d, _p=plan:
                         xp.plan_linear_pallas(x, d, _p)), data)
+    if name in ("plan_q8", "plan_pallas_q8"):
+        # quantize the measurement data exactly like export would: the
+        # timed op consumes int8 values + fp32 scales, dequant fused
+        plan = xp.plan_for_pack(pack)
+        data_rp = xp.pack_plan_data(plan, pack.data)
+        q, s = xp.quantize_plan_values(
+            data_rp, "int8", xp.quant_granularity(pack.tile))
+        if name == "plan_q8":
+            return (jax.jit(lambda x, d, _s=s, _p=plan:
+                            xp.plan_q_linear(x, d, _s, _p)), q)
+        return (jax.jit(lambda x, d, _s=s, _p=plan:
+                        xp.plan_q_linear_pallas(x, d, _s, _p)), q)
     if name in ("gather", "rowpack", "pallas"):
         return (jax.jit(lambda x, d, _pk=pack, _b=name:
                         bsr_linear(x, d, _pk, _b)), pack.data)
@@ -442,6 +461,20 @@ def stub_costs(pack: KernelBSR, m: int,
             # breaks the tie toward the plan-consuming kernel on TPU
             c = (0.97 * m * nnzt * bn * bk + traffic * nnzt * bn * bk
                  + interp)
+        elif name in ("plan_q8", "plan_pallas_q8"):
+            # int8 values cut the weight stream 4x vs fp32, but add a
+            # per-block (or per-row-group) fp32 scale stream; FLOPs match
+            # the fp32 arm (dequant fuses into the accumulate)
+            gran = xp.quant_granularity(pack.tile)
+            scale_elems = plan.n_vrows * (plan.p_max if gran == "block"
+                                          else 1)
+            qtraffic = traffic * nnzt * bn * bk / 4.0 + traffic * scale_elems
+            if name == "plan_q8":
+                c = m * plan.n_vrows * plan.p_max * bn * bk + qtraffic
+                if plan.spilled:
+                    c += m * plan.n_vrows * bn
+            else:
+                c = 0.97 * m * nnzt * bn * bk + qtraffic + interp
         elif name == "masked":
             c = m * nnzt * bn * bk + traffic * n * k + interp
         else:
@@ -468,13 +501,22 @@ def choose_backend(pack: KernelBSR, m: int = 256, *,
                    cache: Optional[AutotuneCache] = None,
                    stub: Optional[bool] = None, reps: int = 5,
                    timer: Optional[Callable] = None,
-                   shard: Optional[Tuple[int, str]] = None) -> Choice:
+                   shard: Optional[Tuple[int, str]] = None,
+                   quant: str = "none") -> Choice:
     """Pick the fastest execution path for ``pack`` on this device.
 
     Consults the on-disk winner cache first (one measurement per
-    (pattern, shard, m, device kind, device count, mode) EVER, across
-    processes); on a miss it measures (or, in stub mode, ranks by the
-    deterministic proxy) and persists the winner.
+    (pattern, shard, m, device kind, device count, mode, quant, value
+    dtype) EVER, across processes); on a miss it measures (or, in stub
+    mode, ranks by the deterministic proxy) and persists the winner.
+
+    ``quant`` is the serving pack quantization ('none' | 'int8' | 'fp8').
+    When set and ``candidates`` is None, the quantized arms
+    (:data:`QUANT_CANDIDATES`) join the default set so 'auto' can pick
+    between fp32 and quantized plans. It is always folded into the cache
+    key -- alongside the value dtype -- so a winner measured for fp32
+    packs never answers for quantized ones (and vice versa); entries
+    written before this keying are simply never matched again.
 
     ``shard = (n_shards, axis)`` tags the key with the tensor-parallel
     partitioning AND the per-shard sub-problem shape, and the measurement
@@ -487,6 +529,8 @@ def choose_backend(pack: KernelBSR, m: int = 256, *,
     cache = cache if cache is not None else default_cache()
     if candidates is None:
         candidates = list(CANDIDATES)
+        if quant != "none":
+            candidates += list(QUANT_CANDIDATES)
         if not stub and timer is None and jax.default_backend() != "tpu":
             candidates = [c for c in candidates if c not in INTERPRET_ONLY]
     mode = "stub" if stub else "wallclock"
@@ -515,7 +559,8 @@ def choose_backend(pack: KernelBSR, m: int = 256, *,
             # can differ (smaller problems lean dense)
             measure_pack = shard_subpack(pack, n_shards, axis)
     key = (f"{pattern_digest(pack)}:m{int(m)}:{device_kind()}"
-           f":d{jax.device_count()}{shard_tag}:{mode}:c{cand_tag}")
+           f":d{jax.device_count()}{shard_tag}:{mode}"
+           f":q{quant}:w{np.dtype(pack.data.dtype).name}:c{cand_tag}")
     rec = cache.get(key)
     if rec is not None and rec.get("backend") in candidates:
         return Choice(rec["backend"], dict(rec.get("costs", {})), True,
@@ -531,6 +576,7 @@ def choose_backend(pack: KernelBSR, m: int = 256, *,
                     "m": int(m), "device": device_kind(),
                     "devices": jax.device_count(),
                     "shard": shard_tag.lstrip(":") or None,
+                    "quant": quant,
                     "created": time.strftime("%Y-%m-%dT%H:%M:%S")})
     return Choice(backend, costs, False, mode, key)
 

@@ -447,6 +447,105 @@ def plan_dds(x: jax.Array, data_rp: jax.Array, schedule, *, n: int,
     return y[:m] if pad else y
 
 
+def _plan_dds_q_kernel(row_ref, col_ref, vrow_ref, slot_ref, x_ref, w_ref,
+                       s_ref, b_ref, o_ref, acc_ref, *, act, bias):
+    # same schedule/accumulator protocol as _plan_dds_kernel; the block
+    # values arrive int8/fp8 and the per-block (or per-row-group) scale
+    # rides the scalar-prefetched schedule -- dequant is one scalar
+    # multiply on the tile's contribution, inside the accumulation, so
+    # fp32 weight values never exist outside VMEM.
+    j = pl.program_id(1)
+    first = (j == 0) | (row_ref[j] != row_ref[jnp.maximum(j - 1, 0)])
+
+    @pl.when(first)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += s_ref[0, 0] * jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[0, 0].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(row_ref[j + 1] != row_ref[j])
+    def _():
+        y = acc_ref[...]
+        if bias:
+            y = y + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _act_epilogue(y, act).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile", "bm",
+                                             "granularity", "act", "bias",
+                                             "interpret"))
+def _plan_dds_q_call(x, qvalues, scales, b, row_seq, col_seq, vrow_seq,
+                     slot_seq, *, n, tile, bm, granularity, act, bias,
+                     interpret):
+    bn, bk = tile
+    nnzt = int(col_seq.shape[0])
+    m = x.shape[0]
+    grid = (m // bm, nnzt)
+    # 'block' scales are (V, P): one per schedule step at (vr[j], sl[j]).
+    # 'row' scales are (V, 1): every slot of a vrow shares column 0 -- the
+    # granularity is a static choice, so the index map is too.
+    if granularity == "block":
+        s_spec = pl.BlockSpec((1, 1),
+                              lambda i, j, row, col, vr, sl: (vr[j], sl[j]))
+    else:
+        s_spec = pl.BlockSpec((1, 1),
+                              lambda i, j, row, col, vr, sl: (vr[j], 0))
+    return pl.pallas_call(
+        functools.partial(_plan_dds_q_kernel, act=act, bias=bias),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk),
+                             lambda i, j, row, col, vr, sl: (i, col[j])),
+                pl.BlockSpec((1, 1, bn, bk),
+                             lambda i, j, row, col, vr, sl:
+                             (vr[j], sl[j], 0, 0)),
+                s_spec,
+                pl.BlockSpec((1, bn),
+                             lambda i, j, row, col, vr, sl: (0, row[j])),
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, bn), lambda i, j, row, col, vr, sl: (i, row[j])),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(row_seq, col_seq, vrow_seq, slot_seq, x, qvalues, scales, b)
+
+
+def plan_dds_q(x: jax.Array, qvalues: jax.Array, scales: jax.Array,
+               schedule, *, n: int, tile: Tuple[int, int],
+               granularity: str = "block", bias: jax.Array | None = None,
+               act: str | None = None, bm: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """Y(M, N) = X(M, K) @ dequant(Q)^T, dequant fused into the block loop.
+
+    Same contract as :func:`plan_dds` with the (V, P, bn, bk) values stored
+    int8/fp8 and ``scales`` (V, P) fp32 ('block' granularity) or (V, 1)
+    ('row'). Each tile's partial product is scaled before it joins the VMEM
+    accumulator; bias/act fuse into the row-change write as before.
+    """
+    m = x.shape[0]
+    bn, bk = tile
+    row_seq, col_seq, vrow_seq, slot_seq = schedule
+    bm = min(bm, _ceil_mult(m, 8))
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    has_bias = bias is not None
+    b = (bias.reshape(1, n) if has_bias
+         else jnp.zeros((1, n), x.dtype))
+    y = _plan_dds_q_call(x, qvalues, scales, b, jnp.asarray(row_seq),
+                         jnp.asarray(col_seq), jnp.asarray(vrow_seq),
+                         jnp.asarray(slot_seq), n=n, tile=tile, bm=bm,
+                         granularity=granularity, act=act, bias=has_bias,
+                         interpret=interpret)
+    return y[:m] if pad else y
+
+
 def plan_dds_t(dy: jax.Array, data_rp: jax.Array, t_schedule, *, k: int,
                tile: Tuple[int, int], bm: int = 128,
                interpret: bool = True) -> jax.Array:

@@ -695,3 +695,237 @@ class PlanChoice:
     def __eq__(self, other):
         return (isinstance(other, PlanChoice)
                 and self.fingerprint == other.fingerprint)
+
+
+# --------------------------------------------------------------------------
+# quantized packs: int8/fp8 block values, one fp32 scale per block
+# --------------------------------------------------------------------------
+#
+# The BSR block is the natural quantization unit (Intel's sparse CPU
+# accelerator, arxiv 2306.16601): one scale per (bn, bk) tile keeps the
+# dequant inside the block matmul, so the XLA path folds it into the
+# gathered activations (xg * scale before the einsum -- exactly equivalent,
+# fp32 weight values never land in the params tree) and the Pallas path
+# multiplies the accumulator contribution by the scalar-prefetched scale.
+# Skinny tiles (bn*bk below _QUANT_BLOCK_MIN_ELEMS, e.g. the paper's 32x1
+# column blocks) would spend one fp32 scale per <=32 values; they fall back
+# to one scale per virtual row (the row group), bounding scale overhead.
+
+QUANT_DTYPES = ("int8", "fp8")
+#: per-block scales need bn*bk elements to amortize their 4 bytes; below
+#: this the scale granularity falls back to one per row group (vrow)
+_QUANT_BLOCK_MIN_ELEMS = 128
+_FP8_MAX = 448.0                       # float8_e4m3fn finite max
+
+
+def fp8_dtype():
+    """jnp.float8_e4m3fn when this jax build has float8, else None."""
+    return getattr(jnp, "float8_e4m3fn", None)
+
+
+def quant_granularity(tile: Tuple[int, int]) -> str:
+    """'block' (one scale per (bn, bk) tile) for tiles that amortize the
+    fp32 scale; 'row' (one per virtual row group) for skinny tiles."""
+    return "block" if tile[0] * tile[1] >= _QUANT_BLOCK_MIN_ELEMS else "row"
+
+
+def _qparams(qdtype: str):
+    if qdtype == "int8":
+        return 127.0, jnp.int8
+    if qdtype == "fp8":
+        ft = fp8_dtype()
+        if ft is None:
+            raise NotImplementedError(
+                "pack_quant='fp8' needs a jax build with float8_e4m3fn; "
+                "this one has none (use 'int8')")
+        return _FP8_MAX, ft
+    raise ValueError(f"qdtype={qdtype!r} not in {QUANT_DTYPES}")
+
+
+def quantize_plan_values(data_rp, qdtype: str, granularity: str):
+    """Row-grouped values (..., V, P, bn, bk) -> (qvalues, scales).
+
+    Symmetric absmax quantization: ``scales`` is (..., V, P) fp32 for
+    'block' granularity, (..., V, 1) for 'row' (the trailing 1 broadcasts
+    over slots, and gives the Pallas kernel a static slot-0 index map).
+    All-zero groups (pruned padding slots) get scale 1.0 so dequant stays
+    exact zero."""
+    d = jnp.asarray(data_rp, jnp.float32)
+    if granularity == "block":
+        amax = jnp.max(jnp.abs(d), axis=(-2, -1))          # (..., V, P)
+    elif granularity == "row":
+        amax = jnp.max(jnp.abs(d), axis=(-3, -2, -1))[..., None]
+    else:
+        raise ValueError(f"granularity={granularity!r}")
+    qmax, qt = _qparams(qdtype)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    s = scales[..., None, None]                # broadcast over (bn, bk)
+    if qdtype == "int8":
+        q = jnp.clip(jnp.round(d / s), -qmax, qmax).astype(qt)
+    else:
+        q = (d / s).astype(qt)
+    return q, scales
+
+
+def dequantize_plan_values(qvalues, scales) -> jax.Array:
+    """(qvalues, scales) -> fp32 row-grouped values (the export-time
+    round-trip check and the serialize-compat path; serving never calls
+    this -- dequant stays fused in the matmul)."""
+    q = jnp.asarray(qvalues).astype(jnp.float32)
+    return q * jnp.asarray(scales)[..., None, None]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def plan_q_linear(x, qvalues, scales, plan: RowPackPlan):
+    """Y(M, N) = X(M, K) @ dequant(Q)^T with the dequant fused.
+
+    Scaling the *gathered activations* (xg[m, v, p, :] * scales[v, p]) is
+    exactly the per-block weight dequant re-associated onto the small
+    operand, so the einsum contracts int8/fp8 values directly (XLA fuses
+    the widening convert into the contraction) and a full fp32 weight
+    tensor never materializes. Differentiable in ``x`` (serving + probe
+    path); quantized values are constants, their grad is zero."""
+    return _plan_q_fwd_impl(x, qvalues, scales, plan)
+
+
+def _scale_xg(xg, scales):
+    # xg (M, V, P, bk); scales (V, P) or (V, 1) -> broadcast over bk (and
+    # over slots for row granularity)
+    return xg.astype(jnp.float32) * scales[..., None]
+
+
+def _plan_q_fwd_impl(x, qvalues, scales, plan):
+    m = x.shape[0]
+    xs = _scale_xg(_gather_x(x, plan), scales)            # (M, V, P, bk)
+    y = jnp.einsum("mvpk,vpnk->vmn", xs, qvalues.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)    # (V, M, bn)
+    if plan.spilled:
+        y = jax.ops.segment_sum(y, jnp.asarray(plan.row_of_vrow),
+                                num_segments=plan.n_brows)
+    return y.transpose(1, 0, 2).reshape(m, plan.shape[0]).astype(x.dtype)
+
+
+def _plan_q_fwd(x, qvalues, scales, plan):
+    return _plan_q_fwd_impl(x, qvalues, scales, plan), (x, qvalues, scales)
+
+
+def _plan_q_bwd(plan, res, dy):
+    x, qvalues, scales = res
+    m = x.shape[0]
+    bn, bk = plan.tile
+    dy_v = dy.reshape(m, plan.n_brows, bn)
+    if plan.spilled:
+        dy_v = dy_v[:, jnp.asarray(plan.row_of_vrow)]     # (M, V, bn)
+    dxg = jnp.einsum("mvn,vpnk->mvpk", dy_v, qvalues.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    dxg = _scale_xg(dxg, scales)       # re-associate the dequant onto dX
+    dx = jnp.zeros((m, plan.shape[1] // bk, bk), dxg.dtype)
+    dx = dx.at[:, jnp.asarray(plan.col_idx)].add(dxg)
+    return (dx.reshape(m, plan.shape[1]).astype(x.dtype),
+            jnp.zeros_like(qvalues), jnp.zeros_like(scales))
+
+
+plan_q_linear.defvjp(_plan_q_fwd, _plan_q_bwd)
+
+
+def plan_q_matmul(x: jax.Array, qvalues, scales, plan: RowPackPlan):
+    """Batched-x entry point for the dequant-fused XLA plan backend."""
+    lead = x.shape[:-1]
+    y = plan_q_linear(x.reshape(-1, x.shape[-1]), qvalues, scales, plan)
+    return y.reshape(*lead, plan.shape[0])
+
+
+def plan_q_linear_pallas(x, qvalues, scales, plan: RowPackPlan, *,
+                         bias=None, act: str | None = None):
+    """Dequant-fused plan matmul via the compiled Pallas kernel: the
+    per-block scale rides the scalar-prefetched schedule and multiplies
+    the accumulator contribution in place (bsr_matmul.plan_dds_q), with
+    the same fused bias/act epilogue as :func:`plan_fused_linear`.
+    Forward-only (serving path)."""
+    from repro.kernels.bsr_matmul import plan_dds_q
+    granularity = "row" if scales.shape[-1] == 1 else "block"
+    return plan_dds_q(x, qvalues, scales, plan_kernel_sequence(plan),
+                      n=plan.shape[0], tile=plan.tile,
+                      granularity=granularity, bias=bias, act=act,
+                      interpret=pallas_interpret_default())
+
+
+def plan_q_matmul_pallas(x: jax.Array, qvalues, scales,
+                         plan: RowPackPlan):
+    """Batched-x entry point for the dequant-fused Pallas plan backend."""
+    lead = x.shape[:-1]
+    y = plan_q_linear_pallas(x.reshape(-1, x.shape[-1]), qvalues, scales,
+                             plan)
+    return y.reshape(*lead, plan.shape[0])
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QuantPlan:
+    """A RowPackPlan whose values are stored quantized (int8/fp8 + fp32
+    scales) and served through the dequant-fused plan matmul.
+
+    Wraps the (possibly Sharded) plan rather than subclassing it: the
+    pattern, spill schedule and shard layout are untouched -- only the
+    value storage and the dispatch change. The params-tree entry for a
+    QuantPlan pack is ``{"w": qvalues, "scale": scales}`` (dtype-cast and
+    byte accounting treat it specially; serving/servable.py).
+
+    ``backend`` pins the execution path: 'plan' = the XLA composition
+    (:func:`plan_q_matmul`), 'plan_pallas' = the compiled kernel
+    (:func:`plan_q_matmul_pallas`).
+    """
+
+    plan: RowPackPlan
+    qdtype: str = "int8"               # 'int8' | 'fp8'
+    granularity: str = "block"         # 'block' (V, P) | 'row' (V, 1)
+    backend: str = "plan"              # 'plan' | 'plan_pallas'
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.plan.shape
+
+    @property
+    def tile(self) -> Tuple[int, int]:
+        return self.plan.tile
+
+    @property
+    def density(self) -> float:
+        return self.plan.density
+
+    @property
+    def real_nnzt(self) -> int:
+        return self.plan.real_nnzt
+
+    @property
+    def fingerprint(self) -> bytes:
+        return (b"quant:" + self.qdtype.encode() + b":"
+                + self.granularity.encode() + b":" + self.backend.encode()
+                + b":" + self.plan.fingerprint)
+
+    def with_mesh(self, mesh) -> "QuantPlan":
+        """Mesh attachment passthrough for ShardedPlan inners."""
+        if isinstance(self.plan, ShardedPlan):
+            return dataclasses.replace(self, plan=self.plan.with_mesh(mesh))
+        return self
+
+    def __hash__(self):
+        return hash(self.fingerprint)
+
+    def __eq__(self, other):
+        return (isinstance(other, QuantPlan)
+                and self.fingerprint == other.fingerprint)
+
+
+def quantize_for_plan(plan: RowPackPlan, data, qdtype: str, *,
+                      backend: str = "plan"):
+    """Packed tile values (..., nnzt, bn, bk) -> (QuantPlan, params dict).
+
+    The export-time quantize pass: row-group the values (pack_plan_data),
+    pick the scale granularity from the tile, quantize. Returns the
+    QuantPlan wrapper and its ``{"w", "scale"}`` params entry."""
+    data_rp = pack_plan_data(plan, data)
+    granularity = quant_granularity(plan.tile)
+    q, s = quantize_plan_values(data_rp, qdtype, granularity)
+    qp = QuantPlan(plan, qdtype=qdtype, granularity=granularity,
+                   backend=backend)
+    return qp, {"w": q, "scale": s}

@@ -189,6 +189,19 @@ def plan_dispatch(x, data_rp, plan, backend: str | None = None):
     raise ValueError(f"unknown plan backend {backend}")
 
 
+def plan_q_dispatch(x, qvalues, scales, plan, backend: str | None = None):
+    """Quantized-pack matmul behind the same backend switch: 'plan' = the
+    dequant-fused XLA composition (exec_plan.plan_q_matmul), 'plan_pallas'
+    = the compiled kernel with the scale multiply in the accumulation
+    (exec_plan.plan_q_matmul_pallas)."""
+    backend = backend or default_plan_backend()
+    if backend == "plan_pallas":
+        return xp.plan_q_matmul_pallas(x, qvalues, scales, plan)
+    if backend == "plan":
+        return xp.plan_q_matmul(x, qvalues, scales, plan)
+    raise ValueError(f"unknown plan backend {backend}")
+
+
 def sparsify_weight(w_dense, tile: Tuple[int, int] = (128, 128),
                     nnzt: int | None = None) -> KernelBSR:
     """Host-side packing step (offline, like TVM's relay BSR conversion)."""

@@ -121,6 +121,11 @@ def linear(p, x, pack=None, backend=None):
       * a ``PlanChoice`` -- the same row-grouped layout pinned to a
         plan-consuming execution backend (``'plan_pallas'`` = the compiled
         Pallas kernel driven by the plan's spill schedule);
+      * a ``QuantPlan`` -- ``p['w']`` holds int8/fp8 row-grouped values and
+        ``p['scale']`` the per-block (or per-row-group) fp32 scales; the
+        dequant-fused plan matmul executes (``pack.backend`` picks the XLA
+        composition vs the compiled kernel), and a ShardedPlan inner keeps
+        the tensor-parallel constraint;
       * a ``KernelBSR`` -- ``p['w']`` holds packed tile values (nnzt, bn, bk)
         and the matmul dispatches through ``bsr_linear``'s backends;
       * an ``autotune.BackendChoice`` -- a KernelBSR pattern pinned to the
@@ -129,8 +134,17 @@ def linear(p, x, pack=None, backend=None):
         weight and the tile-skipping ``masked`` kernel executes.
     """
     if pack is not None:
-        from repro.kernels.exec_plan import (PlanChoice, RowPackPlan,
-                                             ShardedPlan, plan_matmul)
+        from repro.kernels.exec_plan import (PlanChoice, QuantPlan,
+                                             RowPackPlan, ShardedPlan,
+                                             plan_matmul)
+        if isinstance(pack, QuantPlan):
+            from repro.kernels.ops import plan_q_dispatch
+            y = plan_q_dispatch(x, p["w"], p["scale"], pack.plan,
+                                backend=pack.backend)
+            if (isinstance(pack.plan, ShardedPlan)
+                    and pack.plan.mesh is not None):
+                y = tp_constrain(y, pack.plan)
+            return y
         if isinstance(pack, PlanChoice):
             from repro.kernels.ops import plan_dispatch
             return plan_dispatch(x, p["w"], pack.plan, backend=pack.backend)

@@ -1668,11 +1668,17 @@ class ServingEngine:
                 "page_resumes": self.stats.page_resumes}
 
     def stats_dict(self) -> Dict:
-        """``EngineStats.as_dict()`` plus the ``'kv'`` section (and, after
-        a watchdog stall, the ``'watchdog'`` snapshot of queue/active/
-        chunk state taken at detection time -- last stall wins)."""
+        """``EngineStats.as_dict()`` plus the ``'kv'`` section, the
+        ``'quant'`` section when the servable carries quantized packs
+        (pack bytes, compression ratio vs fp32, worst quantization
+        error), and, after a watchdog stall, the ``'watchdog'`` snapshot
+        of queue/active/chunk state taken at detection time -- last
+        stall wins."""
         d = self.stats.as_dict()
         d["kv"] = self.kv_stats()
+        qs = getattr(self.servable, "quant_stats", lambda: None)()
+        if qs:
+            d["quant"] = qs
         if self._watchdog_snapshot is not None:
             d["watchdog"] = dict(self._watchdog_snapshot)
         return d

@@ -40,8 +40,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.pattern_reuse import PatternRegistry
 from repro.kernels.bsr_matmul import KernelBSR, pack_bsr
-from repro.kernels.exec_plan import (build_sharded_plan, pack_plan_data,
-                                     plan_for_pack, shard_divisible)
+from repro.kernels.exec_plan import (QuantPlan, build_sharded_plan,
+                                     dequantize_plan_values, pack_plan_data,
+                                     plan_for_pack, quantize_for_plan,
+                                     shard_divisible)
 
 # projection names exported per mixer/ffn kind
 _ATTN_PROJS = ("wq", "wk", "wv", "wo")
@@ -100,7 +102,7 @@ def pack_single(w: np.ndarray, tile) -> Tuple[KernelBSR, jax.Array]:
 
 def _realize_backend(pack, data, backend: str,
                      registry: Optional[PatternRegistry],
-                     shard=None, shard_stats=None):
+                     shard=None, shard_stats=None, quant: str = "none"):
     """(pattern, packed values, chosen backend) -> (static pack stored in
     ``packs``, values stored in the params tree). ``data`` is
     ``(nnzt, bn, bk)`` or layer-stacked ``(L, nnzt, bn, bk)``.
@@ -122,8 +124,15 @@ def _realize_backend(pack, data, backend: str,
       * ``dense``   -> ``(None, None)``: the caller keeps the original
         dense weight and stores no pack (measurement said format support
         does not pay here).
+
+    ``quant != 'none'`` (spec ``pack_quant``) quantizes the plan-layout
+    backends: the values come back as a ``{"w": qvalues, "scale": scales}``
+    dict wrapped in a :class:`~repro.kernels.exec_plan.QuantPlan` (other
+    backends ignore it -- no per-block scale granularity to quantize at).
+    The explicit ``plan_q8`` / ``plan_pallas_q8`` backends are the autotune
+    verdict names for the same layouts.
     """
-    if backend == "plan":
+    if backend in ("plan", "plan_q8"):
         if shard is not None and shard[0] > 1 \
                 and shard_divisible(pack, shard[0], shard[1]):
             # built (not combined-cached) per call so identical layers
@@ -134,10 +143,18 @@ def _realize_backend(pack, data, backend: str,
                                       shard_stats=shard_stats)
         else:
             plan = plan_for_pack(pack, registry)
+        if backend == "plan_q8" or (backend == "plan" and quant != "none"):
+            return quantize_for_plan(plan, data,
+                                     quant if quant != "none" else "int8",
+                                     backend="plan")
         return plan, pack_plan_data(plan, data)
-    if backend == "plan_pallas":
+    if backend in ("plan_pallas", "plan_pallas_q8"):
         from repro.kernels.exec_plan import PlanChoice
         plan = plan_for_pack(pack, registry)
+        if backend == "plan_pallas_q8" or quant != "none":
+            return quantize_for_plan(plan, data,
+                                     quant if quant != "none" else "int8",
+                                     backend="plan_pallas")
         return PlanChoice(plan), pack_plan_data(plan, data)
     if backend == "bsr":
         return pack, data
@@ -173,9 +190,26 @@ def _choose(chooser, pack, shard):
     return chooser(pack) if shard is None else chooser(pack, shard=shard)
 
 
+def _quant_meta(pk, vals, data) -> Optional[Dict]:
+    """Export-time quantization round-trip accounting for a QuantPlan pack:
+    max abs dequant error over the stored tiles, absolute and relative to
+    the pack's value range. Recorded in the export stats (and surfaced by
+    ``Servable.stats()`` / ``stats_dict()``) so precision loss is visible
+    where the byte savings are."""
+    if not isinstance(pk, QuantPlan):
+        return None
+    ref = pack_plan_data(pk.plan, data)
+    deq = dequantize_plan_values(vals["w"], vals["scale"])
+    err = float(jnp.max(jnp.abs(deq - ref)))
+    amax = float(jnp.max(jnp.abs(ref)))
+    return {"qdtype": pk.qdtype, "granularity": pk.granularity,
+            "max_abs_err": err,
+            "rel_err": err / amax if amax > 0 else 0.0}
+
+
 def _serving_pack(w: np.ndarray, tile, use_plans: bool,
                   registry: Optional[PatternRegistry], chooser=None,
-                  shard=None, shard_stats=None):
+                  shard=None, shard_stats=None, quant: str = "none"):
     """(N, K) weight -> (static pattern, values, autotune meta). With plans,
     the values are row-grouped once here -- the scatter the seed backend
     paid per call. A ``chooser`` (kernels/autotune.py) overrides the
@@ -185,32 +219,62 @@ def _serving_pack(w: np.ndarray, tile, use_plans: bool,
     if chooser is None:
         pk, vals = _realize_backend(pack, pack.data,
                                     "plan" if use_plans else "bsr", registry,
-                                    shard, shard_stats)
-        return pk, vals, None
+                                    shard, shard_stats, quant)
+        qmeta = _quant_meta(pk, vals, pack.data)
+        return pk, vals, {"quant": qmeta} if qmeta else None
     choice = _choose(chooser, pack, shard)
     pk, vals = _realize_backend(pack, pack.data, choice.backend, registry,
-                                shard, shard_stats)
-    return pk, vals, {"backend": choice.backend,
-                      "cache_hit": choice.cache_hit, "mode": choice.mode}
+                                shard, shard_stats, quant)
+    meta = {"backend": choice.backend,
+            "cache_hit": choice.cache_hit, "mode": choice.mode}
+    qmeta = _quant_meta(pk, vals, pack.data)
+    if qmeta:
+        meta["quant"] = qmeta
+    return pk, vals, meta
 
 
 def _serving_pack_stacked(w_stacked: np.ndarray, tile, use_plans: bool,
                           registry: Optional[PatternRegistry], chooser=None,
-                          shard=None, shard_stats=None):
+                          shard=None, shard_stats=None, quant: str = "none"):
     pack, data, stats = pack_stacked(w_stacked, tile)
     shard = _effective_shard(pack, shard)
     if chooser is None:
         pk, vals = _realize_backend(pack, data,
                                     "plan" if use_plans else "bsr", registry,
-                                    shard, shard_stats)
+                                    shard, shard_stats, quant)
+        qmeta = _quant_meta(pk, vals, data)
+        if qmeta:
+            stats = dict(stats, quant=qmeta)
         return pk, vals, stats
     choice = _choose(chooser, pack, shard)
     pk, vals = _realize_backend(pack, data, choice.backend, registry,
-                                shard, shard_stats)
+                                shard, shard_stats, quant)
     stats = dict(stats)
     stats["autotune"] = {"backend": choice.backend,
                          "cache_hit": choice.cache_hit, "mode": choice.mode}
+    qmeta = _quant_meta(pk, vals, data)
+    if qmeta:
+        stats["quant"] = qmeta
     return pk, vals, stats
+
+
+def _param_entry(vals, dtype) -> Dict:
+    """Params-tree entry for a pack's serving values. Quantized packs come
+    back as a ``{"w", "scale"}`` dict whose leaves keep their own dtypes
+    (int8/fp8 values, fp32 scales -- the spec ``dtype`` cast must not touch
+    them); everything else stores ``{"w": values}`` cast to the model
+    dtype."""
+    if isinstance(vals, dict):
+        return dict(vals)
+    return {"w": vals.astype(dtype)}
+
+
+def _param_entry_layer(vals, i: int, dtype) -> Dict:
+    """Per-layer slice of stacked serving values (bert unrolled-encoder
+    path): index the leading layer axis of each leaf."""
+    if isinstance(vals, dict):
+        return {k: v[i] for k, v in vals.items()}
+    return {"w": vals[i].astype(dtype)}
 
 
 def _get_w(p) -> np.ndarray:
@@ -255,7 +319,8 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
                      fuse_qkv: bool = True, use_plans: bool = True,
                      include_ffn: bool = True,
                      registry: Optional[PatternRegistry] = None,
-                     backend_chooser=None, n_shards: int = 1):
+                     backend_chooser=None, n_shards: int = 1,
+                     pack_quant: str = "none"):
     """Replace attention (and pruned FFN) projections of an LM param tree
     with packed values.
 
@@ -297,14 +362,18 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
         if stacked:
             pk, data, st = _serving_pack_stacked(
                 w, tile, use_plans, registry, backend_chooser,
-                shard, shard_stats)
+                shard, shard_stats, pack_quant)
         else:
             pk, data, meta = _serving_pack(
                 w, tile, use_plans, registry, backend_chooser,
-                shard, shard_stats)
+                shard, shard_stats, pack_quant)
             st = {"union_nnzt": _pack_nnzt(pk)}
             if meta:
-                st["autotune"] = meta
+                qmeta = meta.pop("quant", None)
+                if qmeta:
+                    st["quant"] = qmeta
+                if meta:
+                    st["autotune"] = meta
         stats[scope] = st
         if pk is None:
             return None
@@ -322,7 +391,7 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
                 dtype = ap["wq"]["w"].dtype
                 data = _export_one(w_qkv, f"{scope}/wqkv", stacked, "wqkv")
                 if data is not None:
-                    ap["wqkv"] = {"w": data.astype(dtype)}
+                    ap["wqkv"] = _param_entry(data, dtype)
                     for proj in _QKV:
                         del ap[proj]
                 # measured dense: wq/wk/wv stay, unfused
@@ -335,8 +404,8 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
                 continue
             data = _export_one(w, f"{scope}/{proj}", stacked, proj)
             if data is not None:
-                ap[proj] = {"w": data.astype(
-                    layer_params["attn"][proj]["w"].dtype)}
+                ap[proj] = _param_entry(
+                    data, layer_params["attn"][proj]["w"].dtype)
         out = dict(layer_params)
         out["attn"] = ap
         return out
@@ -367,8 +436,8 @@ def export_lm_sparse(params, cfg: ModelConfig, tile=(128, 128), *,
                 continue
             data = _export_one(w, f"{scope}/{proj}", stacked, proj)
             if data is not None:
-                fp[proj] = {"w": data.astype(
-                    layer_params["ffn"][proj]["w"].dtype)}
+                fp[proj] = _param_entry(
+                    data, layer_params["ffn"][proj]["w"].dtype)
         out = dict(layer_params)
         out["ffn"] = fp
         return out
@@ -397,7 +466,8 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
                        use_plans: bool = True,
                        registry: Optional[PatternRegistry] = None,
                        stats_out: Optional[Dict] = None,
-                       backend_chooser=None, n_shards: int = 1):
+                       backend_chooser=None, n_shards: int = 1,
+                       pack_quant: str = "none"):
     """BSR export for the (unrolled) BERT encoder.
 
     Default: one pattern per layer and projection group (fused QKV). With
@@ -450,7 +520,19 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
                                         "cache_hit": choice.cache_hit,
                                         "mode": choice.mode}
                 pk, vals = _realize_backend(pack, data, choice.backend,
-                                            registry, shard_eff, shard_stats)
+                                            registry, shard_eff, shard_stats,
+                                            pack_quant)
+                qmeta = _quant_meta(pk, vals, data)
+                if qmeta:
+                    union_st["quant"] = qmeta
+                shared = [pk] * n_layers
+            elif use_plans and pack_quant != "none":
+                pk, vals = _realize_backend(pack, data, "plan", registry,
+                                            shard_eff, shard_stats,
+                                            pack_quant)
+                qmeta = _quant_meta(pk, vals, data)
+                if qmeta:
+                    union_st = dict(union_st, quant=qmeta)
                 shared = [pk] * n_layers
             elif use_plans:
                 # one lookup per layer: the registry's hit counters (global
@@ -474,19 +556,25 @@ def export_bert_sparse(params, cfg: ModelConfig, tile=(64, 64),
                 continue
             for i in range(n_layers):
                 packs[f"layers/{i}/{group}/{name}"] = shared[i]
-                tgt[i][name] = {"w": vals[i].astype(dtypes[i])}
+                tgt[i][name] = _param_entry_layer(vals, i, dtypes[i])
         else:
             for i, lp in enumerate(layers):
                 pk, vals, meta = _serving_pack(getw(lp), tile, use_plans,
                                                registry, backend_chooser,
-                                               shard, shard_stats)
+                                               shard, shard_stats,
+                                               pack_quant)
                 if stats_out is not None and meta:
-                    stats_out[f"layers/{i}/{group}/{name}"] = {
-                        "union_nnzt": _pack_nnzt(pk), "autotune": meta}
+                    st = {"union_nnzt": _pack_nnzt(pk)}
+                    qmeta = meta.pop("quant", None)
+                    if qmeta:
+                        st["quant"] = qmeta
+                    if meta:
+                        st["autotune"] = meta
+                    stats_out[f"layers/{i}/{group}/{name}"] = st
                 if pk is None:          # measured dense: weight untouched
                     continue
                 packs[f"layers/{i}/{group}/{name}"] = pk
-                tgt[i][name] = {"w": vals.astype(dtypes[i])}
+                tgt[i][name] = _param_entry(vals, dtypes[i])
 
     if fuse_now:
         # only drop the per-projection weights of layers whose fused pack
@@ -519,7 +607,8 @@ def export_params(params, cfg: ModelConfig, tile=(128, 128), *,
                   fuse_qkv: bool = True, cross_layer_union: bool = True,
                   include_ffn: bool = True, use_plans: bool = True,
                   registry: Optional[PatternRegistry] = None,
-                  backend_chooser=None, n_shards: int = 1):
+                  backend_chooser=None, n_shards: int = 1,
+                  pack_quant: str = "none"):
     """Export any model family's param tree to serving form.
 
     Returns ``(sparse_params, packs, stats)``. Dispatch mirrors
@@ -542,14 +631,15 @@ def export_params(params, cfg: ModelConfig, tile=(128, 128), *,
             params, cfg, tile=tile, include_ffn=include_ffn,
             fuse_qkv=fuse_qkv, cross_layer_union=cross_layer_union,
             use_plans=use_plans, registry=registry, stats_out=stats,
-            backend_chooser=backend_chooser, n_shards=n_shards)
+            backend_chooser=backend_chooser, n_shards=n_shards,
+            pack_quant=pack_quant)
         return sparse_params, packs, stats
     if cfg.family in LM_FAMILIES:
         return export_lm_sparse(params, cfg, tile=tile, fuse_qkv=fuse_qkv,
                                 use_plans=use_plans, include_ffn=include_ffn,
                                 registry=registry,
                                 backend_chooser=backend_chooser,
-                                n_shards=n_shards)
+                                n_shards=n_shards, pack_quant=pack_quant)
     if cfg.family == "audio":
         return params, {}, {"__unsupported__": {
             "family": cfg.family,

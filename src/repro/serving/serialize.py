@@ -27,7 +27,8 @@ from repro.core.pattern_reuse import PatternRegistry
 from repro.core.sparsity import SparsityConfig
 from repro.kernels.autotune import BackendChoice, MaskedPack
 from repro.kernels.bsr_matmul import KernelBSR
-from repro.kernels.exec_plan import (PlanChoice, RowPackPlan, ShardedPlan,
+from repro.kernels.exec_plan import (PlanChoice, QuantPlan, RowPackPlan,
+                                     ShardedPlan,
                                      kernel_pattern_fingerprint)
 
 _PLAN_FIELDS = ("col_idx", "slot_mask", "row_of_vrow", "vrow", "slot")
@@ -76,7 +77,8 @@ def pattern_key(pack) -> bytes:
     uniqueness key of ``Servable.stats()``. Choice/masked packs embed the
     backend in their fingerprint, so the same pattern pinned to two
     different backends is (correctly) two keys."""
-    if isinstance(pack, (RowPackPlan, PlanChoice, BackendChoice, MaskedPack)):
+    if isinstance(pack, (RowPackPlan, PlanChoice, QuantPlan, BackendChoice,
+                         MaskedPack)):
         return pack.fingerprint
     return kernel_pattern_fingerprint(pack)
 
@@ -132,7 +134,33 @@ def packs_to_arrays(packs: Dict[str, object]) -> Tuple[dict, dict]:
             idx = len(metas)
             index_of[fp] = idx
             arrays[f"p{idx}_fingerprint"] = np.frombuffer(fp, np.uint8)
-            if isinstance(pk, ShardedPlan):
+            if isinstance(pk, QuantPlan):
+                # quantized wrapper: quant meta + the inner plan's fields
+                # and fingerprint (registry-shared with any unquantized
+                # packs of the same pattern). ``codec: 1`` versions the
+                # quant entry itself; files written before this kind
+                # existed simply never contain it, so they load unchanged.
+                plan = pk.plan
+                m = {"kind": "quant_plan", "codec": 1,
+                     "qdtype": pk.qdtype, "granularity": pk.granularity,
+                     "backend": pk.backend, "shape": list(plan.shape),
+                     "tile": list(plan.tile), "nnzt": plan.nnzt,
+                     "real_nnzt": plan.real_nnzt,
+                     "sharded": isinstance(plan, ShardedPlan)}
+                arrays[f"p{idx}_plan_fingerprint"] = np.frombuffer(
+                    plan.fingerprint, np.uint8)
+                for f in _PLAN_FIELDS:
+                    arrays[f"p{idx}_{f}"] = np.asarray(getattr(plan, f))
+                if isinstance(plan, ShardedPlan):
+                    m["n_shards"] = plan.n_shards
+                    m["shard_axis"] = plan.shard_axis
+                    sfps = list(plan.shard_fingerprints)
+                    arrays[f"p{idx}_shard_fp_lens"] = np.array(
+                        [len(s) for s in sfps], np.int64)
+                    arrays[f"p{idx}_shard_fps"] = np.frombuffer(
+                        b"".join(sfps), np.uint8)
+                metas.append(m)
+            elif isinstance(pk, ShardedPlan):
                 # shard-partitioned plan: plan fields + shard layout meta +
                 # per-shard sub-pattern fingerprints (the registry/autotune
                 # keys survive the round-trip; the mesh itself does NOT --
@@ -204,7 +232,40 @@ def packs_from_arrays(meta: dict, arrays, registry: PatternRegistry = None
     built = []
     for idx, m in enumerate(meta["patterns"]):
         fp = bytes(np.asarray(arrays[f"p{idx}_fingerprint"], np.uint8))
-        if m["kind"] == "sharded_plan":
+        if m["kind"] == "quant_plan":
+            plan_fp = bytes(np.asarray(arrays[f"p{idx}_plan_fingerprint"],
+                                       np.uint8))
+
+            def build_inner(idx=idx, m=m, plan_fp=plan_fp):
+                fields = dict(
+                    col_idx=np.asarray(arrays[f"p{idx}_col_idx"], np.int32),
+                    slot_mask=np.asarray(arrays[f"p{idx}_slot_mask"], bool),
+                    row_of_vrow=np.asarray(arrays[f"p{idx}_row_of_vrow"],
+                                           np.int32),
+                    vrow=np.asarray(arrays[f"p{idx}_vrow"], np.int32),
+                    slot=np.asarray(arrays[f"p{idx}_slot"], np.int32),
+                    shape=tuple(m["shape"]), tile=tuple(m["tile"]),
+                    nnzt=int(m["nnzt"]), real_nnzt=int(m["real_nnzt"]),
+                    fingerprint=plan_fp)
+                if not m.get("sharded"):
+                    return RowPackPlan(**fields)
+                lens = np.asarray(arrays[f"p{idx}_shard_fp_lens"], np.int64)
+                blob = bytes(np.asarray(arrays[f"p{idx}_shard_fps"],
+                                        np.uint8))
+                offs = np.concatenate([[0], np.cumsum(lens)])
+                sfps = tuple(blob[offs[i]: offs[i + 1]]
+                             for i in range(len(lens)))
+                return ShardedPlan(**fields, n_shards=int(m["n_shards"]),
+                                   shard_axis=m["shard_axis"],
+                                   shard_fingerprints=sfps)
+            cache_key = (("sharded_plan_codec", plan_fp) if m.get("sharded")
+                         else ("rowpack_plan", plan_fp))
+            plan = (registry.cached(cache_key, build_inner)
+                    if registry is not None else build_inner())
+            built.append(QuantPlan(plan, qdtype=m["qdtype"],
+                                   granularity=m["granularity"],
+                                   backend=m["backend"]))
+        elif m["kind"] == "sharded_plan":
             def build_sharded(idx=idx, m=m, fp=fp):
                 lens = np.asarray(arrays[f"p{idx}_shard_fp_lens"], np.int64)
                 blob = bytes(np.asarray(arrays[f"p{idx}_shard_fps"],

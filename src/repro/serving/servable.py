@@ -30,7 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.models.sampling import sample_tokens
 from repro.core.pattern_reuse import PatternRegistry
 from repro.core.pruner import _path_name, oneshot_prune, tied_prune
-from repro.kernels.exec_plan import RowPackPlan, ShardedPlan
+from repro.kernels.exec_plan import QuantPlan, RowPackPlan, ShardedPlan
 from repro.kernels.flash_decode import decode_kernel_override
 from repro.models import api as model_api
 from repro.serving.export import export_params
@@ -53,8 +53,11 @@ def _norm_path(name: str) -> str:
 
 def _cast_packed(params, packs, jdtype):
     """Cast only the packed projection values to the spec dtype (embeddings,
-    norms, heads keep the model dtype)."""
-    targets = {key + "/w" for key in packs}
+    norms, heads keep the model dtype). Quantized packs are exempt: their
+    int8/fp8 values and fp32 scales ARE the storage format -- casting either
+    to the model dtype would silently dequantize or lose scale precision."""
+    targets = {key + "/w" for key, pk in packs.items()
+               if not isinstance(pk, QuantPlan)}
 
     def one(path, leaf):
         name = _norm_path(_path_name(path))
@@ -85,11 +88,13 @@ def make_serving_mesh(spec) -> "jax.sharding.Mesh":
 
 def attach_mesh(packs, mesh):
     """Attach ``mesh`` to every ShardedPlan pack (static metadata consumed
-    by the models/common.linear sharding hook). Identical patterns keep
-    sharing one underlying layout -- with_mesh is a shallow replace."""
+    by the models/common.linear sharding hook), including ShardedPlans
+    wrapped in a QuantPlan. Identical patterns keep sharing one underlying
+    layout -- with_mesh is a shallow replace."""
     out, seen = {}, {}
     for key, pk in packs.items():
-        if isinstance(pk, ShardedPlan) and pk.mesh is not mesh:
+        inner = pk.plan if isinstance(pk, QuantPlan) else pk
+        if isinstance(inner, ShardedPlan) and inner.mesh is not mesh:
             if id(pk) not in seen:
                 seen[id(pk)] = pk.with_mesh(mesh)
             pk = seen[id(pk)]
@@ -109,14 +114,22 @@ def serving_param_shardings(params, packs, mesh):
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.sharding import spec_for_param
-    packed = {key + "/w": pk for key, pk in packs.items()}
+    packed = {}
+    for key, pk in packs.items():
+        packed[key + "/w"] = pk
+        if isinstance(pk, QuantPlan):
+            packed[key + "/scale"] = pk
 
     def one(path, leaf):
         name = _norm_path(_path_name(path))
         pk = packed.get(name)
-        if isinstance(pk, ShardedPlan):
+        inner = pk.plan if isinstance(pk, QuantPlan) else pk
+        if isinstance(inner, ShardedPlan):
             spec = [None] * leaf.ndim
-            spec[leaf.ndim - 4] = "model"      # the vrow axis
+            # qvalues (..., V, P, bn, bk) and scales (..., V, P|1) both
+            # shard their vrow axis over "model"
+            vrow_axis = leaf.ndim - (2 if name.endswith("/scale") else 4)
+            spec[vrow_axis] = "model"
             return NamedSharding(mesh, P(*spec))
         if pk is not None:                      # packed but not shardable
             return NamedSharding(mesh, P())
@@ -515,7 +528,9 @@ class Servable:
     # -- instrumentation --------------------------------------------------
     def stats(self) -> Dict[str, Any]:
         """The co-design scorecard: how sparse, how shared, how padded."""
-        plans = [p for p in self.packs.values() if isinstance(p, RowPackPlan)]
+        plans = [p.plan if isinstance(p, QuantPlan) else p
+                 for p in self.packs.values()
+                 if isinstance(p, (RowPackPlan, QuantPlan))]
         unique = {pattern_key(p) for p in self.packs.values()}
         union = [s["union_overhead"] for s in self.export_stats.values()
                  if isinstance(s, dict) and "union_overhead" in s]
@@ -550,6 +565,9 @@ class Servable:
                                     if not a.get("cache_hit")),
                 "mode": next(iter(auto.values())).get("mode"),
             }
+        qs = self.quant_stats()
+        if qs:
+            out["quant"] = qs
         if self.mesh is not None or self.spec.mesh_shape is not None:
             out["sharding"] = self._sharding_stats()
         if self.stats_at_save is not None:
@@ -560,8 +578,14 @@ class Servable:
         """(total, per-device) bytes of the packed projection values in the
         params tree. Per-device accounting follows each leaf's placement
         (``sharding.shard_shape``); unplaced trees count fully on one
-        device. Shared by ``stats()`` and benchmarks/serving_bench.py."""
-        targets = {key + "/w" for key in self.packs}
+        device. Quantized packs count both their qvalues AND their scale
+        arrays -- the scales are real pack traffic. Shared by ``stats()``
+        and benchmarks/serving_bench.py."""
+        targets = set()
+        for key, pk in self.packs.items():
+            targets.add(key + "/w")
+            if isinstance(pk, QuantPlan):
+                targets.add(key + "/scale")
         total = per_dev = 0
 
         def visit(path, leaf):
@@ -577,13 +601,71 @@ class Servable:
         jax.tree_util.tree_map_with_path(visit, self.params)
         return total, per_dev
 
+    def quant_stats(self) -> Optional[Dict[str, Any]]:
+        """Quantized-pack accounting: bytes actually stored (qvalues +
+        scales, total and per-device) vs the fp32-equivalent footprint of
+        the same packs, plus the worst export-time round-trip error. None
+        when nothing is quantized (the common case; engine ``stats_dict()``
+        forwards this section only when it exists)."""
+        qpacks = {k: p for k, p in self.packs.items()
+                  if isinstance(p, QuantPlan)}
+        if not qpacks:
+            return None
+        wkeys = {k + "/w" for k in qpacks}
+        skeys = {k + "/scale" for k in qpacks}
+        acc = {"w": 0, "w_dev": 0, "scale": 0, "scale_dev": 0,
+               "fp32": 0, "fp32_dev": 0}
+
+        def visit(path, leaf):
+            name = _norm_path(_path_name(path))
+            if name not in wkeys and name not in skeys:
+                return leaf
+            n = int(np.prod(leaf.shape))
+            shard_shape = (leaf.sharding.shard_shape(leaf.shape)
+                           if hasattr(leaf, "sharding") else leaf.shape)
+            nd = int(np.prod(shard_shape))
+            if name in wkeys:
+                acc["w"] += n * leaf.dtype.itemsize
+                acc["w_dev"] += nd * leaf.dtype.itemsize
+                acc["fp32"] += n * 4          # the same values stored fp32
+                acc["fp32_dev"] += nd * 4
+            else:
+                acc["scale"] += n * leaf.dtype.itemsize
+                acc["scale_dev"] += nd * leaf.dtype.itemsize
+            return leaf
+        jax.tree_util.tree_map_with_path(visit, self.params)
+        qbytes = acc["w"] + acc["scale"]
+        qdev = acc["w_dev"] + acc["scale_dev"]
+        errs = [s["quant"] for s in self.export_stats.values()
+                if isinstance(s, dict) and "quant" in s]
+        out = {
+            "pack_quant": self.spec.pack_quant,
+            "quantized_packs": len(qpacks),
+            "total_packs": len(self.packs),
+            "qdtype": next(iter(qpacks.values())).qdtype,
+            "granularities": sorted({p.granularity
+                                     for p in qpacks.values()}),
+            "quant_bytes_total": qbytes,
+            "quant_bytes_per_device": qdev,
+            "scale_bytes_total": acc["scale"],
+            "fp32_equiv_bytes_total": acc["fp32"],
+            "fp32_equiv_bytes_per_device": acc["fp32_dev"],
+            "compression_ratio": (acc["fp32"] / qbytes if qbytes else None),
+        }
+        if errs:
+            out["max_abs_err"] = max(e["max_abs_err"] for e in errs)
+            out["max_rel_err"] = max(e["rel_err"] for e in errs)
+        return out
+
     def _sharding_stats(self) -> Dict[str, Any]:
         """Per-shard accounting of the mesh path: how the pack bytes split
         across devices, which packs actually sharded, and the per-shard
         registry hit/miss counts collected at export."""
         total, per_dev = self.pack_bytes()
-        sharded = {k: p for k, p in self.packs.items()
-                   if isinstance(p, ShardedPlan)}
+        sharded = {k: (p.plan if isinstance(p, QuantPlan) else p)
+                   for k, p in self.packs.items()
+                   if isinstance(p.plan if isinstance(p, QuantPlan) else p,
+                                 ShardedPlan)}
         shard_meta = self.export_stats.get("__sharding__") or {}
         out = {
             "mesh_shape": (list(self.spec.mesh_shape)
@@ -666,18 +748,25 @@ def prepare_servable(params, cfg: ModelConfig, spec: ServingSpec = None, *,
 
         def chooser(pack, shard=None):
             # sharded serving has exactly two layouts with a mesh story
-            # (ShardedPlan and dense-via-GSPMD); the winner is still keyed
-            # per (pattern, shard, device count) on disk
-            cands = ("dense", "plan") if shard and shard[0] > 1 else None
+            # (ShardedPlan and dense-via-GSPMD, plus the quantized plan
+            # when pack_quant asks for it); the winner is still keyed per
+            # (pattern, shard, device count, quant, value dtype) on disk
+            if shard and shard[0] > 1:
+                cands = ("dense", "plan")
+                if spec.pack_quant != "none":
+                    cands = cands + ("plan_q8",)
+            else:
+                cands = None    # choose_backend adds the q8 arms per quant
             return choose_backend(pack, m=spec.autotune_m,
-                                  candidates=cands, shard=shard)
+                                  candidates=cands, shard=shard,
+                                  quant=spec.pack_quant)
 
     sparse_params, packs, stats = export_params(
         pruned, cfg, tile=spec.tile, fuse_qkv=spec.fuse_qkv,
         cross_layer_union=spec.cross_layer_union,
         include_ffn=spec.include_ffn, use_plans=spec.use_plans,
         registry=registry, backend_chooser=chooser,
-        n_shards=spec.model_shards)
+        n_shards=spec.model_shards, pack_quant=spec.pack_quant)
     if spec.dtype is not None and packs:
         jdtype = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
         sparse_params = _cast_packed(sparse_params, packs, jdtype)

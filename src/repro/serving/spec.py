@@ -48,6 +48,18 @@ KV_LAYOUTS = ("dense", "paged")
 #: (ShardedPlan), dense serves through GSPMD param sharding, and 'auto'
 #: chooses between exactly those two; 'bsr' has no sharded layout.
 SHARDED_BACKENDS = ("plan", "dense", "auto")
+#: pack-value quantization (docs/API.md §Quantized sparse packs):
+#:   'none' -- fp32/bf16 values, the parity oracle;
+#:   'int8' -- symmetric int8 with one fp32 scale per BSR block (per
+#:             row group for skinny tiles), dequant fused into the plan
+#:             matmul accumulation;
+#:   'fp8'  -- float8_e4m3fn values, same scale layout (requires a jax
+#:             with float8 dtypes; raises a clear error otherwise).
+#: Only plan-layout packs quantize ('plan' / 'plan_pallas' / the plan
+#: verdicts of 'auto'); bsr/dense/masked packs serve full precision.
+PACK_QUANTS = ("none", "int8", "fp8")
+#: backends whose packs carry quantized values when pack_quant != 'none'
+QUANTIZABLE_BACKENDS = ("plan", "plan_pallas", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +192,17 @@ class ServingSpec:
         place -- no dense-view reassembly), ``'auto'`` asks
         ``kernels.autotune.choose_decode_kernel`` per shape+device. The
         ``REPRO_DECODE_KERNEL`` env var overrides any spec value.
+      pack_quant: pack-value quantization (docs/API.md §Quantized sparse
+        packs). ``'int8'`` stores plan-pack block values as symmetric int8
+        with one fp32 scale per BSR block -- per row group when the tile
+        is too skinny for a stable block scale -- and serves them through
+        the dequant-fused plan matmul (the fp32 values never land in the
+        params tree); ``'fp8'`` is the same layout with float8_e4m3fn
+        values. Only plan-layout packs quantize: ``backend='plan'`` /
+        ``'plan_pallas'`` quantize every pack, ``'auto'`` adds the
+        ``plan_q8`` / ``plan_pallas_q8`` candidates so quantization only
+        lands where the tuner scores it a win; bsr/dense/masked packs are
+        unaffected. ``'none'`` (default) keeps full-precision packs.
       sched: optional :class:`SchedSpec` arming SLO-aware scheduling on
         engines built over this servable (chunked prefill, per-window token
         budget, deadline fast-fail, overload shedding -- docs/API.md §SLO
@@ -203,6 +226,7 @@ class ServingSpec:
     kv_layout: str = "dense"
     kv_page_size: int = 16
     decode_kernel: str = "auto"
+    pack_quant: str = "none"
     sched: Optional[SchedSpec] = None
 
     def __post_init__(self):
@@ -225,6 +249,16 @@ class ServingSpec:
                 f"decode_kernel={self.decode_kernel!r} not in {DECODE_KERNELS}")
         if self.dtype not in (None, "float32", "bfloat16"):
             raise ValueError(f"unsupported dtype {self.dtype!r}")
+        if self.pack_quant not in PACK_QUANTS:
+            raise ValueError(
+                f"pack_quant={self.pack_quant!r} not in {PACK_QUANTS}")
+        if (self.pack_quant != "none"
+                and self.backend not in QUANTIZABLE_BACKENDS):
+            raise ValueError(
+                f"pack_quant={self.pack_quant!r} needs a plan-layout "
+                f"backend (one of {QUANTIZABLE_BACKENDS}); "
+                f"backend={self.backend!r} packs have no per-block scale "
+                f"granularity to quantize at")
         if self.sched is not None and not isinstance(self.sched, SchedSpec):
             raise ValueError(
                 f"sched must be a SchedSpec or None, got {self.sched!r}")

@@ -1,0 +1,462 @@
+"""Quantized sparse packs (spec.pack_quant, kernels/exec_plan.py quant
+section, bsr_matmul.plan_dds_q): int8/fp8 block values + per-block (or
+per-row-group) fp32 absmax scales, dequant fused into the plan matmul.
+
+Covers the quantize/dequantize round-trip bounds per block shape (the
+32x1 skinny-tile row-scale fallback and a 16x64 spill edge included),
+plan vs plan_q8 forward parity, the fused-QKV export + the Pallas
+kernel's bias/act epilogue, serialize round-trips (old-codec files load
+unchanged), autotune cache-key separation by pack_quant and value dtype,
+TP-sharded quantized packs (8-device leg), and greedy-decode token
+agreement on the gemma3 smoke config.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerKind, ModelConfig
+from repro.configs.registry import get_config
+from repro.core.sparsity import prune_to_sparsity
+from repro.kernels import exec_plan as xp
+from repro.kernels.autotune import AutotuneCache, choose_backend
+from repro.kernels.bsr_matmul import pack_bsr
+from repro.kernels.exec_plan import (QuantPlan, ShardedPlan,
+                                     dequantize_plan_values, fp8_dtype,
+                                     quant_granularity, quantize_for_plan,
+                                     quantize_plan_values)
+from repro.models import init_model
+from repro.serving import ServingSpec, load_servable, prepare_servable
+from repro.serving.serialize import packs_from_arrays, packs_to_arrays
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+ATTN_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo")
+
+
+def _pack(n=64, k=64, tile=(16, 16), sparsity=0.5, seed=0):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(n, k).astype(np.float32))
+    pruned, _ = prune_to_sparsity(w, tile, sparsity)
+    return pack_bsr(np.asarray(pruned), tile)
+
+
+def _quant_arm(pack, qdtype="int8"):
+    plan = xp.plan_for_pack(pack)
+    qp, params = quantize_for_plan(plan, pack.data, qdtype)
+    return plan, qp, params
+
+
+# --------------------------------------------------------------------------
+# quantize/dequantize round-trip bounds
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tile,n,k", [
+    ((16, 16), 64, 64),      # square tile below the block threshold
+    ((32, 1), 64, 16),       # skinny tile -> row-group scales
+    ((16, 64), 64, 128),     # wide tile >= 128 elems -> block scales
+    ((128, 128), 256, 256),  # the serving default
+])
+def test_round_trip_error_bound(tile, n, k):
+    """|w - dequant(quant(w))| <= scale/2 per element (int8 symmetric
+    midpoint), under both scale granularities."""
+    pack = _pack(n=n, k=k, tile=tile, sparsity=0.5)
+    plan = xp.plan_for_pack(pack)
+    data_rp = xp.pack_plan_data(plan, pack.data)
+    gran = quant_granularity(tile)
+    assert gran == ("block" if tile[0] * tile[1] >= 128 else "row")
+    q, s = quantize_plan_values(data_rp, "int8", gran)
+    assert q.dtype == jnp.int8
+    assert s.shape == (data_rp.shape[0],
+                       data_rp.shape[1] if gran == "block" else 1)
+    rt = dequantize_plan_values(q, s)
+    bound = np.broadcast_to(np.asarray(s)[..., None, None] / 2 + 1e-7,
+                            rt.shape)
+    assert np.all(np.abs(np.asarray(rt) - np.asarray(data_rp)) <= bound)
+
+
+def test_row_granularity_spill_edge():
+    """A (16, 64) pattern dense enough to spill still round-trips: the
+    virtual-row split happens before quantization, so scales follow
+    vrows, not brows."""
+    pack = _pack(n=32, k=256, tile=(16, 64), sparsity=0.1, seed=3)
+    plan = xp.plan_for_pack(pack)
+    data_rp = xp.pack_plan_data(plan, pack.data)
+    q, s = quantize_plan_values(data_rp, "int8", quant_granularity((16, 64)))
+    assert s.shape[0] == plan.n_vrows
+    rt = dequantize_plan_values(q, s)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(data_rp),
+                               atol=float(np.asarray(s).max()) / 2 + 1e-7)
+
+
+def test_zero_blocks_quantize_exact():
+    """All-zero groups get scale 1.0 -> dequant is exactly zero (no NaNs
+    from 0/0, no drift on padding slots)."""
+    data_rp = jnp.zeros((3, 2, 16, 16))
+    q, s = quantize_plan_values(data_rp, "int8", "block")
+    assert np.all(np.asarray(s) == 1.0)
+    assert np.all(np.asarray(dequantize_plan_values(q, s)) == 0.0)
+
+
+def test_fp8_gated_on_jax_support():
+    data_rp = jnp.ones((2, 2, 16, 16))
+    if fp8_dtype() is None:
+        with pytest.raises(NotImplementedError):
+            quantize_plan_values(data_rp, "fp8", "block")
+    else:
+        q, s = quantize_plan_values(data_rp, "fp8", "block")
+        assert q.dtype == fp8_dtype()
+        np.testing.assert_allclose(np.asarray(dequantize_plan_values(q, s)),
+                                   np.asarray(data_rp), rtol=0.07)
+
+
+# --------------------------------------------------------------------------
+# forward parity: plan vs plan_q8 (XLA) and the Pallas kernel
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tile,sparsity", [((16, 16), 0.5),
+                                           ((16, 64), 0.1),
+                                           ((32, 1), 0.5)])
+def test_plan_q_linear_matches_dequant_reference(tile, sparsity):
+    """The fused path equals gather-matmul over explicitly dequantized
+    weights to float tolerance -- fusion changes where the scale is
+    applied, never the math."""
+    pack = _pack(n=64, k=128, tile=tile, sparsity=sparsity, seed=1)
+    plan, qp, params = _quant_arm(pack)
+    x = jnp.asarray(np.random.RandomState(2).randn(8, 128).astype(np.float32))
+    got = xp.plan_q_linear(x, params["w"], params["scale"], plan)
+    ref = xp.plan_linear(x, dequantize_plan_values(params["w"],
+                                                   params["scale"]), plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_plan_q_pallas_matches_xla():
+    pack = _pack(n=64, k=128, tile=(16, 16), sparsity=0.4, seed=4)
+    plan, qp, params = _quant_arm(pack)
+    x = jnp.asarray(np.random.RandomState(5).randn(16, 128)
+                    .astype(np.float32))
+    got = xp.plan_q_linear_pallas(x, params["w"], params["scale"], plan)
+    want = xp.plan_q_linear(x, params["w"], params["scale"], plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_plan_q_pallas_fused_epilogue():
+    """bias + relu ride the Pallas kernel's row-change epilogue exactly as
+    in the fp32 plan kernel."""
+    pack = _pack(n=64, k=64, tile=(16, 16), sparsity=0.4, seed=6)
+    plan, qp, params = _quant_arm(pack)
+    x = jnp.asarray(np.random.RandomState(7).randn(8, 64).astype(np.float32))
+    bias = jnp.asarray(np.random.RandomState(8).randn(64).astype(np.float32))
+    got = xp.plan_q_linear_pallas(x, params["w"], params["scale"], plan,
+                                  bias=bias, act="relu")
+    want = jax.nn.relu(xp.plan_q_linear(x, params["w"], params["scale"],
+                                        plan) + bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_plan_q_backward_dx():
+    """grad flows through x (engine probe path); quantized weights and
+    scales are constants."""
+    pack = _pack(n=32, k=64, tile=(16, 16), sparsity=0.5, seed=9)
+    plan, qp, params = _quant_arm(pack)
+    x = jnp.asarray(np.random.RandomState(10).randn(4, 64)
+                    .astype(np.float32))
+
+    def f(xx):
+        return jnp.sum(xp.plan_q_linear(xx, params["w"], params["scale"],
+                                        plan) ** 2)
+
+    def f_ref(xx):
+        return jnp.sum(xp.plan_linear(
+            xx, dequantize_plan_values(params["w"], params["scale"]),
+            plan) ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f)(x)),
+                               np.asarray(jax.grad(f_ref)(x)),
+                               atol=1e-3, rtol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# spec-level export: forward parity, fused QKV, stats
+# --------------------------------------------------------------------------
+
+def _servable_pair(cfg, params, **spec_kw):
+    base = dict(tile=(16, 16), sparsity=0.5, prune="oneshot",
+                targets=ATTN_TARGETS, **spec_kw)
+    return (prepare_servable(params, cfg, ServingSpec(backend="plan",
+                                                      **base)),
+            prepare_servable(params, cfg, ServingSpec(
+                backend="plan", pack_quant="int8", **base)))
+
+
+def test_export_quant_forward_parity_and_stats():
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    sv32, sv8 = _servable_pair(cfg, params)
+    assert any(isinstance(p, QuantPlan) for p in sv8.packs.values())
+    toks = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (2, 8)))
+    y32 = np.asarray(sv32.forward(toks))
+    y8 = np.asarray(sv8.forward(toks))
+    assert np.argmax(y32[:, -1], -1).tolist() == \
+        np.argmax(y8[:, -1], -1).tolist()
+    qs = sv8.quant_stats()
+    assert qs["pack_quant"] == "int8" and qs["quantized_packs"] > 0
+    # the acceptance bar: int8 + scales cut pack bytes >= 3x vs fp32
+    assert qs["compression_ratio"] >= 3.0
+    assert qs["max_abs_err"] >= 0 and qs["max_rel_err"] < 0.05
+    assert "quant" in sv8.stats()
+    assert sv32.quant_stats() is None and "quant" not in sv32.stats()
+
+
+def test_export_quant_fused_qkv():
+    """fuse_qkv concatenates wq/wk/wv into ONE pack; quantization applies
+    to the fused plan and the slicing epilogue is untouched."""
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    sv32, sv8 = _servable_pair(cfg, params, fuse_qkv=True)
+    fused_q = [k for k, p in sv8.packs.items()
+               if isinstance(p, QuantPlan) and "wqkv" in k]
+    assert fused_q, f"no fused quantized pack in {list(sv8.packs)}"
+    toks = jnp.asarray(np.random.RandomState(1).randint(
+        0, cfg.vocab_size, (2, 6)))
+    np.testing.assert_allclose(np.asarray(sv32.forward(toks)),
+                               np.asarray(sv8.forward(toks)),
+                               atol=0.1, rtol=0.1)
+
+
+def test_spec_rejects_quant_on_unquantizable_backend():
+    with pytest.raises(ValueError):
+        ServingSpec(backend="bsr", pack_quant="int8")
+    with pytest.raises(ValueError):
+        ServingSpec(pack_quant="int4")
+
+
+def test_engine_greedy_agreement_gemma3():
+    """The acceptance gate: >= 99% greedy token agreement vs fp32 packs
+    over a full engine run on the gemma3 smoke config."""
+    cfg = get_config("gemma3_4b", smoke=True)
+    params = init_model(jax.random.PRNGKey(2), cfg)
+    sv32, sv8 = _servable_pair(cfg, params)
+
+    def greedy(sv):
+        eng = sv.engine(max_slots=4, cache_len=64, sync_every=4,
+                        temperature=0.0)
+        prng = np.random.RandomState(7)
+        reqs = [eng.submit(list(prng.randint(1, cfg.vocab_size,
+                                             (3 + 2 * i,))),
+                           max_new_tokens=8) for i in range(8)]
+        eng.run()
+        out = [list(r.tokens) for r in reqs]
+        eng.close()
+        return out
+
+    a, b = greedy(sv32), greedy(sv8)
+    total = sum(len(s) for s in a)
+    matched = sum(x == y for s1, s2 in zip(a, b) for x, y in zip(s1, s2))
+    assert matched / total >= 0.99
+    assert "quant" in sv8.engine(max_slots=1, cache_len=32).stats_dict()
+
+
+# --------------------------------------------------------------------------
+# serialization
+# --------------------------------------------------------------------------
+
+def test_quant_pack_array_round_trip():
+    pack = _pack(n=64, k=64, tile=(16, 16), sparsity=0.5, seed=11)
+    plan, qp, params = _quant_arm(pack)
+    packs = {"blocks/g0/attn/wq": qp}
+    arrays, meta = packs_to_arrays(packs)
+    assert any(m["kind"] == "quant_plan" for m in meta["patterns"])
+    back = packs_from_arrays(meta, arrays)
+    qp2 = back["blocks/g0/attn/wq"]
+    assert isinstance(qp2, QuantPlan)
+    assert qp2.fingerprint == qp.fingerprint
+    assert qp2.qdtype == "int8" and qp2.granularity == qp.granularity
+
+
+def test_quant_pattern_dedup():
+    """Two packs over the same pattern share ONE set of plan arrays."""
+    pack = _pack(n=64, k=64, tile=(16, 16), sparsity=0.5, seed=12)
+    plan, qp, _ = _quant_arm(pack)
+    arrays, meta = packs_to_arrays({"a": qp, "b": qp})
+    fp_arrays = [k for k in arrays if k.endswith("plan_fingerprint")]
+    assert len(fp_arrays) == 1
+    assert len(meta["patterns"]) == 1 and len(meta["keys"]) == 2
+
+
+def test_save_load_quant_servable(tmp_path):
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(3), cfg)
+    _, sv8 = _servable_pair(cfg, params)
+    toks = jnp.asarray(np.random.RandomState(3).randint(
+        0, cfg.vocab_size, (1, 6)))
+    want = np.asarray(sv8.forward(toks))
+    sv8.save(str(tmp_path / "ckpt"))
+    sv2 = load_servable(str(tmp_path / "ckpt"))
+    assert any(isinstance(p, QuantPlan) for p in sv2.packs.values())
+    np.testing.assert_allclose(np.asarray(sv2.forward(toks)), want,
+                               atol=1e-6)
+    assert sv2.quant_stats()["pack_quant"] == "int8"
+
+
+def test_old_codec_files_load_unchanged(tmp_path):
+    """A servable saved WITHOUT quantization writes no quant_plan records
+    and loads byte-identically -- the codec addition is purely additive
+    (a pre-quant file can never contain the new kind, so the old-file
+    path IS the fp32 path)."""
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(4), cfg)
+    sv32, _ = _servable_pair(cfg, params)
+    arrays, meta = packs_to_arrays(sv32.packs)
+    kinds = {m["kind"] for m in meta["patterns"]}
+    assert "quant_plan" not in kinds
+    # the exact (arrays, meta) an old-codec writer produced round-trips
+    # through the new reader with fingerprints intact
+    back = packs_from_arrays(json.loads(json.dumps(meta)), arrays)
+    assert {k: p.fingerprint for k, p in back.items()} == \
+        {k: p.fingerprint for k, p in sv32.packs.items()}
+    sv32.save(str(tmp_path / "ckpt32"))
+    toks = jnp.asarray(np.random.RandomState(4).randint(
+        0, cfg.vocab_size, (1, 6)))
+    want = np.asarray(sv32.forward(toks))
+    sv2 = load_servable(str(tmp_path / "ckpt32"))
+    np.testing.assert_allclose(np.asarray(sv2.forward(toks)), want,
+                               atol=1e-6)
+    assert sv2.quant_stats() is None
+
+
+# --------------------------------------------------------------------------
+# autotune: quant candidates + cache-key separation
+# --------------------------------------------------------------------------
+
+def test_choose_backend_key_separates_quant(tmp_path):
+    """quant='none' and quant='int8' are DIFFERENT cache keys over the
+    same pattern: the int8 entry carries the plan_q8 candidates, the fp32
+    entry never sees them (the key bugfix this PR)."""
+    pack = _pack(n=128, k=128, tile=(16, 16), sparsity=0.8, seed=13)
+    cache = AutotuneCache(str(tmp_path / "at.json"))
+    c0 = choose_backend(pack, m=64, cache=cache, stub=True)
+    c1 = choose_backend(pack, m=64, cache=cache, stub=True, quant="int8")
+    assert c0.key != c1.key
+    assert ":qnone:" in c0.key and ":qint8:" in c1.key
+    assert "plan_q8" in c1.costs and "plan_q8" not in c0.costs
+    # both answer from cache on re-ask, each under its own key
+    assert choose_backend(pack, m=64, cache=cache, stub=True).cache_hit
+    assert choose_backend(pack, m=64, cache=cache, stub=True,
+                          quant="int8").cache_hit
+
+
+def test_choose_backend_key_separates_value_dtype(tmp_path):
+    """The value dtype is part of the key: a bf16 pack never reuses the
+    fp32 pack's winner (their traffic differs 2x)."""
+    pack32 = _pack(n=64, k=64, tile=(16, 16), sparsity=0.5, seed=14)
+    pack16 = dataclasses.replace(
+        pack32, data=jnp.asarray(pack32.data, jnp.bfloat16))
+    cache = AutotuneCache(str(tmp_path / "at.json"))
+    k32 = choose_backend(pack32, m=64, cache=cache, stub=True).key
+    k16 = choose_backend(pack16, m=64, cache=cache, stub=True).key
+    assert k32 != k16 and ":wfloat32:" in k32 and ":wbfloat16:" in k16
+
+
+def test_stub_prefers_quant_at_high_sparsity():
+    """Same geometry, quantized arm prices 4x less value traffic -> the
+    stub proxy picks plan_q8 over plan whenever traffic matters."""
+    from repro.kernels.autotune import stub_costs
+    pack = _pack(n=256, k=256, tile=(16, 16), sparsity=0.8, seed=15)
+    costs = stub_costs(pack, 64, ("plan", "plan_q8"))
+    assert costs["plan_q8"] < costs["plan"]
+
+
+def test_auto_backend_with_quant_serves(tmp_path, monkeypatch):
+    """backend='auto' + pack_quant='int8' end to end: the chooser sees
+    the quant candidates, and whatever wins serves with parity vs the
+    pinned plan_q8 export."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setenv("REPRO_AUTOTUNE_STUB", "1")
+    cfg = get_config("deepseek_7b", smoke=True)
+    params = init_model(jax.random.PRNGKey(5), cfg)
+    base = dict(tile=(16, 16), sparsity=0.5, prune="oneshot",
+                targets=ATTN_TARGETS)
+    sv_auto = prepare_servable(params, cfg, ServingSpec(
+        backend="auto", pack_quant="int8", autotune_m=64, **base))
+    sv_pin = prepare_servable(params, cfg, ServingSpec(
+        backend="plan", pack_quant="int8", **base))
+    toks = jnp.asarray(np.random.RandomState(5).randint(
+        0, cfg.vocab_size, (2, 8)))
+    np.testing.assert_allclose(np.asarray(sv_auto.forward(toks)),
+                               np.asarray(sv_pin.forward(toks)),
+                               atol=0.05, rtol=0.05)
+    auto = sv_auto.stats()["autotune"]
+    assert auto["backends"]
+    assert all(b in ("dense", "gather", "rowpack", "plan", "pallas",
+                     "masked", "plan_pallas", "plan_q8", "plan_pallas_q8")
+               for b in auto["backends"].values())
+
+
+# --------------------------------------------------------------------------
+# TP: sharded quantized packs (8-device leg)
+# --------------------------------------------------------------------------
+
+def _tp_cfg():
+    return ModelConfig(
+        arch="tp-quant-smoke", family="dense", n_layers=2, d_model=256,
+        n_heads=8, n_kv_heads=8, head_dim=32, d_ff=1024, vocab_size=512,
+        pattern=(LayerKind("attn", "dense"),), dtype="float32")
+
+
+ALL_TARGETS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo",
+               "ffn/wi", "ffn/wg", "ffn/wo")
+
+
+@needs8
+def test_sharded_quant_packs_parity_and_bytes():
+    cfg = _tp_cfg()
+    params = init_model(jax.random.PRNGKey(6), cfg)
+    base = dict(tile=(32, 32), sparsity=0.5, prune="tied",
+                targets=ALL_TARGETS, mesh_shape=(1, 8), partition="tp")
+    sv32 = prepare_servable(params, cfg, ServingSpec(backend="plan",
+                                                     **base))
+    sv8 = prepare_servable(params, cfg, ServingSpec(
+        backend="plan", pack_quant="int8", **base))
+    sharded_q = [p for p in sv8.packs.values()
+                 if isinstance(p, QuantPlan)
+                 and isinstance(p.plan, ShardedPlan)]
+    assert sharded_q, "no sharded quantized packs"
+    toks = jnp.asarray(np.random.RandomState(6).randint(
+        0, cfg.vocab_size, (2, 8)))
+    y32 = np.asarray(sv32.forward(toks))
+    y8 = np.asarray(sv8.forward(toks))
+    assert np.argmax(y32[:, -1], -1).tolist() == \
+        np.argmax(y8[:, -1], -1).tolist()
+    qs = sv8.quant_stats()
+    assert qs["compression_ratio"] >= 3.0
+    assert qs["quant_bytes_per_device"] < qs["quant_bytes_total"]
+
+
+@needs8
+def test_sharded_quant_save_load(tmp_path):
+    cfg = _tp_cfg()
+    params = init_model(jax.random.PRNGKey(7), cfg)
+    sv = prepare_servable(params, cfg, ServingSpec(
+        tile=(32, 32), sparsity=0.5, prune="tied", targets=ALL_TARGETS,
+        mesh_shape=(1, 8), partition="tp", backend="plan",
+        pack_quant="int8"))
+    toks = jnp.asarray(np.random.RandomState(7).randint(
+        0, cfg.vocab_size, (1, 6)))
+    want = np.asarray(sv.forward(toks))
+    sv.save(str(tmp_path / "ckpt"))
+    sv2 = load_servable(str(tmp_path / "ckpt"))
+    assert any(isinstance(p, QuantPlan)
+               and isinstance(p.plan, ShardedPlan)
+               for p in sv2.packs.values())
+    np.testing.assert_allclose(np.asarray(sv2.forward(toks)), want,
+                               atol=1e-5)
